@@ -1,0 +1,37 @@
+"""Fig. 10 analogue: scalability vs number of variables n, sample size m,
+and density d (paper §5.6 synthetic generator)."""
+from __future__ import annotations
+
+from .common import md_table, save, timed
+
+
+def run(full: bool = False, quick: bool = False):
+    from repro.core.pc import pc
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    ns = [100, 200, 400] + ([800] if full else [])
+    ms = [500, 1000, 2000]
+    ds = [0.05, 0.1, 0.2] + ([0.3] if not quick else [])
+    rows, payload = [], {"n": {}, "m": {}, "d": {}}
+
+    for n in (ns[:2] if quick else ns):
+        x, _ = sample_gaussian_dag(n=n, m=1000, density=0.1, seed=1)
+        _, te = timed(lambda: pc(x, engine="E", orient=False), repeat=2)
+        _, ts = timed(lambda: pc(x, engine="S", orient=False), repeat=2)
+        rows.append(["n", n, f"{te:.2f}", f"{ts:.2f}"])
+        payload["n"][n] = (te, ts)
+    for m in (ms[:2] if quick else ms):
+        x, _ = sample_gaussian_dag(n=200, m=m, density=0.1, seed=2)
+        _, te = timed(lambda: pc(x, engine="E", orient=False), repeat=2)
+        _, ts = timed(lambda: pc(x, engine="S", orient=False), repeat=2)
+        rows.append(["m", m, f"{te:.2f}", f"{ts:.2f}"])
+        payload["m"][m] = (te, ts)
+    for d in (ds[:2] if quick else ds):
+        x, _ = sample_gaussian_dag(n=200, m=1000, density=d, seed=3)
+        _, te = timed(lambda: pc(x, engine="E", orient=False), repeat=2)
+        _, ts = timed(lambda: pc(x, engine="S", orient=False), repeat=2)
+        rows.append(["density", d, f"{te:.2f}", f"{ts:.2f}"])
+        payload["d"][d] = (te, ts)
+    save("fig10", payload)
+    return "### Fig. 10 — scalability (n / m / density)\n\n" + md_table(
+        ["axis", "value", "cuPC-E s", "cuPC-S s"], rows)

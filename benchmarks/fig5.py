@@ -1,0 +1,38 @@
+"""Fig. 5 analogue: cuPC-E/S vs the two baseline GPU parallelizations.
+
+Baseline 1 (= ported Parallel-PC): all edges parallel, the CI tests of one
+edge strictly sequential → emulated by cuPC-E with a cell budget that
+forces one rank per chunk (maximal early-termination, minimal parallel
+width).
+Baseline 2: every CI test of every edge launched at once → cuPC-E with an
+unbounded budget (no early-termination between chunks, maximal width).
+cuPC-E's default budget sits between the two ("judicious balance"),
+cuPC-S adds the shared-M2 reuse.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import dataset, md_table, save, timed
+
+
+def run(full: bool = False, quick: bool = False):
+    from repro.core.pc import pc
+
+    names = ["MCC-s", "DREAM5-s"] if quick else ["NCI-60-s", "MCC-s", "S.aureus-s", "DREAM5-s"]
+    rows, payload = [], {}
+    for name in names:
+        x, _, meta = dataset(name, full)
+        _, t_b1 = timed(lambda: pc(x, engine="E", orient=False, cell_budget=2**12))
+        _, t_b2 = timed(lambda: pc(x, engine="E", orient=False, cell_budget=2**34))
+        _, t_e = timed(lambda: pc(x, engine="E", orient=False))
+        _, t_s = timed(lambda: pc(x, engine="S", orient=False))
+        rows.append([name, f"{t_b1:.2f}", f"{t_b2:.2f}", f"{t_e:.2f}", f"{t_s:.2f}",
+                     f"{t_b1/t_e:.2f}x", f"{t_b2/t_e:.2f}x", f"{t_e/t_s:.2f}x"])
+        payload[name] = dict(meta, baseline1=t_b1, baseline2=t_b2, cupc_e=t_e, cupc_s=t_s)
+    save("fig5", payload)
+    return "### Fig. 5 — baselines vs cuPC-E / cuPC-S\n\n" + md_table(
+        ["dataset", "base1 s", "base2 s", "cuPC-E s", "cuPC-S s",
+         "E vs b1", "E vs b2", "S vs E"],
+        rows,
+    )

@@ -1,0 +1,24 @@
+"""Fig. 6 analogue: distribution of runtime across levels (percent of
+total) for cuPC-E and cuPC-S."""
+from __future__ import annotations
+
+from .common import dataset, md_table, save
+
+
+def run(full: bool = False, quick: bool = False):
+    from repro.core.pc import pc
+
+    names = ["MCC-s", "DREAM5-s"] if quick else ["NCI-60-s", "MCC-s", "S.aureus-s", "DREAM5-s"]
+    rows, payload = [], {}
+    for engine in ("E", "S"):
+        for name in names:
+            x, _, meta = dataset(name, full)
+            r = pc(x, engine=engine, orient=False)
+            total = sum(v for k, v in r.timings_s.items() if k.startswith("level"))
+            pct = {k: 100 * v / total for k, v in r.timings_s.items() if k.startswith("level")}
+            rows.append([f"cuPC-{engine}", name] +
+                        [f"{pct.get(f'level{l}', 0):.0f}%" for l in range(6)])
+            payload[f"{engine}:{name}"] = pct
+    save("fig6", payload)
+    return "### Fig. 6 — runtime share per level\n\n" + md_table(
+        ["engine", "dataset", "L0", "L1", "L2", "L3", "L4", "L5"], rows)

@@ -1,0 +1,31 @@
+"""Fig. 7/8 analogue: configuration-parameter sweep.
+
+CUDA cuPC tunes (β, γ) block/thread splits; the TPU engines' counterpart
+is the cell budget that sets rank-chunk width (parallel width vs
+early-termination granularity). We sweep budgets around the default and
+report relative speed, per engine, on a sparse and a dense dataset."""
+from __future__ import annotations
+
+from .common import dataset, md_table, save, timed
+
+BUDGETS = [2**16, 2**20, 2**22, 2**24, 2**26, 2**28]
+
+
+def run(full: bool = False, quick: bool = False):
+    from repro.core.pc import pc
+
+    names = ["NCI-60-s", "DREAM5-s"] if not quick else ["DREAM5-s"]
+    rows, payload = [], {}
+    for engine in ("E", "S"):
+        for name in names:
+            x, _, meta = dataset(name, full)
+            _, t_ref = timed(lambda: pc(x, engine=engine, orient=False, cell_budget=2**24))
+            rel = []
+            for b in BUDGETS:
+                _, t = timed(lambda: pc(x, engine=engine, orient=False, cell_budget=b))
+                rel.append(t_ref / t)
+            rows.append([f"cuPC-{engine}", name] + [f"{r:.2f}" for r in rel])
+            payload[f"{engine}:{name}"] = dict(zip(map(str, BUDGETS), rel))
+    save("fig7_8", payload)
+    return ("### Fig. 7/8 — chunk-budget sweep (speed rel. to default 2^24)\n\n"
+            + md_table(["engine", "dataset"] + [f"2^{b.bit_length()-1}" for b in BUDGETS], rows))

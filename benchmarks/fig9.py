@@ -1,0 +1,38 @@
+"""Fig. 9 analogue: how many rows of A'_G share each conditional set S at
+level 2 — the histogram that justifies cuPC-S's LOCAL (per-row) sharing:
+if ~95% of sets recur in <3% of rows, a global search cannot pay."""
+from __future__ import annotations
+
+import itertools
+from collections import Counter
+
+import numpy as np
+
+from .common import dataset, md_table, save
+
+
+def run(full: bool = False, quick: bool = False):
+    from repro.core.pc import pc
+
+    x, _, meta = dataset("DREAM5-s", full)
+    r = pc(x, engine="S", max_level=1, orient=False)  # adjacency entering level 2
+    adj = r.adj
+    n = adj.shape[0]
+    counts = Counter()
+    for i in range(n):
+        nbrs = np.flatnonzero(adj[i])
+        for s in itertools.combinations(nbrs, 2):
+            counts[s] += 1
+    if not counts:
+        return "### Fig. 9 — (graph emptied before level 2)"
+    freq = np.array(list(counts.values()))
+    bins = [1, 2, 3, 5, 10, 20, 40, n]
+    hist, _ = np.histogram(freq, bins=bins)
+    pct = 100 * hist / hist.sum()
+    cum_small = 100 * (freq < 40).mean()
+    rows = [[f"[{bins[i]},{bins[i+1]})", f"{pct[i]:.1f}%"] for i in range(len(hist))]
+    payload = dict(meta, bins=bins, pct=pct.tolist(), pct_sets_in_lt40_rows=float(cum_small))
+    save("fig9", payload)
+    return (f"### Fig. 9 — rows sharing a level-2 conditional set "
+            f"({cum_small:.1f}% of sets appear in <40 rows → local sharing wins)\n\n"
+            + md_table(["rows sharing S", "% of sets"], rows))

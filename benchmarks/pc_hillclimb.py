@@ -1,0 +1,70 @@
+"""§Perf — PC-engine hillclimb with MEASURED wall-clock (the paper's own
+technique; CPU timings, steady-state: warm-up run first so XLA compile is
+excluded, exactly like the paper excludes CUDA JIT).
+
+Iterations (hypothesis → change → measure → verdict appended to
+benchmarks/results/pc_hillclimb.json):
+
+  base  cuPC-S, default budget 2^24
+  A     budget 2^26 — fewer host-loop chunks, less dispatch overhead;
+        risk: less early-termination between chunks (wasted tests)
+  B     hybrid engine: cuPC-E at level 1 (M2 is 1x1 — sharing buys
+        nothing, edge-major has no set-enumeration overhead), cuPC-S for
+        levels >= 2 (inverse sharing pays)
+  C     A + B combined
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import md_table, save
+
+
+def _run(x, m, engine, budget):
+    from repro.core.pc import pc
+
+    r = pc(x, alpha=0.01, engine=engine, orient=False, cell_budget=budget)
+    return r
+
+
+def run(full: bool = False, quick: bool = False):
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    n = 300 if not full else 800
+    x, _ = sample_gaussian_dag(n=n, m=850, density=0.05, seed=13)
+
+    variants = {
+        "base: S, 2^24": ("S", 2 ** 24),
+        "A: S, 2^26": ("S", 2 ** 26),
+        "B: hybrid E@1/S@2+, 2^24": ((lambda l: "E" if l == 1 else "S"), 2 ** 24),
+        "C: hybrid, 2^26": ((lambda l: "E" if l == 1 else "S"), 2 ** 26),
+    }
+
+    # warm-up (compile) once per engine shape family
+    _ = _run(x, 850, "S", 2 ** 24)
+
+    rows, payload, ref_adj = [], {}, None
+    for name, (eng, budget) in variants.items():
+        best_dt, best_lv = float("inf"), None
+        for _rep in range(2):  # first rep pays XLA compile; report steady state
+            t0 = time.perf_counter()
+            r = _run(x, 850, eng, budget)
+            dt = time.perf_counter() - t0
+            if ref_adj is None:
+                ref_adj = r.adj
+            assert np.array_equal(r.adj, ref_adj), f"{name}: skeleton changed!"
+            if dt < best_dt:
+                best_dt = dt
+                best_lv = {k: v for k, v in r.timings_s.items() if k.startswith("level")}
+        rows.append([name, f"{best_dt:.2f}"]
+                    + [f"{best_lv.get(f'level{i}', 0):.2f}" for i in range(5)])
+        payload[name] = {"total_s": best_dt, **best_lv}
+    save("pc_hillclimb", payload)
+    return ("### PC-engine hillclimb (measured seconds, skeleton-invariant)\n\n"
+            + md_table(["variant", "total s", "L0", "L1", "L2", "L3", "L4"], rows))
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,129 @@
+"""§Perf hillclimb driver: re-lower one dry-run cell with a set of
+beyond-paper optimizations enabled and report the three roofline terms
+against the stored baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter \
+        --arch deepseek-v2-236b --shape train_4k --mesh single \
+        --flags scatter_grads,master_fp32,flash_bf16,chunked_ce=8192
+
+Writes benchmarks/results/perf/<arch>__<shape>__<mesh>__<tag>.json.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def apply_flags(flag_str: str):
+    from repro.models import perf_flags
+
+    tcfg_kw = {"grad_accum": 4}
+    tags = []
+    for f in [s for s in flag_str.split(",") if s]:
+        tags.append(f)
+        if f == "scatter_grads":
+            perf_flags.SCATTER_GRADS = True
+        elif f == "flash_bf16":
+            perf_flags.FLASH_BF16 = True
+        elif f.startswith("chunked_ce"):
+            perf_flags.CHUNKED_CE = int(f.split("=")[1]) if "=" in f else 8192
+        elif f == "master_fp32":
+            tcfg_kw["param_dtype"] = "bfloat16"
+            tcfg_kw["master_fp32"] = True
+        elif f == "moe_data_cap":
+            perf_flags.MOE_DATA_CAP = True
+        elif f == "moe_gather":
+            perf_flags.MOE_GATHER_DISPATCH = True
+        elif f.startswith("accum="):
+            tcfg_kw["grad_accum"] = int(f.split("=")[1])
+        else:
+            raise SystemExit(f"unknown flag {f}")
+    return tcfg_kw, "+".join(tags) or "baseline"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--flags", default="")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+
+    tcfg_kw, tag = apply_flags(args.flags)
+    tag = args.tag or tag
+
+    from repro.configs import ARCHS, SHAPES, TrainConfig
+    from repro.launch.dryrun import _depths, _mem_dict, _variant, _extrapolate, build_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import costmode
+    from repro.roofline import collective_bytes, roofline_report
+
+    cfg = ARCHS[args.arch]
+    cell = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    tcfg = TrainConfig(**tcfg_kw) if cell.kind == "train" else None
+    _COST = ("flops", "bytes accessed", "transcendentals")
+
+    def compile_once(cfg_v, cost_mode):
+        costmode.UNROLL = cost_mode
+        costmode.FLASH_BLOCK = 4096 if cost_mode else None
+        try:
+            fn, cargs, pabs = build_cell(cfg_v, args.shape, mesh, tcfg=tcfg)
+            compiled = fn.lower(*cargs).compile()
+        finally:
+            costmode.UNROLL = False
+            costmode.FLASH_BLOCK = None
+        cost = {k: float(v) for k, v in dict(compiled.cost_analysis() or {}).items() if k in _COST}
+        coll = collective_bytes(compiled.as_text())
+        return compiled, cost, coll, pabs
+
+    t0 = time.time()
+    with mesh:
+        compiled, _, _, params_abs = compile_once(cfg, False)
+        mem = _mem_dict(compiled)
+        la, lb = _depths(cfg)
+        _, ca, xa, _ = compile_once(_variant(cfg, la), True)
+        _, cb, xb, _ = compile_once(_variant(cfg, lb), True)
+        cost = _extrapolate(ca, cb, la, lb, cfg.n_layers)
+        coll = {k: _extrapolate(xa[k], xb[k], la, lb, cfg.n_layers)
+                for k in xa if isinstance(xa[k], dict)}
+        coll["total_bytes"] = sum(v["bytes"] for v in coll.values())
+        roof = roofline_report(cost, coll, cfg, cell, params_abs, mesh.devices.size)
+
+    rec = {
+        "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+        "tag": tag, "flags": args.flags, "wall_s": round(time.time() - t0, 1),
+        "memory": mem, "cost": cost, "collectives": coll, "roofline": roof,
+    }
+    out_dir = RESULTS / "perf"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out = out_dir / f"{args.arch}__{args.shape}__{args.mesh}__{tag}.json"
+    out.write_text(json.dumps(rec, indent=1, default=float))
+
+    base_p = RESULTS / "dryrun" / f"{args.arch}__{args.shape}__{args.mesh}.json"
+    line = (f"[perf] {args.arch} {args.shape} {args.mesh} [{tag}] "
+            f"tc={roof['t_compute_s']:.3e} tm={roof['t_memory_s']:.3e} "
+            f"tx={roof['t_collective_s']:.3e} dom={roof['dominant']} "
+            f"temp={mem.get('temp_size_in_bytes',0)/1e9:.1f}GB")
+    if base_p.exists():
+        b = json.loads(base_p.read_text())["roofline"]
+        line += (f"  | vs base: tc x{b['t_compute_s']/max(roof['t_compute_s'],1e-30):.2f}"
+                 f" tm x{b['t_memory_s']/max(roof['t_memory_s'],1e-30):.2f}"
+                 f" tx x{b['t_collective_s']/max(roof['t_collective_s'],1e-30):.2f}")
+    print(line)
+
+
+if __name__ == "__main__":
+    main()

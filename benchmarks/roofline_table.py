@@ -1,0 +1,46 @@
+"""§Roofline table: aggregate the dry-run JSONs into the per-(arch×shape)
+three-term roofline, dominant bottleneck, and useful-FLOPs ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import md_table, save
+
+DRYRUN = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def rows_from_records(mesh_kind: str = "single"):
+    rows = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh_kind}.json")):
+        rec = json.loads(p.read_text())
+        arch, shape = rec["arch"], rec["shape"]
+        if rec["status"] == "skipped":
+            rows.append([arch, shape, "skip", "-", "-", "-", "-", "-", "-"])
+            continue
+        if rec["status"] != "ok":
+            rows.append([arch, shape, "ERROR", "-", "-", "-", "-", "-", "-"])
+            continue
+        r = rec["roofline"]
+        mem = rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9
+        rows.append([
+            arch, shape, r["dominant"],
+            f"{r['t_compute_s']:.3e}", f"{r['t_memory_s']:.3e}",
+            f"{r['t_collective_s']:.3e}",
+            f"{r['useful_flops_ratio']:.3f}",
+            f"{r['model_flops']:.2e}",
+            f"{mem:.1f}",
+        ])
+    return rows
+
+
+def run(full: bool = False, quick: bool = False):
+    rows = rows_from_records("single")
+    if not rows:
+        return "### Roofline — (no dry-run records yet; run repro.launch.dryrun)"
+    save("roofline_table", {"rows": rows})
+    return "### Roofline — per (arch × shape), single-pod 16×16 (256 chips)\n\n" + md_table(
+        ["arch", "shape", "dominant", "t_compute s", "t_memory s",
+         "t_collective s", "useful/HLO flops", "MODEL_FLOPS", "temp GB/chip"],
+        rows,
+    )

@@ -1,0 +1,58 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # scaled (CPU, minutes)
+    PYTHONPATH=src python -m benchmarks.run --quick    # smoke subset
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale n (hours)
+
+Writes benchmarks/results/*.json + benchmarks/results/REPORT.md.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (fig5, fig6, fig7_8, fig9, fig10, pc_hillclimb,
+               roofline_table, table2)
+from .common import RESULTS
+
+MODULES = [
+    ("table2", table2),
+    ("fig5", fig5),
+    ("fig6", fig6),
+    ("fig7_8", fig7_8),
+    ("fig9", fig9),
+    ("fig10", fig10),
+    ("pc_hillclimb", pc_hillclimb),
+    ("roofline", roofline_table),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    sections = []
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            md = mod.run(full=args.full, quick=args.quick)
+            dt = time.perf_counter() - t0
+            print(f"[bench] {name:10s} ok in {dt:6.1f}s", flush=True)
+            sections.append(md)
+        except Exception as e:  # keep the harness running; report at end
+            print(f"[bench] {name:10s} FAILED: {e!r}", flush=True)
+            sections.append(f"### {name} — FAILED: {e!r}")
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    report = "# Benchmark report (paper tables/figures analogues)\n\n" + "\n\n".join(sections) + "\n"
+    (RESULTS / "REPORT.md").write_text(report)
+    print(f"[bench] report -> {RESULTS / 'REPORT.md'}")
+    print(report)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Table 2 analogue: serial PC-stable (python oracle, = "Stable") vs the
+two batched engines cuPC-E / cuPC-S, runtimes + speedup ratios, geometric
+mean across the six (scaled) benchmark datasets."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import BENCH_DATASETS, dataset, md_table, save, timed
+
+
+def run(full: bool = False, quick: bool = False):
+    import jax
+
+    from repro.core.pc import pc
+    from repro.core.stable_ref import pc_stable_skeleton
+
+    names = list(BENCH_DATASETS)[: 2 if quick else None]
+    rows, ratios_e, ratios_s = [], [], []
+    payload = {}
+    for name in names:
+        x, _, meta = dataset(name, full)
+        (ref, t_serial) = timed(pc_stable_skeleton, np.corrcoef(x.T), meta["m"], 0.01)
+        # steady-state engine timing (best of 2: the first run pays XLA
+        # compile, which the paper likewise excludes for CUDA)
+        run_e, t_e = timed(lambda: pc(x, engine="E", orient=False), repeat=2)
+        run_s, t_s = timed(lambda: pc(x, engine="S", orient=False), repeat=2)
+        assert np.array_equal(run_e.adj, run_s.adj), "E/S skeleton mismatch"
+        assert np.array_equal(run_e.adj, ref.adj), f"{name}: engine != serial oracle"
+        ratios_e.append(t_serial / t_e)
+        ratios_s.append(t_serial / t_s)
+        rows.append([name, meta["n"], meta["m"],
+                     f"{t_serial:.2f}", f"{t_e:.2f}", f"{t_s:.2f}",
+                     f"{t_serial/t_e:.1f}x", f"{t_serial/t_s:.1f}x"])
+        payload[name] = dict(meta, t_serial=t_serial, t_cupc_e=t_e, t_cupc_s=t_s)
+    gm_e = float(np.exp(np.mean(np.log(ratios_e))))
+    gm_s = float(np.exp(np.mean(np.log(ratios_s))))
+    rows.append(["**geomean**", "", "", "", "", "", f"**{gm_e:.1f}x**", f"**{gm_s:.1f}x**"])
+    payload["geomean"] = {"cupc_e": gm_e, "cupc_s": gm_s}
+    save("table2", payload)
+    return "### Table 2 — serial vs cuPC-E vs cuPC-S\n\n" + md_table(
+        ["dataset", "n", "m", "serial s", "cuPC-E s", "cuPC-S s", "E speedup", "S speedup"],
+        rows,
+    )

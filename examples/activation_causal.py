@@ -1,0 +1,57 @@
+"""Bridge example: the paper's technique applied to tensors produced by
+the model substrate — causal structure over a small LM's hidden units.
+
+Trains a tiny LM for a few steps, collects residual-stream activations
+over a corpus, then runs cuPC-S on the unit-unit correlation matrix to
+recover a (sparse) causal graph among hidden units.
+
+    PYTHONPATH=src python examples/activation_causal.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, TrainConfig
+from repro.core.pc import pc_from_corr
+from repro.data.lm_tokens import TokenPipeline
+from repro.models import registry as R
+from repro.models import transformer as tf
+from repro.optim import adamw_init
+
+cfg = dataclasses.replace(
+    ARCHS["qwen3-1.7b"].reduced(), name="probe-lm", d_model=64, n_layers=2,
+    n_heads=4, n_kv=2, d_head=16, d_ff=128, vocab=256,
+)
+tcfg = TrainConfig(lr=1e-3, warmup=5, total_steps=50, compute_dtype="float32")
+
+api = R.build(cfg, compute_dtype=jnp.float32)
+params = api.init(jax.random.key(0))
+opt = adamw_init(params)
+step = jax.jit(R.make_train_step(cfg, tcfg))
+pipe = TokenPipeline(cfg.vocab, 64, 8)
+for i in range(50):
+    params, opt, m = step(params, opt, pipe.batch(i))
+print(f"[probe] trained 50 steps, loss {float(m['loss']):.3f}")
+
+# collect residual-stream activations (pre-unembed hidden states)
+batch = pipe.batch(999)
+x, mask, positions = tf._embed_inputs(params, cfg, batch, jnp.float32)
+for seg, seg_p in zip(tf.program(cfg), params["segments"]):
+    def body(carry, layer_p, _k=seg.kind):
+        y, aux, kv = tf.block_apply(layer_p, cfg, _k, carry, positions, mask)
+        return y, None
+    x, _ = jax.lax.scan(body, x, seg_p)
+acts = np.asarray(x.reshape(-1, cfg.d_model))           # (tokens, units)
+m_samples = acts.shape[0]
+print(f"[probe] activations: {acts.shape} (tokens x hidden units)")
+
+# causal discovery over hidden units (cuPC-S on the correlation matrix)
+c = np.corrcoef(acts.T)
+run = pc_from_corr(jnp.asarray(c), m_samples, alpha=0.001, engine="S", max_level=2)
+n_edges = int(run.adj.sum()) // 2
+total = cfg.d_model * (cfg.d_model - 1) // 2
+print(f"[probe] cuPC-S: {n_edges}/{total} unit-unit edges survive "
+      f"({run.levels_run} levels)  — sparse causal structure over neurons")
+print("[probe] timings:", {k: f"{v*1e3:.0f}ms" for k, v in run.timings_s.items()})

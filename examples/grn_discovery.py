@@ -1,0 +1,68 @@
+"""End-to-end driver (the paper's workload): gene-regulatory-network-style
+causal discovery on a DREAM5-Insilico-shaped dataset, with both engines,
+accuracy against the generating DAG, and per-level timing — the full
+pipeline the paper accelerates, at a CPU-runnable scale.
+
+    PYTHONPATH=src python examples/grn_discovery.py [--n 400] [--m 850]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.pc import pc
+from repro.core.stable_ref import pc_stable_skeleton
+from repro.data.synthetic_dag import sample_gaussian_dag
+
+
+def shd(est: np.ndarray, true: np.ndarray) -> int:
+    """Structural Hamming distance between skeletons."""
+    diff = est ^ true
+    return int(diff.sum()) // 2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=400)
+    ap.add_argument("--m", type=int, default=850)
+    ap.add_argument("--density", type=float, default=0.02)
+    ap.add_argument("--alpha", type=float, default=0.01)
+    ap.add_argument("--serial-check", action="store_true",
+                    help="also run the python serial oracle (slow)")
+    args = ap.parse_args()
+
+    print(f"[grn] sampling expression-like data: n={args.n} genes, m={args.m} samples")
+    x, dag = sample_gaussian_dag(n=args.n, m=args.m, density=args.density, seed=42)
+    true_skel = dag.skeleton()
+
+    runs = {}
+    for engine in ("E", "S"):
+        t0 = time.perf_counter()
+        r = pc(x, alpha=args.alpha, engine=engine)
+        dt = time.perf_counter() - t0
+        runs[engine] = (r, dt)
+        est = r.adj
+        tp = int((est & true_skel).sum()) // 2
+        fp = int((est & ~true_skel).sum()) // 2
+        print(f"\n[cuPC-{engine}] total {dt:.2f}s  levels={r.levels_run}")
+        for k, v in r.timings_s.items():
+            if k.startswith("level"):
+                print(f"    {k}: {v*1e3:8.1f} ms")
+        print(f"    edges={int(est.sum())//2} TDR={tp/max(tp+fp,1):.2%} "
+              f"SHD={shd(est, true_skel)} "
+              f"v-structures+Meek oriented {int((r.cpdag & ~r.cpdag.T).sum())} edges")
+
+    assert np.array_equal(runs["E"][0].adj, runs["S"][0].adj), "E/S disagree!"
+    print("\n[grn] cuPC-E and cuPC-S skeletons identical ✓")
+
+    if args.serial_check:
+        t0 = time.perf_counter()
+        ref = pc_stable_skeleton(np.corrcoef(x.T), args.m, args.alpha)
+        dt_serial = time.perf_counter() - t0
+        assert np.array_equal(ref.adj, runs["S"][0].adj), "engine != serial oracle!"
+        print(f"[grn] serial oracle matches ✓  ({dt_serial:.1f}s serial vs "
+              f"{runs['S'][1]:.1f}s cuPC-S → {dt_serial/runs['S'][1]:.0f}x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: cuPC-on-TPU causal discovery + multi-pod JAX training framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,102 @@
+"""Conditional-independence testing for multivariate-normal data (paper §4.3–4.4).
+
+All tests reduce to partial correlations computed from the global correlation
+matrix C:
+
+    ρ(Vi, Vj | S)  via  H = M0 − M1 · M2⁻¹ · M1ᵀ          (Eq. 4–5)
+    Z(ρ) = |atanh ρ|  compared against  τ = Φ⁻¹(1−α/2)/√(m−|S|−3)   (Eq. 6–7)
+
+M2 = C[S,S] may be ill-conditioned; the paper uses a Moore–Penrose
+pseudo-inverse built from a Cholesky factorisation (Alg. 7, Courrieu).
+We provide both the paper-faithful pseudo-inverse and a fast
+Cholesky-solve path with Tikhonov jitter; they agree on well-conditioned
+inputs (tested) and the pinv path is used when `robust=True`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtri
+
+
+def fisher_z(rho: jax.Array) -> jax.Array:
+    """|½ ln((1+ρ)/(1−ρ))| = |atanh ρ|, with clipping for |ρ|→1 (Eq. 6)."""
+    rho = jnp.clip(rho, -0.9999999, 0.9999999)
+    return jnp.abs(jnp.arctanh(rho))
+
+
+def threshold(m: int, ell: int, alpha: float) -> float:
+    """τ = Φ⁻¹(1−α/2)/√(m−ℓ−3)  (Eq. 7). Host-side scalar."""
+    denom = max(m - ell - 3, 1)
+    return float(ndtri(1.0 - alpha / 2.0)) / float(denom) ** 0.5
+
+
+def pseudo_inverse(m2: jax.Array) -> jax.Array:
+    """Paper Alg. 7 (Courrieu): Moore–Penrose inverse via full-rank Cholesky.
+
+        L = cholesky(M2ᵀ M2) ;  R = (Lᵀ L)⁻¹ ;  M2⁺ = L R R Lᵀ M2ᵀ
+
+    Works batched over leading dims. For rank-deficient M2 the full-rank
+    Cholesky would need column pruning; following pcalg practice we add a
+    tiny ridge — real gene-expression matrices are full rank up to noise.
+    """
+    mt_m = jnp.einsum("...ji,...jk->...ik", m2, m2)
+    eye = jnp.eye(m2.shape[-1], dtype=m2.dtype)
+    ridge = 1e-10 * jnp.trace(mt_m, axis1=-2, axis2=-1)[..., None, None] + 1e-30
+    l = jnp.linalg.cholesky(mt_m + ridge * eye)
+    lt_l = jnp.einsum("...ji,...jk->...ik", l, l)
+    r = jnp.linalg.inv(lt_l)
+    return jnp.einsum(
+        "...ij,...jk,...kl,...ml,...nm->...in", l, r, r, l, m2
+    )
+
+
+def solve_spd(m2: jax.Array, rhs: jax.Array, jitter: float = 1e-8) -> jax.Array:
+    """Fast path: Cholesky solve of the SPD correlation submatrix."""
+    eye = jnp.eye(m2.shape[-1], dtype=m2.dtype)
+    chol = jnp.linalg.cholesky(m2 + jitter * eye)
+    return jax.scipy.linalg.cho_solve((chol, True), rhs)
+
+
+def partial_corr_single(
+    c: jax.Array, i: jax.Array, j: jax.Array, s: jax.Array, robust: bool = False
+) -> jax.Array:
+    """ρ(Vi, Vj | S) for one (i, j, S) triple. s: int vector of size ℓ.
+
+    Reference-grade (used by the serial oracle and tests); the batched
+    engines in levels.py inline the same math over worklists.
+    """
+    ell = s.shape[-1]
+    if ell == 0:
+        return c[i, j]
+    m2 = c[jnp.ix_(s, s)] if s.ndim == 1 else None
+    ci_s = c[i, s]
+    cj_s = c[j, s]
+    if robust:
+        g = pseudo_inverse(m2)
+        gi = g @ ci_s
+        gj = g @ cj_s
+    else:
+        gi = solve_spd(m2, ci_s)
+        gj = solve_spd(m2, cj_s)
+    h01 = c[i, j] - ci_s @ gj
+    h00 = c[i, i] - ci_s @ gi
+    h11 = c[j, j] - cj_s @ gj
+    denom = jnp.sqrt(jnp.maximum(h00 * h11, 1e-30))
+    return h01 / denom
+
+
+def correlation_from_samples(x: jax.Array) -> jax.Array:
+    """Sample correlation matrix, x: (m, n) → (n, n), fp32.
+
+    The production path uses the tiled Pallas kernel in kernels/corr.py;
+    this is the mathematical definition both are tested against.
+    """
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    xc = x - mu
+    std = jnp.sqrt(jnp.mean(xc * xc, axis=0, keepdims=True))
+    xn = xc / jnp.maximum(std, 1e-30)
+    c = (xn.T @ xn) / x.shape[0]
+    # exact-1 diagonal guards atanh in level 0
+    return jnp.clip(c, -1.0, 1.0).at[jnp.arange(x.shape[1]), jnp.arange(x.shape[1])].set(1.0)

@@ -1,0 +1,114 @@
+"""Lexicographic combination unranking (paper §4.2, Buckles–Lybanon Alg. 515).
+
+The CUDA kernels compute the t-th ℓ-subset of {0..n-1} on the fly in every
+thread so that no index lists are ever materialised. We keep the same
+property on TPU but vectorise: a single O(n) pass over the candidate
+elements decides membership of each, batched over thousands of ranks t at
+once with ``jax.vmap`` / ``lax.fori_loop``.
+
+For cuPC-E the combination must additionally *skip* a forbidden position p
+(the index of Vj inside the row); per the paper we unrank from C(n-1, ℓ) and
+shift every element ≥ p up by one.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Maximum supported conditioning-set size. PC on bounded-degree graphs rarely
+# exceeds single digits; pcalg defaults to m.max=Inf but real runs stop ≤ ~8.
+MAX_LEVEL = 16
+
+
+@functools.lru_cache(maxsize=None)
+def binom_table(n_max: int, l_max: int = MAX_LEVEL) -> np.ndarray:
+    """Pascal-triangle table  T[n, k] = C(n, k), shape (n_max+1, l_max+2).
+
+    Built once on host (static per level) and closed over by the jitted
+    unranking code; sizes are tiny (n_max ≤ graph max-degree).
+    Values are clipped into int64 range; PC levels with C(n', ℓ) overflowing
+    int64 are far beyond any feasible compute budget anyway.
+    """
+    t = np.zeros((n_max + 1, l_max + 2), dtype=np.int64)
+    t[:, 0] = 1
+    for n in range(1, n_max + 1):
+        for k in range(1, l_max + 2):
+            v = t[n - 1, k - 1] + t[n - 1, k]
+            t[n, k] = min(v, np.iinfo(np.int64).max // 2)
+    return t
+
+
+def n_choose_l(n: int, l: int) -> int:
+    """Host-side exact C(n, l) (no overflow guard needed for planning)."""
+    if l < 0 or l > n:
+        return 0
+    import math
+
+    return math.comb(n, l)
+
+
+def unrank_combination(t: jax.Array, n: int, ell: int) -> jax.Array:
+    """Return the t-th (lexicographic) ℓ-subset of {0,…,n−1}, 0-based.
+
+    t may be any integer array; output has shape t.shape + (ell,).
+    Out-of-range ranks (t ≥ C(n,ℓ)) produce clamped garbage — callers mask.
+
+    Single forward pass (paper's Alg. 6 re-rolled): walking candidates
+    k = 0..n-1, element k is included iff the count of combinations that
+    start with k at the current position exceeds the remaining rank.
+    """
+    dt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    cap = jnp.iinfo(dt).max // 2
+    table = jnp.asarray(np.minimum(binom_table(max(n, 1)), int(cap)), dtype=dt)
+
+    def scalar_unrank(t0):
+        def body(k, carry):
+            rem, c, out = carry
+            # combos that pick k at slot c then choose (ell-c-1) from the tail
+            cnt = table[n - k - 1, ell - c - 1]
+            take = (c < ell) & (rem < cnt)
+            out = jax.lax.cond(
+                take, lambda o: o.at[c].set(k), lambda o: o, out
+            )
+            rem = jnp.where(take | (c >= ell), rem, rem - cnt)
+            c = c + jnp.where(take, 1, 0)
+            return rem, c, out
+
+        _, _, out = jax.lax.fori_loop(
+            0,
+            n,
+            body,
+            (t0.astype(table.dtype), jnp.int32(0), jnp.zeros((ell,), jnp.int32)),
+        )
+        return out
+
+    flat = jnp.ravel(jnp.asarray(t))
+    res = jax.vmap(scalar_unrank)(flat)
+    return res.reshape(jnp.asarray(t).shape + (ell,))
+
+
+def unrank_excluding(t: jax.Array, n: int, ell: int, p: jax.Array) -> jax.Array:
+    """cuPC-E variant: t-th ℓ-subset of {0..n-1} \\ {p}  (paper §4.2).
+
+    Unranks from C(n-1, ℓ) then shifts indices ≥ p up by one. ``p`` must
+    broadcast against ``t``.
+    """
+    base = unrank_combination(t, n - 1, ell)
+    p = jnp.asarray(p)[..., None]
+    return base + (base >= p).astype(base.dtype)
+
+
+def rank_of_combination(combo: np.ndarray, n: int) -> int:
+    """Host-side inverse of unrank (for tests): lexicographic rank."""
+    combo = sorted(int(c) for c in combo)
+    ell = len(combo)
+    rank = 0
+    prev = -1
+    for c_idx, val in enumerate(combo):
+        for k in range(prev + 1, val):
+            rank += n_choose_l(n - k - 1, ell - c_idx - 1)
+        prev = val
+    return rank

@@ -1,0 +1,175 @@
+"""Multi-device / multi-pod PC-stable: row-sharded cuPC-S via shard_map.
+
+Parallel decomposition (mirrors cuPC's block grid, but across *chips*):
+rows of the compacted adjacency are sharded over every mesh axis flattened
+together — within a level PC-stable's tests are embarrassingly parallel, so
+the only communication is
+
+  1. all_gather of the per-row winner arrays (t_win, removed_slot, s_win)
+     after each chunk   — O(n · n′ · ℓ) ints, tiny vs the CI-test FLOPs;
+  2. the replicated global commit (edge removals must be symmetric, i.e.
+     row i removing (i,j) must kill row j's edge too — the CUDA version
+     does this through global-memory writes, we do it through the gather).
+
+C and adj are replicated (n ≤ ~16k ⇒ C is ≤ 1 GB fp32, far under one HBM);
+beyond that C itself can be row-sharded with the same layout (the tests only
+read C rows for i ∈ shard ∪ gathered columns — see DESIGN §4).
+
+Fault tolerance: the (adj, sep) pair after any level is a complete,
+idempotent checkpoint; the driver snapshots it per level so a restart
+replays at most one level.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import levels as L
+from .compact import compact_rows
+
+
+def pc_mesh(devices=None) -> Mesh:
+    """1-D mesh over all local devices; the PC row axis."""
+    devices = devices if devices is not None else jax.devices()
+    return Mesh(np.asarray(devices), ("rows",))
+
+
+def _chunk_s_sharded_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int):
+    """Build the jitted shard_map chunk function for one (ℓ, chunk) config."""
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(), P(), P(), P("rows"), P("rows"), P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    def _sharded(c, adj, sep, compact_l, counts_l, t0, tau):
+        n = c.shape[0]
+        n_l = compact_l.shape[0]
+        shard_idx = jax.lax.axis_index("rows")
+        rows_l = shard_idx * n_l + jnp.arange(n_l, dtype=jnp.int32)
+        ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
+
+        sep_found, s_ids = L._tests_s(
+            c, adj, compact_l, counts_l, rows_l, ranks, tau, ell=ell, n_max=n_max
+        )
+        t_win, removed_slot, s_win = L._winners(sep_found, ranks, s_ids, None)
+
+        # gather winners from every shard → full-width arrays (replicated)
+        t_win_f = jax.lax.all_gather(t_win, "rows", tiled=True)
+        rem_f = jax.lax.all_gather(removed_slot, "rows", tiled=True)
+        s_win_f = jax.lax.all_gather(s_win, "rows", tiled=True)
+        compact_f = jax.lax.all_gather(compact_l, "rows", tiled=True)
+        rows_f = jnp.arange(n, dtype=jnp.int32)
+
+        adj_new, sep_new = L._global_commit(
+            adj, sep, compact_f[:n], rows_f, t_win_f[:n], rem_f[:n], s_win_f[:n], ell
+        )
+        return adj_new, sep_new
+
+    return jax.jit(_sharded)
+
+
+def run_level_sharded(c, adj, sep, ell, tau, mesh, cell_budget=2**24):
+    """Distributed analogue of levels.run_level (cuPC-S engine)."""
+    n = c.shape[0]
+    n_dev = mesh.devices.size
+    counts_host = np.asarray(jax.device_get(jnp.sum(adj, axis=1)))
+    npr = int(counts_host.max(initial=0))
+    if npr - 1 < ell:
+        return adj, sep, {"skipped": True, "chunks": 0, "npr": npr}
+
+    compact, counts = compact_rows(adj, n_prime=npr)
+    # pad rows to a device multiple; padded rows have counts=0 → fully masked
+    pad = (-n) % n_dev
+    if pad:
+        compact = jnp.pad(compact, ((0, pad), (0, 0)), constant_values=-1)
+        counts = jnp.pad(counts, (0, pad))
+    compact = jax.device_put(compact, NamedSharding(mesh, P("rows")))
+    counts = jax.device_put(counts, NamedSharding(mesh, P("rows")))
+
+    total = math.comb(npr, ell)
+    per_rank_cells = max((n + pad) // n_dev, 1) * npr * max(ell, 1) ** 2
+    n_chunk = max(1, min(total, cell_budget // max(per_rank_cells, 1)))
+    fn = _chunk_s_sharded_fn(mesh, ell, n_chunk, npr)
+    chunks = 0
+    for t0 in range(0, total, n_chunk):
+        adj, sep = fn(c, adj, sep, compact, counts,
+                      jnp.asarray(t0, L._rank_dtype()), jnp.float32(tau))
+        chunks += 1
+    return adj, sep, {"skipped": False, "chunks": chunks, "npr": npr, "total_sets": total}
+
+
+def pc_distributed(
+    x=None,
+    c=None,
+    m: int | None = None,
+    alpha: float = 0.01,
+    mesh: Mesh | None = None,
+    max_level: int | None = None,
+    sepset_depth: int = 8,
+    cell_budget: int = 2**24,
+    checkpoint_cb=None,
+    resume=None,
+):
+    """Distributed PC-stable. Provide samples x (m,n) or corr matrix c + m.
+
+    checkpoint_cb(level, adj, sep): optional per-level snapshot hook — the
+    fault-tolerance unit for multi-pod runs (levels are idempotent).
+    resume=(level, adj, sep): restart from a per-level snapshot — the
+    whole algorithm state is (adjacency, sepsets, level); replaying a
+    level is safe (PC-stable levels are deterministic given G').
+    """
+    from .cit import correlation_from_samples, threshold
+    from .combinadics import MAX_LEVEL
+    from .orient import cpdag_from_skeleton
+    from .pc import PCRun
+
+    mesh = mesh or pc_mesh()
+    if c is None:
+        assert x is not None
+        m = int(x.shape[0])
+        c = correlation_from_samples(jnp.asarray(x))
+    c = jnp.asarray(c, jnp.float32)
+    n = c.shape[0]
+    lmax = min(max_level if max_level is not None else MAX_LEVEL, sepset_depth)
+
+    if resume is not None:
+        start_level, adj0, sep0 = resume
+        adj = jnp.asarray(adj0)
+        sep = jnp.asarray(sep0, jnp.int32)
+        first_level = start_level + 1
+    else:
+        adj = L.level0(c, threshold(m, 0, alpha))
+        sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
+        sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
+        first_level = 1
+
+    stats = []
+    ell = first_level
+    while ell <= lmax:
+        max_deg = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
+        if max_deg - 1 < ell:
+            break
+        adj, sep, st = run_level_sharded(c, adj, sep, ell, threshold(m, ell, alpha),
+                                         mesh, cell_budget=cell_budget)
+        stats.append({"level": ell, **st})
+        if checkpoint_cb is not None:
+            checkpoint_cb(ell, adj, sep)
+        ell += 1
+
+    cpdag = cpdag_from_skeleton(adj, sep)
+    return PCRun(
+        adj=np.asarray(jax.device_get(adj)),
+        cpdag=np.asarray(jax.device_get(cpdag)),
+        sepsets=np.asarray(jax.device_get(sep)),
+        levels_run=ell - 1,
+        level_stats=stats,
+    )

@@ -1,0 +1,343 @@
+"""Batched per-level CI-test engines: the TPU re-formulation of cuPC-E / cuPC-S.
+
+CUDA cuPC assigns *threads* to (edge × combo-slice) [cuPC-E] or to
+conditioning sets S [cuPC-S]. On TPU we build the same two engines as dense
+batched worklists:
+
+  * ``level0``      — one fused elementwise pass over C (paper Alg. 3).
+  * ``chunk_s``     — cuPC-S: for every (row i, combo-rank t) cell, gather
+                      M2 = C[S,S] once, invert once (batched Cholesky), and
+                      sweep *all* neighbours j of i with MXU-friendly einsums
+                      — the paper's "share the pseudo-inverse locally" idea.
+  * ``chunk_e``     — cuPC-E: for every (row i, neighbour slot p, rank t)
+                      cell an independent CI test (no sharing) — the paper's
+                      edge-major engine, kept for fidelity + benchmarks.
+
+Early termination (paper §4.1) becomes *chunking*: ranks are processed in
+host-looped chunks; edges removed by an earlier chunk mask out of later
+chunks (the `alive` snapshot), and rows with n'_i < ℓ+1 are masked wholesale.
+Level-1 never builds M2 at all: ρ(i,j|k) has a closed form (beyond-paper
+optimisation; Fig. 6 shows ℓ=1 dominates runtime).
+
+SepSet determinism: within a level the winning separating set for an edge is
+the (endpoint-row, rank)-lexicographic minimum *per chunk*; across chunks the
+first separating chunk wins. This is a deterministic refinement of the
+paper's "whichever thread wins the race" and — like the paper — does not
+affect the skeleton (PC-stable order-independence).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cit import fisher_z
+from .combinadics import binom_table
+
+def _rank_dtype():
+    """int64 ranks when x64 is on; int32 otherwise. C(n',l) beyond 2^29
+    requires jax_enable_x64 (the pc_run launcher enables it)."""
+    return jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+
+
+def _imax():
+    return int(jnp.iinfo(_rank_dtype()).max) // 4
+
+
+def _jtable(n_max):
+    return jnp.asarray(np.minimum(binom_table(n_max), _imax()).astype(np.int64),
+                       dtype=_rank_dtype())
+
+
+# --------------------------------------------------------------------------
+# level 0
+# --------------------------------------------------------------------------
+@jax.jit
+def level0(c: jax.Array, tau: float) -> jax.Array:
+    """Paper Alg. 3: adjacency after unconditional tests, Z(C_ij) > tau."""
+    n = c.shape[0]
+    keep = fisher_z(c) > tau
+    eye = jnp.eye(n, dtype=bool)
+    return keep & ~eye
+
+
+# --------------------------------------------------------------------------
+# dynamic-n combination unranking (vectorised Alg. 6 over worklists)
+# --------------------------------------------------------------------------
+def _unrank_dyn(t, n_dyn, n_max: int, ell: int, table):
+    """t-th lex ℓ-subset of {0..n_dyn-1}; n_dyn traced, n_max static bound.
+
+    t, n_dyn broadcast together; output (..., ell) int32 positions.
+    Invalid ranks (t >= C(n_dyn, ell)) return clamped junk — callers mask.
+    """
+    t = t.astype(_rank_dtype())
+    shape = jnp.broadcast_shapes(t.shape, jnp.shape(n_dyn))
+    rem = jnp.broadcast_to(t, shape)
+    n_dyn = jnp.broadcast_to(jnp.asarray(n_dyn, jnp.int32), shape)
+    c = jnp.zeros(shape, jnp.int32)
+    out = jnp.zeros(shape + (ell,), jnp.int32)
+
+    def body(k, carry):
+        rem, c, out = carry
+        tail = jnp.clip(n_dyn - k - 1, 0, n_max)
+        slot = jnp.clip(ell - c - 1, 0, ell + 1)
+        cnt = table[tail, slot]
+        open_ = (k < n_dyn) & (c < ell)
+        take = open_ & (rem < cnt)
+        out = jnp.where(
+            (jax.nn.one_hot(jnp.where(take, c, ell), ell + 1, dtype=bool)[..., :ell]),
+            jnp.int32(k),
+            out,
+        )
+        rem = jnp.where(open_ & ~take, rem - cnt, rem)
+        c = c + take.astype(jnp.int32)
+        return rem, c, out
+
+    _, _, out = jax.lax.fori_loop(0, n_max, body, (rem, c, out))
+    return out
+
+
+# --------------------------------------------------------------------------
+# shared CI math
+# --------------------------------------------------------------------------
+def _inv_spd(m, jitter=1e-8):
+    eye = jnp.eye(m.shape[-1], dtype=m.dtype)
+    return jnp.linalg.inv(m + jitter * eye)
+
+
+# --------------------------------------------------------------------------
+# cuPC-S chunk: set-major with shared inverse
+# --------------------------------------------------------------------------
+def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int):
+    """cuPC-S CI tests for the given (possibly sharded) row block.
+
+    c/adj are GLOBAL (n,n); compact/counts/rows are LOCAL (n_l rows, global
+    ids in `rows`). Returns (sep_found (n_l,T,npr) bool, s_ids (n_l,T,ell)).
+    """
+    n = c.shape[0]
+    n_l, npr = compact.shape
+    n_chunk = ranks.shape[0]
+    table = _jtable(n_max)
+    total = table[jnp.clip(counts, 0, n_max), ell]  # C(n'_i, ell) per row
+    valid_set = ranks[None, :] < total[:, None]  # (n_l, T)
+
+    # positions → variable ids of S             (n_l, T, ell)
+    pos = _unrank_dyn(ranks[None, :], counts[:, None], npr, ell, table)
+    pos = jnp.where(valid_set[..., None], pos, 0)
+    s_ids = jnp.take_along_axis(compact, pos.reshape(n_l, -1), axis=1).reshape(n_l, n_chunk, ell)
+    s_ids = jnp.clip(s_ids, 0, n - 1)  # padded slots are masked anyway
+
+    # M2 = C[S,S] and its inverse — ONE per (row, set): the cuPC-S sharing.
+    m2 = c[s_ids[..., :, None], s_ids[..., None, :]]  # (n_l,T,ell,ell)
+    if ell == 1:
+        g = 1.0 / jnp.maximum(m2, 1e-8)  # scalar "inverse"
+    else:
+        g = _inv_spd(m2)
+
+    ci_s = c[rows[:, None, None], s_ids]  # (n_l,T,ell)
+    u_i = jnp.einsum("ntab,ntb->nta", g, ci_s)
+    var_i = 1.0 - jnp.einsum("nta,nta->nt", ci_s, u_i)
+
+    # sweep all neighbours j of row i (shared u_i): MXU einsums over (npr, ell)
+    j_ids = jnp.clip(compact, 0, n - 1)  # (n_l, npr)
+    cj_s = c[j_ids[:, None, :, None], s_ids[:, :, None, :]]  # (n_l,T,npr,ell)
+    cij = c[rows[:, None], j_ids][:, None, :]  # (n_l,1,npr)
+    num = cij - jnp.einsum("ntpl,ntl->ntp", cj_s, u_i)
+    gw = jnp.einsum("ntab,ntpb->ntpa", g, cj_s)
+    var_j = 1.0 - jnp.einsum("ntpa,ntpa->ntp", cj_s, gw)
+    rho = num / jnp.sqrt(jnp.maximum(var_i[..., None] * var_j, 1e-20))
+    indep = fisher_z(rho) <= tau  # (n_l,T,npr)
+
+    in_s = jnp.any(j_ids[:, None, :, None] == s_ids[:, :, None, :], axis=-1)
+    alive = adj[rows[:, None], j_ids] & (compact >= 0)  # (n_l,npr) snapshot
+    mask = valid_set[:, :, None] & ~in_s & alive[:, None, :]
+    return indep & mask, s_ids
+
+
+@functools.partial(jax.jit, static_argnames=("ell", "n_chunk", "n_max"))
+def chunk_s(c, adj, sep, compact, counts, t0, tau, *, ell: int, n_chunk: int, n_max: int):
+    """Process combo-ranks [t0, t0+n_chunk) of every row, cuPC-S style.
+
+    c:(n,n) fp32 · adj:(n,n) bool · sep:(n,n,Lmax) int32 · compact:(n,npr)
+    counts:(n,) — returns updated (adj, sep).
+    """
+    n = compact.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    ranks = t0 + jnp.arange(n_chunk, dtype=_rank_dtype())  # (T,)
+    sep_found, s_ids = _tests_s(c, adj, compact, counts, rows, ranks, tau, ell=ell, n_max=n_max)
+    return _commit(c, adj, sep, compact, counts, sep_found, ranks, s_ids, None, ell)
+
+
+# --------------------------------------------------------------------------
+# cuPC-E chunk: edge-major, no sharing (paper Alg. 4 faithful)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("ell", "n_chunk", "n_max"))
+def chunk_e(c, adj, sep, compact, counts, t0, tau, *, ell: int, n_chunk: int, n_max: int):
+    """Process combo-ranks [t0, t0+n_chunk) of every (row, neighbour-slot).
+
+    Every (i, p, t) cell performs an independent CI test, building and
+    inverting its own M2 — the paper's cuPC-E parallelisation (γ×β threads),
+    without the pseudo-inverse sharing of cuPC-S.
+    """
+    n, npr = compact.shape
+    table = _jtable(n_max)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    ranks = t0 + jnp.arange(n_chunk, dtype=_rank_dtype())  # (T,)
+    totals = table[jnp.clip(counts - 1, 0, n_max), ell]  # C(n'_i - 1, ell)
+    valid_rank = ranks[None, None, :] < totals[:, None, None]  # (n,1,T)
+
+    # combos exclude the target slot p: unrank from C(n'_i-1, ell), shift ≥ p
+    p_slots = jnp.arange(npr, dtype=jnp.int32)  # (npr,)
+    pos = _unrank_dyn(
+        ranks[None, None, :], (counts - 1)[:, None, None], npr, ell, table
+    )  # (n,1,T,ell) — positions in the p-removed row; broadcast over p then shift
+    pos = jnp.broadcast_to(pos, (n, npr, n_chunk, ell))
+    pos = pos + (pos >= p_slots[None, :, None, None]).astype(pos.dtype)
+    pos = jnp.clip(pos, 0, npr - 1)
+
+    s_ids = compact[rows[:, None, None, None], pos]  # (n,npr,T,ell)
+    s_ids = jnp.clip(s_ids, 0, n - 1)
+
+    j_ids = jnp.clip(compact, 0, n - 1)  # (n,npr)
+    m2 = c[s_ids[..., :, None], s_ids[..., None, :]]  # (n,npr,T,ell,ell)
+    if ell == 1:
+        g = 1.0 / jnp.maximum(m2, 1e-8)
+    else:
+        g = _inv_spd(m2)
+    ci_s = c[rows[:, None, None, None], s_ids]  # (n,npr,T,ell)
+    cj_s = c[j_ids[:, :, None, None], s_ids]
+    u_i = jnp.einsum("nptab,nptb->npta", g, ci_s)
+    var_i = 1.0 - jnp.einsum("npta,npta->npt", ci_s, u_i)
+    gw = jnp.einsum("nptab,nptb->npta", g, cj_s)
+    var_j = 1.0 - jnp.einsum("npta,npta->npt", cj_s, gw)
+    num = c[rows[:, None], j_ids][:, :, None] - jnp.einsum("npta,npta->npt", cj_s, u_i)
+    rho = num / jnp.sqrt(jnp.maximum(var_i * var_j, 1e-20))
+    indep = fisher_z(rho) <= tau  # (n,npr,T)
+
+    alive = adj[rows[:, None], j_ids] & (compact >= 0)  # (n,npr)
+    p_valid = p_slots[None, :] < counts[:, None]
+    mask = valid_rank & alive[:, :, None] & p_valid[:, :, None]
+    sep_found = jnp.swapaxes(indep & mask, 1, 2)  # → (n,T,npr) to share commit
+    s_ids_tp = jnp.swapaxes(s_ids, 1, 2)  # (n,T,npr,ell)
+    return _commit(c, adj, sep, compact, counts, sep_found, ranks, None, s_ids_tp, ell)
+
+
+# --------------------------------------------------------------------------
+# commit: removals + deterministic sepset recording
+# --------------------------------------------------------------------------
+def _winners(sep_found, ranks, s_ids_shared, s_ids_per_edge):
+    """Per-(row, slot) minimum separating rank within the chunk.
+
+    sep_found: (n_l,T,npr) → (t_win (n_l,npr), removed_slot (n_l,npr) bool,
+    s_win (n_l,npr,ell)). Row-local: safe to compute on a shard.
+    """
+    n_l, n_chunk, npr = sep_found.shape
+    imax = _imax()
+    rank_mat = jnp.where(sep_found, ranks[None, :, None], imax)  # (n_l,T,npr)
+    t_win = jnp.min(rank_mat, axis=1)
+    t_arg = jnp.argmin(rank_mat, axis=1)
+    removed_slot = t_win < imax
+    loc = jnp.arange(n_l, dtype=jnp.int32)
+    if s_ids_shared is not None:
+        s_win = s_ids_shared[loc[:, None], t_arg]  # (n_l,npr,ell)
+    else:
+        s_win = s_ids_per_edge[loc[:, None], t_arg, jnp.arange(npr)[None, :]]
+    return t_win, removed_slot, s_win
+
+
+def _global_commit(adj, sep, compact_full, rows_full, t_win, removed_slot, s_win, ell):
+    """Apply removals + sepsets to the GLOBAL adj/sep given full-width winner
+    arrays (t_win/removed_slot/s_win over all n rows, e.g. after all_gather).
+
+    Deterministic winner per undirected edge: lexicographic min of
+    (rank, endpoint-order) — see module docstring.
+    """
+    n = adj.shape[0]
+    imax = _imax()
+    j_ids = jnp.clip(compact_full, 0, n - 1)
+    order_bit = (rows_full[:, None] > j_ids).astype(_rank_dtype())
+    key = jnp.where(removed_slot, t_win * 2 + order_bit, imax)
+    key_mat = jnp.full((n, n), imax, dtype=_rank_dtype()).at[rows_full[:, None], j_ids].min(key)
+    # sepset writes: ONLY winner slots may scatter — padded compact slots
+    # clip onto column 0 and a last-writer-wins .set would stomp real
+    # records with zeros (caught by test_sepsets_certify_removals).
+    j_write = jnp.where(removed_slot, j_ids, n)  # losers → dump column n
+    s_mat = (
+        jnp.zeros((n, n + 1, ell), jnp.int32)
+        .at[rows_full[:, None], j_write]
+        .set(s_win)[:, :n]
+    )
+    final_key = jnp.minimum(key_mat, key_mat.T)
+    newly_removed = final_key < imax  # (n,n) symmetric
+    use_own = key_mat <= key_mat.T
+    s_final = jnp.where(use_own[..., None], s_mat, jnp.swapaxes(s_mat, 0, 1))
+
+    adj_new = adj & ~newly_removed
+    lmax = sep.shape[-1]
+    write = (newly_removed & adj)[..., None]  # only edges alive until now
+    sep_new = jnp.where(
+        write & (jnp.arange(lmax) < ell)[None, None, :],
+        jnp.pad(s_final, ((0, 0), (0, 0), (0, lmax - ell)), constant_values=-1),
+        sep,
+    )
+    return adj_new, sep_new
+
+
+def _commit(c, adj, sep, compact, counts, sep_found, ranks, s_ids_shared, s_ids_per_edge, ell):
+    """sep_found: (n,T,npr). Shared engines pass s_ids (n,T,ell); edge-major
+    engines pass per-edge sets (n,T,npr,ell)."""
+    n = adj.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    t_win, removed_slot, s_win = _winners(sep_found, ranks, s_ids_shared, s_ids_per_edge)
+    return _global_commit(adj, sep, compact, rows, t_win, removed_slot, s_win, ell)
+
+
+# --------------------------------------------------------------------------
+# host-side level driver
+# --------------------------------------------------------------------------
+def run_level(
+    c,
+    adj,
+    sep,
+    ell: int,
+    tau: float,
+    engine: str = "S",
+    cell_budget: int = 2**24,
+    chunk_fn_s=None,
+    chunk_fn_e=None,
+):
+    """Run one PC-stable level. Host loop over rank-chunks (early-termination
+    re-compaction happens implicitly through the `alive` snapshot).
+
+    Returns (adj, sep, stats-dict).
+    """
+    from .compact import compact_rows
+
+    n = c.shape[0]
+    counts_host = np.asarray(jax.device_get(jnp.sum(adj, axis=1)))
+    npr = int(counts_host.max(initial=0))
+    if npr - 1 < ell:
+        return adj, sep, {"skipped": True, "chunks": 0, "npr": npr}
+    compact, counts = compact_rows(adj, n_prime=npr)
+
+    if engine.upper() == "S":
+        total = math.comb(npr, ell)
+        per_rank_cells = n * npr * max(ell, 1) * max(ell, 1)
+        fn = chunk_fn_s or chunk_s
+    else:
+        total = math.comb(max(npr - 1, 0), ell)
+        per_rank_cells = n * npr * max(ell, 1) * max(ell, 1) * npr
+        fn = chunk_fn_e or chunk_e
+
+    n_chunk = max(1, min(total, cell_budget // max(per_rank_cells, 1)))
+    chunks = 0
+    for t0 in range(0, total, n_chunk):
+        adj, sep = fn(
+            c, adj, sep, compact, counts, jnp.asarray(t0, _rank_dtype()), tau,
+            ell=ell, n_chunk=n_chunk, n_max=npr,
+        )
+        chunks += 1
+    return adj, sep, {"skipped": False, "chunks": chunks, "npr": npr, "total_sets": total}

@@ -1,0 +1,1 @@
+from .synthetic_dag import GaussianDAG, sample_gaussian_dag  # noqa: F401

@@ -1,0 +1,3 @@
+from .elastic import remesh
+from .pipeline import pipeline_apply
+from .supervisor import Supervisor, TrainResult

@@ -1,0 +1,22 @@
+"""Elastic re-meshing: move a sharded state pytree onto a different mesh.
+
+On preemption/scale events the surviving hosts form a new (smaller or
+larger) mesh; every array is re-device_put against the new shardings.
+Because checkpoints store host arrays and the sharding planner derives
+specs from (config × mesh) alone, *any* topology change that keeps dim
+divisibility works — shrink 512→256, grow 256→512, or reshape axes.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def remesh(tree, spec_fn, new_mesh):
+    """spec_fn(new_mesh) -> pytree of NamedSharding matching ``tree``."""
+    shardings = spec_fn(new_mesh)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    shard_flat = treedef.flatten_up_to(shardings)
+    out = [
+        jax.device_put(jax.device_get(x), s) for x, s in zip(flat, shard_flat)
+    ]
+    return treedef.unflatten(out)

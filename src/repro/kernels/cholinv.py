@@ -1,0 +1,99 @@
+"""Batched small-SPD inverse kernel — the cuPC-S pseudo-inverse, TPU style.
+
+One CUDA thread inverts one ℓ×ℓ matrix in cuPC-S; here a *vector lane*
+inverts one: matrices are laid out struct-of-arrays as (ℓ, ℓ, Bs, 128) so
+every scalar step of an unrolled Cholesky → forward-substitution → Gram
+inverse touches a (bs, 128) VMEM tile, keeping all 8×128 VPU lanes busy.
+ℓ is a static kernel parameter (the PC level), so all loops fully unroll.
+
+Also emits the shared per-set vectors cuPC-S reuses across the row sweep:
+u_i = G·C(i,S) and var_i = 1 − C(i,S)·u_i.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cholinv_kernel(m2_ref, ci_ref, g_ref, u_ref, var_ref, *, ell: int, jitter: float):
+    # load a[i][j] as (bs, 128) lane tiles
+    a = [[m2_ref[i, j] + (jitter if i == j else 0.0) for j in range(ell)] for i in range(ell)]
+    eps = 1e-20
+
+    # Cholesky: a = L Lᵀ (unrolled; ℓ ≤ MAX_LEVEL)
+    l = [[None] * ell for _ in range(ell)]
+    for j in range(ell):
+        s = a[j][j]
+        for k in range(j):
+            s = s - l[j][k] * l[j][k]
+        l[j][j] = jnp.sqrt(jnp.maximum(s, eps))
+        inv_ljj = 1.0 / l[j][j]
+        for i in range(j + 1, ell):
+            s = a[i][j]
+            for k in range(j):
+                s = s - l[i][k] * l[j][k]
+            l[i][j] = s * inv_ljj
+
+    # M = L⁻¹ (forward substitution, unrolled)
+    minv = [[None] * ell for _ in range(ell)]
+    for j in range(ell):
+        minv[j][j] = 1.0 / l[j][j]
+        for i in range(j + 1, ell):
+            s = l[i][j] * minv[j][j]
+            for k in range(j + 1, i):
+                s = s + l[i][k] * minv[k][j]
+            minv[i][j] = -s / l[i][i]
+
+    # G = MᵀM  (upper triangle by symmetry)
+    ci = [ci_ref[i] for i in range(ell)]
+    u = [0.0] * ell
+    for i in range(ell):
+        for j in range(i, ell):
+            s = 0.0
+            for k in range(j, ell):
+                s = s + minv[k][i] * minv[k][j]
+            g_ref[i, j] = s
+            if i != j:
+                g_ref[j, i] = s
+            u[i] = u[i] + s * ci[j]
+            if i != j:
+                u[j] = u[j] + s * ci[i]
+
+    var = 1.0
+    for i in range(ell):
+        u_ref[i] = u[i]
+        var = var - ci[i] * u[i]
+    var_ref[...] = var
+
+
+@functools.partial(jax.jit, static_argnames=("ell", "bs", "interpret"))
+def cholinv_kernel(
+    m2: jax.Array, ci_s: jax.Array, *, ell: int, bs: int = 8,
+    jitter: float = 1e-8, interpret: bool = True,
+):
+    """m2: (ℓ,ℓ,Bs,128) fp32 SPD batch; ci_s: (ℓ,Bs,128).
+    Returns g (ℓ,ℓ,Bs,128), u_i (ℓ,Bs,128), var_i (Bs,128)."""
+    _, _, bs_total, lane = m2.shape
+    grid = (bs_total // bs,)
+    return pl.pallas_call(
+        functools.partial(_cholinv_kernel, ell=ell, jitter=jitter),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ell, ell, bs, lane), lambda b: (0, 0, b, 0)),
+            pl.BlockSpec((ell, bs, lane), lambda b: (0, b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ell, ell, bs, lane), lambda b: (0, 0, b, 0)),
+            pl.BlockSpec((ell, bs, lane), lambda b: (0, b, 0)),
+            pl.BlockSpec((bs, lane), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(m2.shape, jnp.float32),
+            jax.ShapeDtypeStruct(ci_s.shape, jnp.float32),
+            jax.ShapeDtypeStruct((bs_total, lane), jnp.float32),
+        ],
+        interpret=interpret,
+    )(m2, ci_s)

@@ -1,0 +1,108 @@
+"""Fused dense level-1 kernel — the beyond-paper ℓ=1 specialisation.
+
+ρ(i,j|k) = (C_ij − C_ik·C_jk) / √((1−C_ik²)(1−C_jk²)) needs NO matrix
+inverse, so the entire level collapses to an elementwise cube swept in
+(bi, bj, bk) VMEM tiles (Fig. 6 of the paper shows ℓ=1 is 49–83 % of total
+runtime — this kernel erases it). Grid (n/bi, n/bj, n/bk) with k innermost;
+two scratch accumulators carry the per-edge `any separator` flag and the
+minimum separating k (for SepSet) across k-steps.
+
+Work filter (paper §4.1 early termination): cells are masked by
+adjacency — k must neighbour i or j in G′, edge (i,j) must still be alive.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_BIG = 2**30  # python int: jnp consts must not be captured by kernels
+
+
+def _level1_kernel(
+    tau_ref, c_ij_ref, c_ik_ref, c_jk_ref, adj_ij_ref, adj_ik_ref, adj_jk_ref,
+    rem_ref, kwin_ref, found_acc, kmin_acc, *, bi: int, bj: int,
+    bk: int, k_steps: int,
+):
+    tau = tau_ref[0]
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        found_acc[...] = jnp.zeros_like(found_acc)
+        kmin_acc[...] = jnp.full_like(kmin_acc, _BIG)
+
+    cij = c_ij_ref[...]  # (bi, bj)
+    cik = c_ik_ref[...]  # (bi, bk)
+    cjk = c_jk_ref[...]  # (bj, bk)
+
+    num = cij[:, :, None] - cik[:, None, :] * cjk[None, :, :]
+    den2 = (1.0 - cik * cik)[:, None, :] * (1.0 - cjk * cjk)[None, :, :]
+    rho = num * jax.lax.rsqrt(jnp.maximum(den2, 1e-20))
+    rho = jnp.clip(rho, -0.9999999, 0.9999999)
+    indep = jnp.abs(jnp.arctanh(rho)) <= tau  # (bi, bj, bk)
+
+    # masks: k ∈ adj(i) ∪ adj(j); k ≠ i, k ≠ j; edge alive
+    kmask = (adj_ik_ref[...] > 0)[:, None, :] | (adj_jk_ref[...] > 0)[None, :, :]
+    gi = pl.program_id(0) * bi + jax.lax.broadcasted_iota(jnp.int32, (bi, bk), 0)
+    gj = pl.program_id(1) * bj + jax.lax.broadcasted_iota(jnp.int32, (bj, bk), 0)
+    gk_i = pl.program_id(2) * bk + jax.lax.broadcasted_iota(jnp.int32, (bi, bk), 1)
+    gk_j = pl.program_id(2) * bk + jax.lax.broadcasted_iota(jnp.int32, (bj, bk), 1)
+    kmask &= (gk_i != gi)[:, None, :] & (gk_j != gj)[None, :, :]
+    alive = (adj_ij_ref[...] > 0)
+
+    sep = indep & kmask & alive[:, :, None]
+    found_acc[...] |= jnp.any(sep, axis=-1).astype(jnp.uint8) > 0
+    gk3 = pl.program_id(2) * bk + jax.lax.broadcasted_iota(jnp.int32, (bi, bj, bk), 2)
+    kmin_acc[...] = jnp.minimum(
+        kmin_acc[...], jnp.min(jnp.where(sep, gk3, _BIG), axis=-1)
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        rem_ref[...] = found_acc[...].astype(jnp.uint8)
+        kwin_ref[...] = kmin_acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bj", "bk", "interpret"))
+def level1_dense_kernel(
+    c: jax.Array, adj: jax.Array, tau: float, *, bi: int = 8, bj: int = 128,
+    bk: int = 128, interpret: bool = True,
+):
+    """c: (n,n) fp32, adj: (n,n) uint8 (G′ snapshot), n % lcm(bi,bj,bk) == 0.
+
+    Returns (removed (n,n) uint8, kwin (n,n) int32)."""
+    n = c.shape[0]
+    k_steps = n // bk
+    grid = (n // bi, n // bj, k_steps)
+    kern = functools.partial(
+        _level1_kernel, bi=bi, bj=bj, bk=bk, k_steps=k_steps
+    )
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),  # C_ij
+            pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),  # C_ik
+            pl.BlockSpec((bj, bk), lambda i, j, k: (j, k)),  # C_jk
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),  # adj_ij
+            pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),  # adj_ik
+            pl.BlockSpec((bj, bk), lambda i, j, k: (j, k)),  # adj_jk
+        ],
+        out_specs=[
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, n), jnp.uint8),
+            jax.ShapeDtypeStruct((n, n), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bi, bj), jnp.bool_),
+            pltpu.VMEM((bi, bj), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tau_arr, c, c, c, adj, adj, adj)

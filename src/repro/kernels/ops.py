@@ -1,0 +1,156 @@
+"""jit'd public wrappers around the Pallas kernels (padding, layout, fallback).
+
+On non-TPU backends the kernels run in interpret mode (Python semantics on
+CPU) — bit-for-bit the algorithm that compiles for TPU. `interpret=None`
+auto-detects. The wrappers accept the natural batch-first layouts used by
+core/levels.py and do the SoA transposes the kernels want.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import cholinv as _cholinv
+from . import cisweep as _cisweep
+from . import corr as _corr
+from . import level0 as _level0
+from . import level1 as _level1
+
+LANE = 128
+
+
+def _interp(flag):
+    return jax.default_backend() != "tpu" if flag is None else flag
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------- correlation
+def correlation(x: jax.Array, *, bn: int = 256, bm: int = 512, interpret=None) -> jax.Array:
+    """Correlation matrix from samples x (m, n) via the tiled MXU kernel."""
+    m, n = x.shape
+    x = x.astype(jnp.float32)
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    std = jnp.sqrt(jnp.mean(xc * xc, axis=0, keepdims=True))
+    xn = xc / jnp.maximum(std, 1e-30)
+    bm_eff = min(bm, max(LANE, (m // LANE) * LANE)) if m >= LANE else m
+    xn = _pad_to(_pad_to(xn, bn, 1), bm_eff, 0)  # zero rows add nothing
+    c_raw = _corr.corr_matmul(xn, bn=bn, bm=bm_eff, interpret=_interp(interpret))
+    c_raw = c_raw * (xn.shape[0] / m)  # kernel divides by padded m
+    c = jnp.clip(c_raw[:n, :n], -1.0, 1.0)
+    return c.at[jnp.arange(n), jnp.arange(n)].set(1.0)
+
+
+# -------------------------------------------------------------------- level 0
+def level0(c: jax.Array, tau: float, *, block: int = 256, interpret=None) -> jax.Array:
+    n = c.shape[0]
+    b = min(block, max(LANE, n))
+    cp = _pad_to(_pad_to(c, b, 0), b, 1)
+    adj = _level0.level0_kernel(cp, tau, bi=b, bj=b, interpret=_interp(interpret))
+    return adj[:n, :n].astype(bool)
+
+
+# -------------------------------------------------------- level 1 (dense cube)
+def level1_dense(c: jax.Array, adj: jax.Array, tau: float, *, interpret=None):
+    """Returns (removed (n,n) bool, kwin (n,n) int32 min separating k)."""
+    n = c.shape[0]
+    bi, bj, bk = 8, min(128, _ceil_mult(n, LANE)), min(128, _ceil_mult(n, LANE))
+    cp = _pad_to(_pad_to(c, max(bi, bj, bk), 0), max(bi, bj, bk), 1)
+    ap = _pad_to(_pad_to(adj.astype(jnp.uint8), max(bi, bj, bk), 0), max(bi, bj, bk), 1)
+    rem, kwin = _level1.level1_dense_kernel(
+        cp, ap, tau, bi=bi, bj=bj, bk=bk, interpret=_interp(interpret)
+    )
+    return rem[:n, :n].astype(bool), kwin[:n, :n]
+
+
+def _ceil_mult(n, m):
+    return ((n + m - 1) // m) * m
+
+
+# ------------------------------------------------- cuPC-S fused batch (ℓ ≥ 2)
+def ci_shared(
+    m2: jax.Array, ci_s: jax.Array, cj_s: jax.Array, cij: jax.Array,
+    mask: jax.Array, tau: float, *, ell: int, interpret=None,
+):
+    """Batch-first API: m2 (B,ℓ,ℓ), ci_s (B,ℓ), cj_s (B,P,ℓ), cij/mask (B,P)
+    → indep∧mask (B,P) bool. Pads B to 8·128 and P to 8."""
+    b, p = cij.shape
+    interpret = _interp(interpret)
+
+    bs_mult = 8 * LANE
+    b_pad = _ceil_mult(max(b, bs_mult), bs_mult)
+    p_pad = _ceil_mult(max(p, 8), 8)
+    bs_total = b_pad // LANE
+
+    def soa(x, pad_shape):  # (B, ...) -> (..., Bs, LANE)
+        x = jnp.pad(x, [(0, b_pad - b)] + [(0, q) for q in pad_shape])
+        perm = tuple(range(1, x.ndim)) + (0,)
+        x = jnp.transpose(x, perm)
+        return x.reshape(x.shape[:-1] + (bs_total, LANE))
+
+    m2_k = soa(m2.astype(jnp.float32), [0, 0])  # (ℓ,ℓ,Bs,L)
+    # SPD-pad the batch tail with identity so Cholesky stays finite
+    if b_pad != b:
+        eye = jnp.eye(ell, dtype=jnp.float32)
+        tail_mask = (jnp.arange(b_pad) >= b).reshape(bs_total, LANE)
+        m2_k = jnp.where(tail_mask[None, None], eye[:, :, None, None], m2_k)
+    ci_k = soa(ci_s.astype(jnp.float32), [0])  # (ℓ,Bs,L)
+    g, u, var = _cholinv.cholinv_kernel(m2_k, ci_k, ell=ell, interpret=interpret)
+
+    cjs_k = soa(cj_s.astype(jnp.float32), [p_pad - p, 0])  # (P,ℓ,Bs,L)
+    cij_k = soa(cij.astype(jnp.float32), [p_pad - p])  # (P,Bs,L)
+    mask_k = soa(mask.astype(jnp.uint8), [p_pad - p])
+    indep = _cisweep.cisweep_kernel(
+        g, u, var, cjs_k, cij_k, mask_k, tau, ell=ell, interpret=interpret
+    )  # (P,Bs,L) uint8
+    out = indep.reshape(p_pad, b_pad).T[:b, :p]
+    return out.astype(bool)
+
+
+# ------------------------------------- kernel-backed drop-in for levels.chunk_s
+@functools.partial(jax.jit, static_argnames=("ell", "n_chunk", "n_max"))
+def chunk_s_kernel(c, adj, sep, compact, counts, t0, tau, *, ell, n_chunk, n_max):
+    """Same contract as core.levels.chunk_s but the per-set inverse + CI sweep
+    run in the Pallas kernels (gathers stay in XLA, which excels at them)."""
+    from repro.core import levels as L
+
+    n, npr = compact.shape
+    table = L._jtable(n_max)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
+    total = table[jnp.clip(counts, 0, n_max), ell]
+    valid_set = ranks[None, :] < total[:, None]
+
+    pos = L._unrank_dyn(ranks[None, :], counts[:, None], npr, ell, table)
+    pos = jnp.where(valid_set[..., None], pos, 0)
+    s_ids = jnp.take_along_axis(compact, pos.reshape(n, -1), axis=1).reshape(n, n_chunk, ell)
+    s_ids = jnp.clip(s_ids, 0, n - 1)
+
+    m2 = c[s_ids[..., :, None], s_ids[..., None, :]]
+    ci_s = c[rows[:, None, None], s_ids]
+    j_ids = jnp.clip(compact, 0, n - 1)
+    cj_s = c[j_ids[:, None, :, None], s_ids[:, :, None, :]]
+    cij = jnp.broadcast_to(c[rows[:, None], j_ids][:, None, :], (n, n_chunk, npr))
+
+    in_s = jnp.any(j_ids[:, None, :, None] == s_ids[:, :, None, :], axis=-1)
+    alive = adj[rows[:, None], j_ids] & (compact >= 0)
+    mask = valid_set[:, :, None] & ~in_s & alive[:, None, :]
+
+    bsz = n * n_chunk
+    sep_found = ci_shared(
+        m2.reshape(bsz, ell, ell), ci_s.reshape(bsz, ell),
+        cj_s.reshape(bsz, npr, ell), cij.reshape(bsz, npr),
+        mask.reshape(bsz, npr), tau, ell=ell,
+    ).reshape(n, n_chunk, npr)
+
+    return L._commit(c, adj, sep, compact, counts, sep_found, ranks, s_ids, None, ell)

@@ -1,0 +1,268 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the right step function (train_step for train
+shapes, prefill/serve_step for inference shapes), jits it with the
+sharding planner's in/out shardings on the production mesh, lowers with
+ShapeDtypeStruct stand-ins (NO allocation at full scale), compiles, and
+records:
+
+  * memory_analysis()  — proves the per-chip working set fits,
+  * cost_analysis()    — per-chip HLO FLOPs / bytes for §Roofline,
+  * the collective schedule parsed from the optimized HLO.
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as R
+from repro.models import sharding as SH
+from repro.roofline import collective_bytes, roofline_report
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _mem_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend without memory analysis
+        return {"error": repr(e)}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_bytes_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+        )
+    return out
+
+
+def _depths(cfg):
+    """Two reduced depths for cost extrapolation (XLA HloCostAnalysis counts
+    a while body ONCE, not ×trip-count — scan-over-layers graphs would
+    under-report FLOPs/bytes/collectives by ~L×). Chosen to preserve the
+    arch's per-layer structure: deepseek keeps its leading dense layer,
+    zamba2 spans whole (mamba×6 + shared-attn site) periods."""
+    if cfg.family == "hybrid":
+        e = cfg.shared_attn_every
+        return e, 2 * e
+    if cfg.moe is not None and cfg.n_dense_layers:
+        return cfg.n_dense_layers + 1, cfg.n_dense_layers + 2
+    return 2, 4
+
+
+def _variant(cfg, depth):
+    import dataclasses
+
+    kw = {"n_layers": depth}
+    if cfg.n_enc_layers:
+        kw["n_enc_layers"] = depth
+    return dataclasses.replace(cfg, **kw)
+
+
+def _extrapolate(fa: dict, fb: dict, la: int, lb: int, layers: int) -> dict:
+    out = {}
+    for k in set(fa) | set(fb):
+        va, vb = float(fa.get(k, 0.0)), float(fb.get(k, 0.0))
+        slope = (vb - va) / (lb - la)
+        out[k] = va + (layers - la) * slope
+    return out
+
+
+def build_cell(cfg, shape: str, mesh, serve_dtype=jnp.bfloat16, tcfg=None):
+    """Returns (jitted_fn, abstract_args, params_abs) for one dry-run cell."""
+    cell = SHAPES[shape]
+    batch_abs = R.input_specs(cfg, cell)
+    bspecs = SH.batch_specs(cfg, batch_abs, mesh)
+
+    if cell.kind == "train":
+        from repro.configs import TrainConfig
+
+        if tcfg is None:
+            tcfg = TrainConfig(grad_accum=4)  # 4 microbatches: activation ÷4
+        params_abs = R.abstract_params(cfg, jnp.dtype(tcfg.param_dtype))
+        opt_abs = R.abstract_opt_state(params_abs, tcfg.master_fp32)
+        pspecs = SH.param_specs(cfg, params_abs, mesh)
+        ospecs = SH.opt_specs(cfg, opt_abs, mesh, pspecs)
+        step = R.make_train_step(cfg, tcfg)
+        metr = SH.replicated(mesh, jax.eval_shape(step, params_abs, opt_abs, batch_abs)[2])
+        fn = jax.jit(
+            step,
+            in_shardings=(pspecs, ospecs, bspecs),
+            out_shardings=(pspecs, ospecs, metr),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_abs, opt_abs, batch_abs), params_abs
+
+    params_abs = R.abstract_params(cfg, serve_dtype)
+    pspecs = SH.param_specs(cfg, params_abs, mesh)
+    dp, _ = SH.mesh_axes(mesh)
+
+    if cell.kind == "prefill":
+        step = R.make_prefill_step(cfg, t_max=cell.seq_len)
+        cache_abs = jax.eval_shape(
+            lambda p, b: step(p, b)[1], params_abs, batch_abs
+        )
+        cspecs = SH.cache_specs(cfg, cache_abs, mesh)
+        logits_spec = SH.batch_specs(cfg, jax.eval_shape(lambda p, b: step(p, b)[0], params_abs, batch_abs), mesh)
+        fn = jax.jit(step, in_shardings=(pspecs, bspecs), out_shardings=(logits_spec, cspecs))
+        return fn, (params_abs, batch_abs), params_abs
+
+    # decode: one new token against a seq_len-deep cache
+    step = R.make_decode_step(cfg)
+    cache_abs = R.abstract_cache(cfg, cell.global_batch, cell.seq_len)
+    cspecs = SH.cache_specs(cfg, cache_abs, mesh)
+    logits_abs = jax.eval_shape(step, params_abs, batch_abs, cache_abs)[0]
+    logits_spec = SH.batch_specs(cfg, logits_abs, mesh)
+    fn = jax.jit(
+        step,
+        in_shardings=(pspecs, bspecs, cspecs),
+        out_shardings=(logits_spec, cspecs),
+        donate_argnums=(2,),
+    )
+    return fn, (params_abs, batch_abs, cache_abs), params_abs
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, force=False) -> dict:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS / f"{arch}__{shape}__{mesh_kind}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = ARCHS[arch]
+    cell = SHAPES[shape]
+    ok, reason = R.supports_cell(cfg, cell)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind, "ts": time.time()}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = mesh.devices.size
+    _COST_KEYS = ("flops", "bytes accessed", "transcendentals")
+
+    def _compile(cfg_v, cost_mode=False):
+        from repro.models import costmode
+
+        costmode.UNROLL = cost_mode
+        costmode.FLASH_BLOCK = 4096 if cost_mode else None
+        try:
+            fn, args, pabs = build_cell(cfg_v, shape, mesh)
+            compiled = fn.lower(*args).compile()
+        finally:
+            costmode.UNROLL = False
+            costmode.FLASH_BLOCK = None
+        cost = {
+            k: float(v)
+            for k, v in dict(compiled.cost_analysis() or {}).items()
+            if k in _COST_KEYS
+        }
+        coll = collective_bytes(compiled.as_text())
+        return compiled, cost, coll, pabs
+
+    try:
+        with mesh:
+            t0 = time.time()
+            compiled, cost_raw, coll_raw, params_abs = _compile(cfg)
+            t_compile = time.time() - t0
+            # depth extrapolation (while bodies are cost-counted once) —
+            # variants compile with ALL scans unrolled (costmode)
+            la, lb = _depths(cfg)
+            _, cost_a, coll_a, _ = _compile(_variant(cfg, la), cost_mode=True)
+            _, cost_b, coll_b, _ = _compile(_variant(cfg, lb), cost_mode=True)
+            cost = _extrapolate(cost_a, cost_b, la, lb, cfg.n_layers)
+            coll = {
+                k: _extrapolate(coll_a[k], coll_b[k], la, lb, cfg.n_layers)
+                for k in coll_a
+                if isinstance(coll_a[k], dict)
+            }
+            coll["total_bytes"] = sum(v["bytes"] for v in coll.values())
+            rec.update(
+                status="ok",
+                n_chips=n_chips,
+                compile_s=round(t_compile, 2),
+                memory=_mem_dict(compiled),
+                cost=cost,
+                cost_raw_while_once=cost_raw,
+                collectives=coll,
+                collectives_raw_while_once=coll_raw,
+                depth_extrapolation={"la": la, "lb": lb, "layers": cfg.n_layers},
+                roofline=roofline_report(cost, coll, cfg, cell, params_abs, n_chips),
+            )
+    except Exception as e:
+        rec.update(status="error", error=repr(e), trace=traceback.format_exc()[-4000:])
+    out_path.write_text(json.dumps(rec, indent=1, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            rec = run_cell(arch, shape, mk, force=args.force)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                r = rec["roofline"]
+                extra = (
+                    f" dom={r['dominant']} tc={r['t_compute_s']:.3e}s"
+                    f" tm={r['t_memory_s']:.3e}s tx={r['t_collective_s']:.3e}s"
+                    f" compile={rec['compile_s']:.0f}s"
+                )
+            elif status == "error":
+                failures += 1
+                extra = " " + rec["error"][:120]
+            print(f"[dryrun] {arch:20s} {shape:12s} {mk:6s} {status}{extra}", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Production mesh factory. A FUNCTION (not module-level state) so that
+importing this module never touches jax device initialization."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model) — ``pod``
+    is pure DP across the slow inter-pod links."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pc_mesh(n_devices: int | None = None):
+    """Flat 1-D mesh for the PC engines (rows shard over everything)."""
+    devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
+    return jax.sharding.Mesh(devs, ("rows",))

@@ -1,0 +1,250 @@
+"""Attention mixers: GQA/MQA (RoPE, qk-norm, bias), MLA (DeepSeek-V2), and
+cross-attention — each with train/prefill forms plus a single-token decode
+form against a functional KV cache.
+
+KV cache layout: dict(k=(B, T_max, KV, dh), v=(B, T_max, KV, dh), len=())
+MLA cache (compressed — the paper point of MLA): dict(ckv=(B,T,kv_lora),
+kpe=(B,T,d_rope), len=()) — 576 floats/token instead of 2·H·dh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG = -1e30
+
+
+# =================================================================== GQA/MQA
+def gqa_init(rng, cfg, dtype) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), dtype),
+        "wk": dense_init(ks[1], (d, kv, dh), dtype),
+        "wv": dense_init(ks[2], (d, kv, dh), dtype),
+        "wo": dense_init(ks[3], (h, dh, d), dtype, scale=(h * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((kv, dh), dtype)
+        p["bv"] = jnp.zeros((kv, dh), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, dtype)
+        p["k_norm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def _qkv(p, cfg, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q:(B,Tq,H,dh) k/v:(B,Tk,KV,dh) grouped; mask:(B,Tq,Tk) or None."""
+    b, tq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, tq, kvh, g, dh)
+    logits = jnp.einsum("btkgd,bskd->bkgts", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None], logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkgts,bskd->btkgd", w, v)
+    return o.reshape(b, tq, h, dh)
+
+
+def gqa_forward(p, cfg, x, positions, mask):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    ``mask`` is a spec tuple ("causal"|"prefix"|"none", prefix_len) — the
+    (B,T,T) tensor is never materialized; attention runs blocked (flash)."""
+    from .flash import flash_attention
+
+    q, k, v = _qkv(p, cfg, x, positions)
+    b, t, h, dh = q.shape
+    kvh = k.shape[2]
+    kind, prefix = mask if mask is not None else ("none", 0)
+    qg = q.reshape(b, t, kvh, h // kvh, dh)
+    o = flash_attention(qg, k, v, cfg.head_dim ** -0.5, kind, prefix)
+    o = o.reshape(b, t, h, dh)
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(x.dtype)), (k, v)
+
+
+def gqa_decode(p, cfg, x, cache):
+    """x: (B, 1, D). cache: {k, v, len}. Returns (out, cache')."""
+    pos = jnp.full((x.shape[0], 1), cache["len"], jnp.int32)
+    q, k1, v1 = _qkv(p, cfg, x, pos)
+    k = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype), (0, cache["len"], 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype), (0, cache["len"], 0, 0))
+    t_max = k.shape[1]
+    mask = (jnp.arange(t_max)[None, None, :] <= cache["len"])  # (1,1,Tk)
+    o = _sdpa(q, k, v, jnp.broadcast_to(mask, (x.shape[0], 1, t_max)), cfg.head_dim ** -0.5)
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v, "len": cache["len"] + 1}
+
+
+def gqa_cache_init(cfg, batch: int, t_max: int, dtype) -> dict:
+    kv, dh = cfg.n_kv, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, t_max, kv, dh), dtype),
+        "v": jnp.zeros((batch, t_max, kv, dh), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ======================================================================= MLA
+def mla_init(rng, cfg, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(rng, 8)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora), dtype),
+        "q_a_norm": rmsnorm_init(m.q_lora, dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora, h, m.d_nope + m.d_rope), dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora + m.d_rope), dtype),
+        "kv_a_norm": rmsnorm_init(m.kv_lora, dtype),
+        "wk_b": dense_init(ks[3], (m.kv_lora, h, m.d_nope), dtype),
+        "wv_b": dense_init(ks[4], (m.kv_lora, h, m.d_v), dtype),
+        "wo": dense_init(ks[5], (h, m.d_v, d), dtype, scale=(h * m.d_v) ** -0.5),
+    }
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    qa = rmsnorm(p["q_a_norm"], x @ p["wq_a"].astype(dt), cfg.norm_eps)
+    q = jnp.einsum("btl,lhk->bthk", qa, p["wq_b"].astype(dt))
+    q_nope, q_pe = q[..., : m.d_nope], q[..., m.d_nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_ckv(p, cfg, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    kv = x @ p["wkv_a"].astype(dt)
+    ckv = rmsnorm(p["kv_a_norm"], kv[..., : m.kv_lora], cfg.norm_eps)
+    kpe = apply_rope(kv[..., None, m.kv_lora:], positions, cfg.rope_theta)[..., 0, :]
+    return ckv, kpe  # (B,T,kv_lora), (B,T,d_rope)
+
+
+def mla_forward(p, cfg, x, positions, mask):
+    """Prefill/train: expand k/v per head (FLOP-optimal for long sequences).
+
+    The two-term MLA score q_nope·k_nope + q_pe·k_pe is folded into ONE
+    blocked attention by concatenating the rotary part onto the head dim
+    (k_pe broadcast across heads) — so the flash path applies unchanged.
+    Returns (out, (ckv, kpe)) — the cache stays COMPRESSED."""
+    from .flash import flash_attention
+
+    m = cfg.mla
+    dt = x.dtype
+    q_nope, q_pe = _mla_q(p, cfg, x, positions)
+    ckv, kpe = _mla_ckv(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsl,lhk->bshk", ckv, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsl,lhk->bshk", ckv, p["wv_b"].astype(dt))
+    b, t, h, _ = q_nope.shape
+    s = ckv.shape[1]
+    qcat = jnp.concatenate([q_nope, q_pe], -1)[:, :, :, None, :]    # KV=H, G=1
+    kcat = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe[:, :, None, :], (b, s, h, m.d_rope))], -1
+    )
+    scale = (m.d_nope + m.d_rope) ** -0.5
+    kind, prefix = mask if mask is not None else ("none", 0)
+    o = flash_attention(qcat, kcat, v, scale, kind, prefix)[:, :, :, 0, :]
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    return out, (ckv, kpe)
+
+
+def mla_decode(p, cfg, x, cache):
+    """Absorbed decode (matmul-absorption trick): scores and context are
+    computed in the 512-d compressed space — cache traffic per token is
+    kv_lora + d_rope floats, the technique's entire point."""
+    m = cfg.mla
+    dt = x.dtype
+    pos = jnp.full((x.shape[0], 1), cache["len"], jnp.int32)
+    q_nope, q_pe = _mla_q(p, cfg, x, pos)  # (B,1,H,·)
+    ckv1, kpe1 = _mla_ckv(p, cfg, x, pos)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv1.astype(cache["ckv"].dtype), (0, cache["len"], 0))
+    kpe = jax.lax.dynamic_update_slice(cache["kpe"], kpe1.astype(cache["kpe"].dtype), (0, cache["len"], 0))
+    # absorb W_uk into q:  q_eff (B,1,H,kv_lora)
+    q_eff = jnp.einsum("bthk,lhk->bthl", q_nope, p["wk_b"].astype(dt))
+    scale = (m.d_nope + m.d_rope) ** -0.5
+    logits = (
+        jnp.einsum("bthl,bsl->bhts", q_eff, ckv)
+        + jnp.einsum("bthk,bsk->bhts", q_pe, kpe)
+    ).astype(jnp.float32) * scale
+    t_max = ckv.shape[1]
+    mask = jnp.arange(t_max)[None, None, None, :] <= cache["len"]
+    logits = jnp.where(mask, logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhts,bsl->bthl", w, ckv)  # compressed context
+    o = jnp.einsum("bthl,lhk->bthk", ctx, p["wv_b"].astype(dt))  # absorb W_uv
+    out = jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(dt))
+    return out, {"ckv": ckv, "kpe": kpe, "len": cache["len"] + 1}
+
+
+def mla_cache_init(cfg, batch: int, t_max: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, t_max, m.kv_lora), dtype),
+        "kpe": jnp.zeros((batch, t_max, m.d_rope), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ============================================================ cross-attention
+def cross_init(rng, cfg, dtype) -> dict:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h, dh), dtype),
+        "wk": dense_init(ks[1], (d, h, dh), dtype),
+        "wv": dense_init(ks[2], (d, h, dh), dtype),
+        "wo": dense_init(ks[3], (h, dh, d), dtype, scale=(h * dh) ** -0.5),
+    }
+
+
+def cross_kv(p, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+def cross_forward(p, cfg, x, k, v):
+    from .flash import flash_attention
+
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    b, t, h, dh = q.shape
+    o = flash_attention(q[:, :, :, None, :], k, v, cfg.head_dim ** -0.5, "none", 0)
+    return jnp.einsum("bthk,hkd->btd", o[:, :, :, 0, :], p["wo"].astype(dt))
+
+
+# ------------------------------------------------------------------- masks
+def causal_mask(b, t):
+    m = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.broadcast_to(m, (b, t, t))
+
+
+def prefix_lm_mask(b, t, prefix_len: int):
+    """Full attention within [0, prefix); causal after (PaliGemma-style)."""
+    m = jnp.tril(jnp.ones((t, t), bool))
+    m = m | (jnp.arange(t)[None, :] < prefix_len)
+    return jnp.broadcast_to(m, (b, t, t))

@@ -1,0 +1,38 @@
+"""Cost-analysis mode: XLA's HloCostAnalysis counts a while-loop body ONCE
+(trip count is invisible to it), so any scan-built graph under-reports
+FLOPs/bytes/collectives. The dry-run therefore compiles reduced-depth
+variants with every scan FULLY UNROLLED (this module's switch) and
+extrapolates per-layer slopes to full depth. Production lowering keeps
+scans rolled — this flag exists only during cost-variant tracing.
+"""
+from __future__ import annotations
+
+import jax
+
+UNROLL = False          # unroll every model scan when True
+FLASH_BLOCK = None      # widen flash blocks in cost mode (fewer copies,
+                        # identical FLOPs — block size never changes them)
+
+
+def scan(f, init, xs=None, length=None, unroll=None, **kw):
+    if UNROLL and unroll is None:
+        unroll = True
+    return jax.lax.scan(f, init, xs, length=length, unroll=unroll or 1, **kw)
+
+
+def flash_block(requested: int) -> int:
+    return max(requested, FLASH_BLOCK) if (UNROLL and FLASH_BLOCK) else requested
+
+
+MAX_CHUNK_COPIES = 8
+
+
+def chunk_size(q: int, t: int) -> int:
+    """SSM/RWKV chunk length in cost mode: cap unrolled copies at
+    MAX_CHUNK_COPIES. Slightly inflates the (small) intra-chunk term —
+    the projection matmuls dominating the FLOP count are unaffected."""
+    if UNROLL:
+        import math
+
+        return max(q, math.ceil(t / MAX_CHUNK_COPIES))
+    return q

@@ -1,0 +1,160 @@
+"""Blocked (flash) attention in pure JAX with a hand-written backward.
+
+Memory is O(T·block) instead of O(T²): the softmax is computed online
+over key blocks inside a ``lax.scan``; the backward recomputes each
+block's logits from the saved row-logsumexp (standard FlashAttention-2
+dataflow). A ``jax.custom_vjp`` is required — autodiff through the fwd
+scan would stash every block's probabilities and resurrect the T² term.
+
+This is the ref/dry-run implementation; kernels/ carries the same
+dataflow as a Pallas TPU kernel for the attention hot spot. GQA is
+native: q is grouped (B, Tq, KV, G, dh) against k/v (B, Tk, KV, dh).
+
+Masks are *specs*, not materialized (B,T,T) tensors:
+  ("causal", 0)      standard decoder mask
+  ("prefix", p)      PaliGemma prefix-LM: full attention on [0, p)
+  ("none", 0)        encoder / cross attention
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import costmode
+
+NEG = -1e30
+
+
+def _block_bias(q0, tq, k0, bk, kind: str, prefix: int):
+    """(tq, bk) additive bias for query rows [q0, q0+tq) vs keys [k0, k0+bk)."""
+    qpos = q0 + jnp.arange(tq)[:, None]
+    kpos = k0 + jnp.arange(bk)[None, :]
+    if kind == "causal":
+        ok = kpos <= qpos
+    elif kind == "prefix":
+        ok = (kpos <= qpos) | (kpos < prefix)
+    else:
+        ok = jnp.ones((tq, bk), bool)
+    return jnp.where(ok, 0.0, NEG)
+
+
+def _pad_tk(k, v, block_k):
+    tk = k.shape[1]
+    tkp = ((tk + block_k - 1) // block_k) * block_k
+    if tkp != tk:
+        pad = ((0, 0), (0, tkp - tk), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return k, v, tk, tkp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, scale: float, kind: str = "causal", prefix: int = 0,
+                    block_k: int = 512):
+    """q: (B,Tq,KV,G,dh); k/v: (B,Tk,KV,dh) → (B,Tq,KV,G,dh)."""
+    out, _ = _fwd_impl(q, k, v, scale, kind, prefix, block_k)
+    return out
+
+
+def _mm_dtype():
+    from . import perf_flags
+
+    return jnp.bfloat16 if perf_flags.FLASH_BF16 else jnp.float32
+
+
+def _fwd_impl(q, k, v, scale, kind, prefix, block_k):
+    block_k = costmode.flash_block(block_k)
+    b, tq, kv, g, dh = q.shape
+    dhv = v.shape[-1]                                               # may differ (MLA)
+    k, v, tk, tkp = _pad_tk(k, v, block_k)
+    nblk = tkp // block_k
+    mmdt = _mm_dtype()
+    qf = q.astype(mmdt)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        k0 = blk * block_k
+        kb = jax.lax.dynamic_slice_in_dim(k, k0, block_k, 1).astype(mmdt)
+        vb = jax.lax.dynamic_slice_in_dim(v, k0, block_k, 1).astype(mmdt)
+        bias = _block_bias(0, tq, k0, block_k, kind, prefix)
+        kmask = (k0 + jnp.arange(block_k)) < tk                     # un-padded keys
+        bias = bias + jnp.where(kmask, 0.0, NEG)[None, :]
+        logits = jnp.einsum("btkgd,bskd->bkgts", qf, kb,
+                            preferred_element_type=jnp.float32) * scale + bias
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgts,bskd->bkgtd", p.astype(mmdt), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kv, g, tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, tq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, tq, dhv), jnp.float32)
+    (m, l, acc), _ = costmode.scan(step, (m0, l0, a0), jnp.arange(nblk))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    lse = jnp.where(jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-30)), 0.0)
+    out = jnp.moveaxis(out, -2, 1).astype(q.dtype)                  # (B,Tq,KV,G,dh)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, scale, kind, prefix, block_k):
+    out, lse = _fwd_impl(q, k, v, scale, kind, prefix, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(scale, kind, prefix, block_k, res, do):
+    block_k = costmode.flash_block(block_k)
+    q, k, v, out, lse = res
+    b, tq, kv, g, dh = q.shape
+    kpad, vpad, tk, tkp = _pad_tk(k, v, block_k)
+    nblk = tkp // block_k
+    mmdt = _mm_dtype()
+    pref = dict(preferred_element_type=jnp.float32)
+    qf = q.astype(mmdt)
+    dof = jnp.moveaxis(do.astype(mmdt), 1, -2)                      # (B,KV,G,Tq,dh)
+    of = jnp.moveaxis(out.astype(jnp.float32), 1, -2)
+    dmat = (of * jnp.moveaxis(do.astype(jnp.float32), 1, -2)).sum(-1)  # (B,KV,G,Tq)
+
+    def step(dq, blk):
+        k0 = blk * block_k
+        kb = jax.lax.dynamic_slice_in_dim(kpad, k0, block_k, 1).astype(mmdt)
+        vb = jax.lax.dynamic_slice_in_dim(vpad, k0, block_k, 1).astype(mmdt)
+        bias = _block_bias(0, tq, k0, block_k, kind, prefix)
+        kmask = (k0 + jnp.arange(block_k)) < tk
+        bias = bias + jnp.where(kmask, 0.0, NEG)[None, :]
+        logits = jnp.einsum("btkgd,bskd->bkgts", qf, kb, **pref) * scale + bias
+        p = jnp.exp(logits - lse[..., None])                        # true probs
+        dp = jnp.einsum("bkgtd,bskd->bkgts", dof, vb, **pref)
+        ds = p * (dp - dmat[..., None])                             # (B,KV,G,Tq,bs)
+        dsm = ds.astype(mmdt)
+        dq = dq + jnp.einsum("bkgts,bskd->btkgd", dsm, kb, **pref) * scale
+        dkb = jnp.einsum("bkgts,btkgd->bskd", dsm, qf, **pref) * scale
+        dvb = jnp.einsum("bkgts,bkgtd->bskd", p.astype(mmdt), dof, **pref)
+        return dq, (dkb, dvb)
+
+    dq0 = jnp.zeros((b, tq, kv, g, dh), jnp.float32)
+    dq, (dks, dvs) = costmode.scan(step, dq0, jnp.arange(nblk))
+    dk = jnp.moveaxis(dks, 0, 1).reshape(b, tkp, kv, k.shape[-1])[:, :tk]
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(b, tkp, kv, v.shape[-1])[:, :tk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def sdpa_ref(q, k, v, scale, kind="causal", prefix=0):
+    """Dense oracle for tests: identical math, materialized T² logits."""
+    b, tq, kv, g, dh = q.shape
+    tk = k.shape[1]
+    logits = jnp.einsum(
+        "btkgd,bskd->bkgts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale + _block_bias(0, tq, 0, tk, kind, prefix)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)

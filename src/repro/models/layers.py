@@ -1,0 +1,207 @@
+"""Functional building blocks shared by every architecture.
+
+Params are plain nested dicts of jnp arrays (pytree-native: pjit shardings,
+optimizer maps and checkpointing all traverse them directly). Compute dtype
+is the caller's (bf16 on TPU); params stay in param_dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _norm_init(rng, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def dense_init(rng, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ RMSNorm
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- acts
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_pytorch_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# ---------------------------------------------------------------- gated MLP
+def mlp_init(rng, d: int, f: int, dtype, gated: bool = True) -> dict:
+    ks = jax.random.split(rng, 3)
+    p = {"w_up": dense_init(ks[0], (d, f), dtype), "w_down": dense_init(ks[1], (f, d), dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def mlp(p, x, act: str = "silu"):
+    h = x @ p["w_up"].astype(x.dtype)
+    if "w_gate" in p:
+        h = h * act_fn(act)(x @ p["w_gate"].astype(x.dtype))
+    else:
+        h = act_fn(act)(h)
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(d_rot: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., T, H, d) with d even; positions: (..., T) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (...,T,d/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- embeddings
+def embed_init(rng, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, d)) * 0.02).astype(dtype)
+
+
+def unembed(x, table, compute_dtype):
+    """Logits in fp32 (loss stability)."""
+    return (x.astype(compute_dtype) @ table.astype(compute_dtype).T).astype(jnp.float32)
+
+
+def _ce_chunk(v_padded: int, want: int) -> int:
+    """Largest divisor of v_padded ≤ want (vocab is padded to 256s)."""
+    c = min(want, v_padded)
+    while v_padded % c:
+        c -= 1
+    return max(c, 1)
+
+
+def chunked_ce(x, w, labels, valid, vocab_valid: int, chunk: int):
+    """Streaming softmax-CE: logits are produced (and re-produced in the
+    backward) one vocab chunk at a time — the (N, V) fp32 tensor never
+    exists. x: (N, D); w: (D, V); labels/valid: (N,). Returns mean nll.
+
+    custom_vjp: autodiff through the fwd scan would stash every chunk's
+    logits and resurrect the full tensor."""
+    import functools
+
+    chunk = _ce_chunk(w.shape[1], chunk)
+    return _chunked_ce(x, w, labels, valid, vocab_valid, chunk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _chunked_ce(x, w, labels, valid, vocab_valid, chunk):
+    loss, _ = _chunked_ce_fwd_impl(x, w, labels, valid, vocab_valid, chunk)
+    return loss
+
+
+def _chunked_ce_fwd_impl(x, w, labels, valid, vocab_valid, chunk):
+    n, d = x.shape
+    v = w.shape[1]
+    nc = v // chunk
+    xf = x.astype(jnp.float32)
+
+    def step(carry, ci):
+        m, l, ll = carry
+        c0 = ci * chunk
+        wc = jax.lax.dynamic_slice_in_dim(w, c0, chunk, 1)
+        logits = (x @ wc).astype(jnp.float32)
+        ids = c0 + jnp.arange(chunk)
+        logits = jnp.where(ids < vocab_valid, logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(-1))
+        l = l * jnp.exp(m - m_new) + jnp.exp(logits - m_new[:, None]).sum(-1)
+        inside = (labels >= c0) & (labels < c0 + chunk)
+        lab_local = jnp.clip(labels - c0, 0, chunk - 1)
+        ll = jnp.where(inside, jnp.take_along_axis(logits, lab_local[:, None], 1)[:, 0], ll)
+        return (m_new, l, ll), None
+
+    m0 = jnp.full((n,), -jnp.inf, jnp.float32)
+    (m, l, ll), _ = jax.lax.scan(step, (m0, jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.float32)),
+                                 jnp.arange(nc))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    cnt = jnp.maximum(valid.sum(), 1)
+    loss = (jnp.where(valid, lse - ll, 0.0)).sum() / cnt
+    return loss, (lse, cnt)
+
+
+def _chunked_ce_fwd(x, w, labels, valid, vocab_valid, chunk):
+    loss, (lse, cnt) = _chunked_ce_fwd_impl(x, w, labels, valid, vocab_valid, chunk)
+    return loss, (x, w, labels, valid, lse, cnt)
+
+
+def _chunked_ce_bwd(vocab_valid, chunk, res, g):
+    x, w, labels, valid, lse, cnt = res
+    n, d = x.shape
+    v = w.shape[1]
+    nc = v // chunk
+    scale = (g * valid.astype(jnp.float32) / cnt)[:, None]           # (N,1)
+
+    def step(dx, ci):
+        c0 = ci * chunk
+        wc = jax.lax.dynamic_slice_in_dim(w, c0, chunk, 1)
+        logits = (x @ wc).astype(jnp.float32)
+        ids = c0 + jnp.arange(chunk)
+        logits = jnp.where(ids < vocab_valid, logits, -jnp.inf)
+        p = jnp.exp(logits - lse[:, None])
+        onehot = (labels[:, None] == (c0 + jnp.arange(chunk))[None, :]).astype(jnp.float32)
+        dlog = (p - onehot) * scale                                   # (N, chunk)
+        dx = dx + (dlog.astype(wc.dtype) @ wc.T).astype(jnp.float32)
+        dwc = x.T @ dlog.astype(x.dtype)                              # (D, chunk)
+        return dx, dwc
+
+    dx, dwcs = jax.lax.scan(step, jnp.zeros((n, d), jnp.float32), jnp.arange(nc))
+    dw = jnp.moveaxis(dwcs, 0, 1).reshape(d, v)
+    return dx.astype(x.dtype), dw.astype(w.dtype), None, None
+
+
+_chunked_ce.defvjp(_chunked_ce_fwd, _chunked_ce_bwd)
+
+
+def cross_entropy(logits, labels, mask=None, vocab_valid: int | None = None):
+    """Token-mean CE; labels < 0 are ignored; padding vocab ids masked."""
+    if vocab_valid is not None and vocab_valid < logits.shape[-1]:
+        neg = jnp.finfo(logits.dtype).min
+        pad = jnp.arange(logits.shape[-1]) >= vocab_valid
+        logits = jnp.where(pad, neg, logits)
+    valid = labels >= 0
+    if mask is not None:
+        valid = valid & (mask > 0)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1)

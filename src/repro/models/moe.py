@@ -1,0 +1,142 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch
+(MaxText-style), shared experts, aux load-balancing loss, EP-shardable.
+
+The dispatch avoids the O(N·E·C) one-hot tensor: assignments are sorted by
+expert id, positions-within-expert derived from run starts, tokens gathered
+into an (E, C, D) buffer, two grouped einsums (MXU), scatter-combine back.
+The (E, ...) dims shard over the `model` axis (expert parallelism); the C
+dim shards over `data`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import act_fn, dense_init, mlp, mlp_init
+from .meshops import shard_act
+
+
+def moe_init(rng, cfg, dtype) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_expert, m.padded
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype, scale=0.02),
+        "w_gate": dense_init(ks[1], (e, d, f), dtype),
+        "w_up": dense_init(ks[2], (e, d, f), dtype),
+        "w_down": dense_init(ks[3], (e, f, d), dtype),
+    }
+    if m.n_shared:
+        p["shared"] = mlp_init(ks[4], d, f * m.n_shared, dtype, gated=True)
+    return p
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, T, D) → (out (B,T,D), aux_loss scalar)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    e = m.padded
+    k = m.top_k
+    xf = x.reshape(n, d)
+
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    if m.n_padded and m.n_padded > m.n_routed:
+        dead = jnp.arange(e) >= m.n_routed
+        logits = jnp.where(dead, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, k)  # (N,k)
+    if m.norm_topk:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E · Σ_e f_e · p_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[sel.reshape(-1)].add(1.0) / (n * k)
+    aux = m.aux_loss_coef * e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch -------------------------------------------
+    cap = int(max(8, (n * k / max(m.n_routed, 1)) * m.capacity_factor))
+    flat_e = sel.reshape(-1)  # (N·k,) expert of each assignment
+    order = jnp.argsort(flat_e)  # stable: groups by expert
+    e_sorted = flat_e[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(n * k, dtype=jnp.int32) - starts[e_sorted]  # slot in expert
+    keep = pos < cap
+    tok = order // k  # source token of each sorted assignment
+    slot_w = jnp.where(keep, gate_vals.reshape(-1)[order], 0.0)
+
+    from . import perf_flags
+    from .meshops import BATCH
+
+    dt = x.dtype
+    if perf_flags.MOE_GATHER_DISPATCH:
+        # GSPMD-friendly dispatch (§Perf): scatter only the INT32 slot→token
+        # map + fp32 slot gate — (E,C) tensors whose partial-combine costs MBs
+        # — then build the buffer as a row GATHER. The (E,C,D) buffer itself
+        # is never the operand of a cross-device reduction.
+        pos_c = jnp.where(keep, pos, cap)
+        slot_tok = jnp.full((e, cap + 1), n, jnp.int32)
+        slot_tok = slot_tok.at[e_sorted, pos_c].min(jnp.where(keep, tok, n))[:, :cap]
+        slot_gate = jnp.zeros((e, cap + 1), jnp.float32)
+        slot_gate = slot_gate.at[e_sorted, pos_c].add(slot_w)[:, :cap]
+        valid = slot_tok < n
+        buf = jnp.where(
+            valid[..., None], xf[jnp.minimum(slot_tok, n - 1)], jnp.zeros((), dt)
+        )
+        buf = shard_act(buf, "model", None, None)
+    else:
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        buf = buf.at[e_sorted, jnp.where(keep, pos, cap - 1)].add(
+            jnp.where(keep[:, None], xf[tok], 0.0)
+        )
+        if perf_flags.MOE_DATA_CAP:  # refuted experiment, kept for the record
+            buf = shard_act(buf, "model", BATCH, None)
+        else:
+            buf = shard_act(buf, "model", None, None)  # expert-parallel anchor
+
+    # ---- grouped expert FFN (EP over `model`) --------------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    h = h * act_fn(cfg.act)(g)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+
+    # ---- combine --------------------------------------------------------
+    if perf_flags.MOE_GATHER_DISPATCH:
+        # slot-side scatter: each model rank contributes its experts' rows;
+        # the cross-rank sum is a (N,D) all-reduce — standard TP-FFN size.
+        yw = y * slot_gate[..., None].astype(dt)
+        idx = jnp.where(valid, slot_tok, n)
+        out = jnp.zeros((n + 1, d), dt).at[idx].add(yw)[:n]
+        out = shard_act(out, BATCH, None)
+    else:
+        gathered = y[e_sorted, jnp.where(keep, pos, cap - 1)]  # (N·k, D)
+        out = jnp.zeros((n, d), dt).at[tok].add(gathered * slot_w[:, None].astype(dt))
+
+    if m.n_shared:
+        out = out + mlp(p["shared"], xf, cfg.act)
+    return out.reshape(b, t, d), aux
+
+
+def moe_ref(p, cfg, x):
+    """Dense oracle: run every expert on every token, combine by gates.
+    O(N·E) — test-scale only; used to validate the dispatch path."""
+    m = cfg.moe
+    b, t, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    if m.n_padded and m.n_padded > m.n_routed:
+        logits = jnp.where(jnp.arange(m.padded) >= m.n_routed, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, m.top_k)
+    if m.norm_topk:
+        gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    dt = x.dtype
+    h = jnp.einsum("nd,edf->enf", xf, p["w_up"].astype(dt))
+    g = jnp.einsum("nd,edf->enf", xf, p["w_gate"].astype(dt))
+    y = jnp.einsum("enf,efd->end", h * act_fn(cfg.act)(g), p["w_down"].astype(dt))
+    gates_full = jnp.zeros_like(probs).at[jnp.arange(xf.shape[0])[:, None], sel].set(gate_vals)
+    out = jnp.einsum("end,ne->nd", y, gates_full.astype(dt))
+    if m.n_shared:
+        out = out + mlp(p["shared"], xf, cfg.act)
+    return out.reshape(b, t, d)

@@ -1,0 +1,34 @@
+"""Beyond-paper performance toggles (§Perf hillclimbing).
+
+All default OFF so the paper-faithful baseline sweep is unaffected; the
+perf pass flips them one at a time and re-lowers (hypothesis → change →
+measure → validate, logged in EXPERIMENTS.md §Perf).
+
+  SCATTER_GRADS  anchor grads to the param sharding immediately after
+                 value_and_grad — turns the full-gradient all-reduce +
+                 slice that GSPMD emits for FSDP params into a
+                 reduce-scatter (half the bytes on the wire).
+  FLASH_BF16     run the flash QK^T / PV matmuls with bf16 operands and
+                 fp32 accumulation (preferred_element_type) — the
+                 MXU-native mixed precision; softmax stays fp32.
+  CHUNKED_CE     > 0: never materialize the (B,T,V) fp32 logits; stream
+                 the unembed matmul + logsumexp over vocab chunks of
+                 this size (custom backward recomputes per chunk).
+  MASTER_FP32    bf16 params on the wire (halves every FSDP all-gather)
+                 with an fp32 master copy inside the optimizer state.
+                 (Enabled via TrainConfig.param_dtype="bfloat16" +
+                 master_fp32=True; listed here for discoverability.)
+"""
+from __future__ import annotations
+
+SCATTER_GRADS = False
+FLASH_BF16 = False
+CHUNKED_CE = 0
+MOE_DATA_CAP = False  # REFUTED (EXPERIMENTS §Perf iter 2): co-sharding the
+                      # capacity dim made GSPMD reshard harder — tx ×4 worse
+MOE_GATHER_DISPATCH = False  # dispatch = scatter of the (E,C) int32 slot→token
+                             # map (7.8 MB partials) + row gather; combine =
+                             # per-model-rank partial scatter → (N,D) AR, the
+                             # standard TP-FFN-sized collective. Replaces the
+                             # (E,C,D)-sized partial-scatter all-reduces.
+

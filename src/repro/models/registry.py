@@ -1,0 +1,188 @@
+"""Model registry: one uniform API over every architecture family.
+
+``build(cfg)`` returns a ``ModelAPI`` whose members are plain jit-able
+functions — the launcher/dry-run applies meshes and shardings, smoke
+tests call them directly on CPU. ``input_specs`` produces the
+ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell: no
+device allocation ever happens for the full-size configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeCell, TrainConfig
+from ..optim import adamw_init, adamw_update, clip_by_global_norm, warmup_cosine
+from . import costmode
+from . import transformer as tf
+from . import whisper as wh
+
+
+@dataclass
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[[Any], Any]                  # rng -> params
+    loss: Callable[..., Any]                    # (params, batch) -> (loss, metrics)
+    prefill: Callable[..., Any]                 # (params, batch, t_max) -> (logits, cache)
+    decode: Callable[..., Any]                  # (params, batch, cache) -> (logits, cache')
+    cache_init: Callable[..., Any]              # (batch, t_max) -> cache
+
+
+def build(cfg: ModelConfig, compute_dtype=jnp.bfloat16, param_dtype=jnp.float32, remat=True) -> ModelAPI:
+    if cfg.family == "audio":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda rng: wh.whisper_init(rng, cfg, param_dtype),
+            loss=lambda p, b: wh.whisper_loss(p, cfg, b, compute_dtype, remat),
+            prefill=lambda p, b, t_max: wh.whisper_prefill(p, cfg, b, t_max, compute_dtype),
+            decode=lambda p, b, c: wh.whisper_decode_step(p, cfg, b, c, compute_dtype),
+            cache_init=lambda batch, t_max: wh.whisper_cache_init(cfg, batch, t_max),
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda rng: tf.lm_init(rng, cfg, param_dtype),
+        loss=lambda p, b: tf.lm_loss(p, cfg, b, compute_dtype, remat),
+        prefill=lambda p, b, t_max: tf.lm_prefill(p, cfg, b, t_max, compute_dtype),
+        decode=lambda p, b, c: tf.lm_decode_step(p, cfg, b, c, compute_dtype),
+        cache_init=lambda batch, t_max: tf.lm_cache_init(cfg, batch, t_max),
+    )
+
+
+# ------------------------------------------------------------------- steps
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    api = build(
+        cfg,
+        compute_dtype=jnp.dtype(tcfg.compute_dtype),
+        param_dtype=jnp.dtype(tcfg.param_dtype),
+        remat=tcfg.remat,
+    )
+    accum = max(tcfg.grad_accum, 1)
+
+    def _anchor_grads(grads, params):
+        """perf_flags.SCATTER_GRADS: pin each gradient to its param's
+        sharding right at the psum point → reduce-scatter, not AR+slice."""
+        from . import perf_flags
+        from .meshops import _current_mesh
+        from .sharding import param_specs
+
+        if not perf_flags.SCATTER_GRADS:
+            return grads
+        mesh = _current_mesh()
+        if mesh is None:
+            return grads
+        specs = param_specs(cfg, params, mesh)
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, specs)
+
+    def _grads(params, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(api.loss, has_aux=True)(params, batch)
+            grads = _anchor_grads(grads, params)
+            return jax.tree.map(lambda g: g.astype(jnp.float32), grads), loss, metrics
+
+        # microbatch scan: activations scale 1/accum; fp32 grad accumulators
+        # are param-sized and inherit the FSDP sharding. The reshape MUST be
+        # re-anchored (accum axis replicated, batch axis over (pod, data)) —
+        # otherwise GSPMD shards the accum axis and replicates compute.
+        from .meshops import BATCH, shard_act
+
+        mb = jax.tree.map(
+            lambda x: shard_act(
+                x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                None, BATCH,
+            ),
+            batch,
+        )
+
+        def micro(carry, b1):
+            gacc, lacc = carry
+            b1 = jax.tree.map(lambda x: shard_act(x, BATCH), b1)
+            (l, m), g = jax.value_and_grad(api.loss, has_aux=True)(params, b1)
+            g = _anchor_grads(g, params)
+            gacc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), gacc, g)
+            return (gacc, lacc + l), m
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, lsum), ms = costmode.scan(micro, (g0, jnp.zeros((), jnp.float32)), mb)
+        grads = jax.tree.map(lambda x: x / accum, g)
+        metrics = jax.tree.map(lambda x: x.mean(), ms)
+        return grads, lsum / accum, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, loss, metrics = _grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = warmup_cosine(opt_state["step"], tcfg.lr, tcfg.warmup, tcfg.total_steps)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr, weight_decay=tcfg.weight_decay
+        )
+        return params, opt_state, {"loss": loss, "gnorm": gnorm, "lr": lr, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, t_max: int, compute_dtype=jnp.bfloat16):
+    api = build(cfg, compute_dtype=compute_dtype, remat=False)
+
+    def prefill_step(params, batch):
+        return api.prefill(params, batch, t_max)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    api = build(cfg, compute_dtype=compute_dtype, remat=False)
+
+    def decode_step(params, batch, cache):
+        return api.decode(params, batch, cache)
+
+    return decode_step
+
+
+# ------------------------------------------------------------- input specs
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Batch ShapeDtypeStructs for a dry-run cell (weak-type correct,
+    shardable, no allocation)."""
+    b, t = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        batch = {"tokens": _i32(b, 1)}
+        return batch
+    if cfg.family == "audio":
+        batch = {"tokens": _i32(b, t), "frames": _f32(b, cfg.enc_ctx, cfg.d_model)}
+    elif cfg.vis_ctx:
+        batch = {"tokens": _i32(b, t - cfg.vis_ctx), "vis": _f32(b, cfg.vis_ctx, cfg.vis_width)}
+    else:
+        batch = {"tokens": _i32(b, t)}
+    if cell.kind == "train":
+        batch["labels"] = _i32(b, t) if cfg.family == "audio" else _i32(*batch["tokens"].shape)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig, param_dtype=jnp.float32):
+    api = build(cfg, param_dtype=param_dtype)
+    return jax.eval_shape(api.init, jax.random.key(0))
+
+
+def abstract_opt_state(params, master_fp32: bool = False):
+    return jax.eval_shape(lambda p: adamw_init(p, master_fp32), params)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, t_max: int):
+    api = build(cfg)
+    return jax.eval_shape(lambda: api.cache_init(batch, t_max))
+
+
+def supports_cell(cfg: ModelConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """Assignment skip rules. Returns (runnable, reason-if-not)."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full-attention arch: 500k dense KV decode is the quadratic regime the assignment skips"
+    return True, ""

@@ -1,0 +1,216 @@
+"""RWKV6 ("Finch") mixer: linear attention with data-dependent per-channel
+decay. Attention-free → O(1) decode state, runs the ``long_500k`` cell.
+
+Two execution forms:
+  * ``rwkv6_mix_chunked`` — training/prefill: chunk-parallel linear
+    attention. Inter-chunk state is carried in a short scan; the
+    intra-chunk term is a masked (Q,Q) matmul computed in log-decay space
+    (numerically safe: all exponents ≤ 0 by construction).
+  * ``rwkv6_mix_recurrent`` — exact per-token recurrence (decode + oracle).
+
+Per head h with dh-dim keys: state S (dh_k × dh_v);
+  o_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ,  w_t = exp(-exp(wlog_t)) ∈ (0,1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import costmode
+from .layers import dense_init
+
+DDLORA = 32  # data-dependent lerp lora rank (5 mixes)
+WLORA = 64   # decay lora rank
+
+
+def _dims(cfg):
+    d = cfg.d_model
+    dh = cfg.ssm.d_head
+    nh = d // dh
+    return d, dh, nh
+
+
+def rwkv6_mix_init(rng, cfg, dtype) -> dict:
+    d, dh, nh = _dims(cfg)
+    ks = jax.random.split(rng, 12)
+    lin = jnp.linspace(0, 1, d, dtype=jnp.float32)
+    return {
+        "mu_x": (0.5 * jnp.ones((d,))).astype(dtype),       # base token-shift lerp
+        "mu5": jnp.stack([lin * 0.0 + 0.5] * 5).astype(dtype),  # (5, d) per-proj base
+        "tm_w1": dense_init(ks[0], (d, 5 * DDLORA), dtype, scale=1e-2),
+        "tm_w2": dense_init(ks[1], (5, DDLORA, d), dtype, scale=1e-2),
+        "w0": (-6.0 + 5.0 * lin).astype(dtype),             # per-channel decay bias
+        "w1": dense_init(ks[2], (d, WLORA), dtype, scale=1e-2),
+        "w2": dense_init(ks[3], (WLORA, d), dtype, scale=1e-2),
+        "u": (0.5 * jnp.ones((nh, dh))).astype(dtype),      # "bonus" for current token
+        "wr": dense_init(ks[4], (d, d), dtype),
+        "wk": dense_init(ks[5], (d, d), dtype),
+        "wv": dense_init(ks[6], (d, d), dtype),
+        "wg": dense_init(ks[7], (d, d), dtype),
+        "wo": dense_init(ks[8], (d, d), dtype),
+        "ln_x_scale": jnp.ones((d,), dtype),                # per-head groupnorm
+        "ln_x_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def _ddlerp(p, x, xprev):
+    """Data-dependent lerp producing the 5 mixed inputs (r, k, v, w, g)."""
+    dt = x.dtype
+    dx = xprev - x
+    xxx = x + dx * p["mu_x"].astype(dt)
+    hid = jnp.tanh(xxx @ p["tm_w1"].astype(dt))             # (B,T,5*R)
+    b, t, _ = x.shape
+    hid = hid.reshape(b, t, 5, DDLORA)
+    dyn = jnp.einsum("btfr,frd->fbtd", hid, p["tm_w2"].astype(dt))
+    mixed = x[None] + dx[None] * (p["mu5"].astype(dt)[:, None, None, :] + dyn)
+    return mixed  # (5, B, T, D)
+
+
+def _rkvwg(p, cfg, x, xprev):
+    d, dh, nh = _dims(cfg)
+    dt = x.dtype
+    mr, mk, mv, mw, mg = _ddlerp(p, x, xprev)
+    r = mr @ p["wr"].astype(dt)
+    k = mk @ p["wk"].astype(dt)
+    v = mv @ p["wv"].astype(dt)
+    g = jax.nn.silu(mg @ p["wg"].astype(dt))
+    wlog = p["w0"].astype(jnp.float32) + jnp.tanh(mw.astype(jnp.float32) @ p["w1"].astype(jnp.float32)) @ p["w2"].astype(jnp.float32)
+    logw = -jnp.exp(wlog)                                   # log decay ≤ 0, (B,T,D)
+    b, t, _ = x.shape
+    heads = lambda z: z.reshape(b, t, nh, dh)
+    return heads(r), heads(k), heads(v), logw.reshape(b, t, nh, dh), g
+
+
+def _groupnorm_heads(p, x, nh, eps=64e-5):
+    """LayerNorm per head (RWKV's ln_x: GroupNorm(nh))."""
+    b, t, d = x.shape
+    xh = x.reshape(b, t, nh, d // nh).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(b, t, d) * p["ln_x_scale"].astype(jnp.float32) + p["ln_x_bias"].astype(jnp.float32)
+    return out
+
+
+def _shift(x, xlast=None):
+    """Token shift; xlast (B, D) is the carry from the previous segment."""
+    first = (
+        jnp.zeros_like(x[:, :1])
+        if xlast is None
+        else xlast[:, None, :].astype(x.dtype)  # f32 carry must not promote
+    )
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def rwkv6_mix_chunked(p, cfg, x, state=None, xlast=None):
+    """x: (B,T,D), T divisible by chunk. Returns (out, (S, x_last))."""
+    d, dh, nh = _dims(cfg)
+    b, t, _ = x.shape
+    q = costmode.chunk_size(min(cfg.ssm.chunk, t), t)
+    tp = ((t + q - 1) // q) * q                             # padded length
+    nc = tp // q
+    dt_ = x.dtype
+
+    xprev = _shift(x, xlast)
+    r, k, v, logw, g = _rkvwg(p, cfg, x, xprev)
+    u = p["u"].astype(jnp.float32)
+
+    # state-neutral padding: k,v → 0 (no state write), logw → 0 (no decay)
+    if tp != t:
+        pad = ((0, 0), (0, tp - t), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(z, pad) for z in (r, k, v))
+        logw = jnp.pad(logw, pad)
+
+    chunk_first = lambda z: jnp.moveaxis(
+        z.reshape(b, nc, q, nh, dh).astype(jnp.float32), 1, 0
+    )
+    rc, kc, vc, lw = chunk_first(r), chunk_first(k), chunk_first(v), chunk_first(logw)
+    mask = jnp.tril(jnp.ones((q, q), bool), -1)[None, :, :, None, None]
+
+    s0 = jnp.zeros((b, nh, dh, dh), jnp.float32) if state is None else state.astype(jnp.float32)
+
+    # scan over chunks: the (B,t,s,H,dh) pairwise tensor exists for ONE chunk
+    # at a time (the all-chunks version is tens of GB/device at train_4k).
+    def step(s, inp):
+        rq, kq, vq, lwq = inp                               # (B,Q,H,dh)
+        cum = jnp.cumsum(lwq, axis=1)                       # inclusive
+        cum_prev = cum - lwq                                # exclusive
+        # decays, all exponents ≤ 0:
+        #   q_t' = r_t ⊙ exp(cum_{t-1})        (state read at step t)
+        #   k_s' = k_s ⊙ exp(cum_end - cum_s)  (write surviving to chunk end)
+        #   A_ts = Σ_d r_td k_sd exp(cum_{t-1,d} - cum_{s,d})   for s < t
+        expo = cum_prev[:, :, None] - cum[:, None]          # (B,t,s,H,dh)
+        pair = jnp.where(mask, jnp.exp(expo), 0.0)
+        amat = jnp.einsum("bthd,bshd,btshd->btsh", rq, kq, pair, optimize=True)
+        y_intra = jnp.einsum("btsh,bshe->bthe", amat, vq)
+        y_bonus = (rq * u[None, None] * kq).sum(-1, keepdims=True) * vq
+        y_inter = jnp.einsum("bthd,bhde->bthe", rq * jnp.exp(cum_prev), s)
+        k_dec = kq * jnp.exp(cum[:, -1:] - cum)
+        s = s * jnp.exp(cum[:, -1])[..., None] + jnp.einsum("bshd,bshe->bhde", k_dec, vq)
+        return s, y_intra + y_bonus + y_inter
+
+    s_final, yc = costmode.scan(step, s0, (rc, kc, vc, lw))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, tp, nh, dh)[:, :t]
+
+    out = _groupnorm_heads(p, y.reshape(b, t, d), nh) * g.astype(jnp.float32)
+    out = out.astype(dt_) @ p["wo"].astype(dt_)
+    return out, (s_final, x[:, -1, :].astype(jnp.float32))
+
+
+def rwkv6_mix_recurrent(p, cfg, x, state=None, xlast=None):
+    """Exact per-token recurrence: decode path and oracle for chunked."""
+    d, dh, nh = _dims(cfg)
+    b, t, _ = x.shape
+    dt_ = x.dtype
+    xprev = _shift(x, xlast)
+    r, k, v, logw, g = _rkvwg(p, cfg, x, xprev)
+    u = p["u"].astype(jnp.float32)
+    s0 = jnp.zeros((b, nh, dh, dh), jnp.float32) if state is None else state.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, lwt = inp                                # (B,H,dh)
+        kv = jnp.einsum("bhd,bhe->bhde", kt, vt)
+        o = jnp.einsum("bhd,bhde->bhe", rt, s + u[None, :, :, None] * kv)
+        s = s * jnp.exp(lwt)[..., None] + kv
+        return s, o
+
+    tfirst = lambda z: jnp.moveaxis(z.astype(jnp.float32), 1, 0)
+    s_final, o = costmode.scan(step, s0, (tfirst(r), tfirst(k), tfirst(v), tfirst(logw)))
+    y = jnp.moveaxis(o, 0, 1).reshape(b, t, d)
+    out = _groupnorm_heads(p, y, nh) * g.astype(jnp.float32)
+    out = out.astype(dt_) @ p["wo"].astype(dt_)
+    return out, (s_final, x[:, -1, :].astype(jnp.float32))
+
+
+def rwkv6_state_init(cfg, batch: int) -> tuple:
+    d, dh, nh = _dims(cfg)
+    return (
+        jnp.zeros((batch, nh, dh, dh), jnp.float32),  # wkv state
+        jnp.zeros((batch, d), jnp.float32),           # token-shift carry (mix)
+        jnp.zeros((batch, d), jnp.float32),           # token-shift carry (channel-mix)
+    )
+
+
+# --------------------------------------------------------------- channel mix
+def rwkv6_cmix_init(rng, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu_k": (0.5 * jnp.ones((d,))).astype(dtype),
+        "mu_r": (0.5 * jnp.ones((d,))).astype(dtype),
+        "wk": dense_init(ks[0], (d, f), dtype),
+        "wv": dense_init(ks[1], (f, d), dtype),
+        "wr": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def rwkv6_cmix(p, cfg, x, xlast=None):
+    dt = x.dtype
+    xprev = _shift(x, xlast)
+    dx = xprev - x
+    xk = x + dx * p["mu_k"].astype(dt)
+    xr = x + dx * p["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    out = jax.nn.sigmoid(xr @ p["wr"].astype(dt)) * (k @ p["wv"].astype(dt))
+    return out, x[:, -1, :].astype(jnp.float32)

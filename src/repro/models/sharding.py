@@ -1,0 +1,196 @@
+"""Sharding planner: per-tensor PartitionSpecs derived from config + mesh.
+
+Policy (DESIGN §6):
+  * mesh axes — ``model``: tensor parallel; ``data``: FSDP for params /
+    batch for activations; ``pod``: pure DP (params replicated across
+    pods; only the gradient all-reduce crosses the pod boundary).
+  * a dim is sharded over an axis iff it divides the axis size — else
+    replicate (the standard GQA-TP fallback for small KV-head counts).
+  * optimizer moments inherit the param specs (ZeRO-1 by construction).
+  * KV caches: batch over (pod, data) when divisible; for batch-1
+    long-context cells the *sequence* dim shards over ``data`` instead
+    (sequence-parallel cache); head dims over ``model`` when divisible.
+
+Everything is name-based over the param pytree — the same planner serves
+all ten architectures; nothing here is per-arch code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_axes(mesh):
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    tp = "model" if "model" in names else None
+    return dp, tp
+
+
+def _axsize(mesh, name):
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+        return out
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _if_div(dim: int, axis, mesh):
+    return axis if (axis is not None and dim % _axsize(mesh, axis) == 0) else None
+
+
+# --------------------------------------------------------------- param plan
+_STACKED_MARKERS = ("segments", "enc_blocks", "dec_blocks")
+
+
+def _param_rule(name: str, shape, cfg, mesh) -> P:
+    """Spec for the *unstacked* tail of one parameter."""
+    fs, tp = "data", "model"
+    nd = len(shape)
+    if nd <= 1:
+        return P(*([None] * nd))
+    if name == "embed":
+        return P(_if_div(shape[0], tp, mesh), _if_div(shape[1], fs, mesh))
+    if name == "unembed":
+        return P(_if_div(shape[0], fs, mesh), _if_div(shape[1], tp, mesh))
+    if name in ("wq", "wk", "wv") and nd == 3:  # (d, h, dh)
+        return P(_if_div(shape[0], fs, mesh), _if_div(shape[1], tp, mesh), None)
+    if name in ("bq", "bk", "bv"):              # (h, dh)
+        return P(_if_div(shape[0], tp, mesh), None)
+    if name == "wo" and nd == 3:                # (h, dh, d)
+        return P(_if_div(shape[0], tp, mesh), None, _if_div(shape[2], fs, mesh))
+    if name in ("w_up", "w_gate"):
+        if nd == 3:                              # (e, d, f) expert-parallel
+            return P(_if_div(shape[0], tp, mesh), _if_div(shape[1], fs, mesh), None)
+        return P(_if_div(shape[0], fs, mesh), _if_div(shape[1], tp, mesh))
+    if name == "w_down":
+        if nd == 3:                              # (e, f, d)
+            return P(_if_div(shape[0], tp, mesh), None, _if_div(shape[2], fs, mesh))
+        return P(_if_div(shape[0], tp, mesh), _if_div(shape[1], fs, mesh))
+    if name == "router":                         # (d, e)
+        return P(_if_div(shape[0], fs, mesh), _if_div(shape[1], tp, mesh))
+    if name in ("wq_b", "wk_b", "wv_b"):         # (lora, h, ·) MLA up-projs
+        return P(None, _if_div(shape[1], tp, mesh), None)
+    if name in ("wq_a", "wkv_a"):                # (d, lora)
+        return P(_if_div(shape[0], fs, mesh), None)
+    if name == "in_proj":                        # (d, packed)
+        return P(_if_div(shape[0], fs, mesh), _if_div(shape[1], tp, mesh))
+    if name == "out_proj":                       # (d_in, d)
+        return P(_if_div(shape[0], tp, mesh), _if_div(shape[1], fs, mesh))
+    if name == "conv_w":                         # (k, conv_dim)
+        return P(None, _if_div(shape[1], tp, mesh))
+    if name in ("wr", "wg"):                     # rwkv square mats
+        return P(_if_div(shape[0], fs, mesh), _if_div(shape[1], tp, mesh))
+    if name == "a":                              # site lora (sites, d, r)
+        return P(None, _if_div(shape[1], fs, mesh), None)
+    if name == "b" and nd == 3:                  # site lora (sites, r, d)
+        return P(None, None, _if_div(shape[2], fs, mesh))
+    if name == "vis_proj":                       # (vis_width, d)
+        return P(None, _if_div(shape[1], fs, mesh))
+    if nd == 2:                                  # generic matrix: FSDP × TP
+        return P(_if_div(shape[0], fs, mesh), _if_div(shape[1], tp, mesh))
+    return P(*([None] * nd))
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def _is_stacked(path) -> bool:
+    keys = [str(getattr(e, "key", "")) for e in path]
+    return any(m in keys for m in _STACKED_MARKERS)
+
+
+def param_specs(cfg, params_abstract, mesh):
+    """Pytree of NamedSharding matching the (possibly abstract) params."""
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        shape = leaf.shape
+        if _is_stacked(path) and "site" not in [str(getattr(e, "key", "")) for e in path]:
+            tail = _param_rule(name, shape[1:], cfg, mesh)
+            spec = P(None, *tail)
+        else:
+            spec = _param_rule(name, shape, cfg, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+def opt_specs(cfg, opt_abstract, mesh, pspecs):
+    """Moments (and fp32 master, when present) inherit param specs
+    (ZeRO-1); step is replicated."""
+    out = {
+        "m": pspecs,
+        "v": pspecs,
+        "step": NamedSharding(mesh, P()),
+    }
+    if "master" in opt_abstract:
+        out["master"] = pspecs
+    return out
+
+
+# --------------------------------------------------------------- batch plan
+def batch_specs(cfg, batch_abstract, mesh):
+    dp, _ = mesh_axes(mesh)
+
+    def one(path, leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        spec_b = dp if b % _axsize(mesh, dp) == 0 else None
+        return NamedSharding(mesh, P(spec_b, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+# --------------------------------------------------------------- cache plan
+def cache_specs(cfg, cache_abstract, mesh):
+    dp, tp = mesh_axes(mesh)
+    dp_size = _axsize(mesh, dp)
+
+    def one(path, leaf):
+        name = _leaf_name(path)
+        sh = leaf.shape
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # stacked (L,B,T,heads,dh) or a zamba2 site's unstacked (B,T,heads,dh)
+            if leaf.ndim == 5:
+                _, b_, t_, h_, _2 = sh
+                lead = (None,)
+            else:
+                b_, t_, h_, _2 = sh
+                lead = ()
+            if b_ % dp_size == 0:
+                return NamedSharding(mesh, P(*lead, dp, None, _if_div(h_, tp, mesh), None))
+            return NamedSharding(mesh, P(*lead, None, _if_div(t_, "data", mesh), _if_div(h_, tp, mesh), None))
+        if name in ("ckv", "kpe"):                       # (L,B,T,lat)
+            l_, b_, t_, _ = sh
+            if b_ % dp_size == 0:
+                return NamedSharding(mesh, P(None, dp, None, None))
+            return NamedSharding(mesh, P(None, None, _if_div(t_, "data", mesh), None))
+        if name == "ssm":                                # (L,B,H,dh,N)
+            l_, b_, h_, *_ = sh
+            bspec = dp if b_ % dp_size == 0 else None
+            return NamedSharding(mesh, P(None, bspec, _if_div(h_, tp, mesh), None, None))
+        if name == "wkv":                                # (L,B,H,dh,dh)
+            l_, b_, h_, *_ = sh
+            bspec = dp if b_ % dp_size == 0 else None
+            return NamedSharding(mesh, P(None, bspec, _if_div(h_, tp, mesh), None, None))
+        # conv / tshift / cshift / misc: batch over dp when divisible
+        b_ = sh[1] if leaf.ndim >= 2 else 1
+        bspec = dp if b_ % dp_size == 0 else None
+        return NamedSharding(mesh, P(None, bspec, *([None] * (leaf.ndim - 2))))
+
+    return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+def replicated(mesh, tree_abstract):
+    return jax.tree.map(lambda x: NamedSharding(mesh, P()), tree_abstract)

@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked-parallel training form
+plus an exact single-token recurrent decode form.
+
+Training form is the standard SSD block-decomposition: within a chunk the
+output is an attention-like masked matmul (MXU-friendly); across chunks a
+short ``lax.scan`` carries the (B, H, dh, N) state. Decode carries
+(conv_state, ssm_state) and costs O(1) per token — this is why the
+ssm/hybrid archs are the only ones that run the ``long_500k`` cell.
+
+Shapes: d_inner = expand·d_model, H = d_inner/d_head heads, N = d_state,
+n_groups = 1 (B/C shared across heads, per Mamba2 defaults).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import costmode
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.d_head
+    conv_dim = d_in + 2 * s.d_state  # x, B, C all pass the causal conv
+    return s, d_in, nh, conv_dim
+
+
+def mamba2_init(rng, cfg, dtype) -> dict:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    # in_proj emits [z | x | B | C | dt]
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * s.d_state + nh), dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim)) * (s.d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        # A in (-exp(a_log)); init log A ~ log uniform [1, 16) as in mamba2
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _conv1d_causal(x, w, b):
+    """Depthwise causal conv. x: (B, T, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # windowed sum: y[t] = sum_i w[i] * x[t - (K-1) + i]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return y + b
+
+
+def _split_proj(p, cfg, x):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim :]
+    return z, xbc, dt
+
+
+def _post(p, cfg, y, z, x_dtype):
+    """Gated RMSNorm + out projection (mamba2 ordering: norm(y * silu(z)))."""
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"].astype(x_dtype)
+
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = sum_{j < k <= i} x[..., k].
+    Returns -inf above the diagonal (strictly causal mask built in)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def mamba2_forward(p, cfg, x, state=None):
+    """x: (B, T, D) with T divisible by ssm.chunk (caller pads).
+    Returns (out (B,T,D), (conv_state, ssm_state)) — states returned so
+    prefill can hand off to decode."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b, t, _ = x.shape
+    q = costmode.chunk_size(min(s.chunk, t), t)
+    tp = ((t + q - 1) // q) * q
+    nc = tp // q
+    dt_ = x.dtype
+
+    z, xbc_pre, dt = _split_proj(p, cfg, x)
+    conv_state = xbc_pre[:, -(s.d_conv - 1) :, :]     # decode handoff window
+    xbc = jax.nn.silu(_conv1d_causal(xbc_pre, p["conv_w"].astype(dt_), p["conv_b"].astype(dt_)))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    if tp != t:  # state-neutral padding: dt → 0 kills both input and decay
+        xbc = jnp.pad(xbc, ((0, 0), (0, tp - t), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, tp - t), (0, 0)))
+    xs = xbc[..., :d_in].reshape(b, tp, nh, s.d_head)
+    bmat = xbc[..., d_in : d_in + s.d_state]          # (B,T,N)
+    cmat = xbc[..., d_in + s.d_state :]               # (B,T,N)
+
+    da = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt  # (B,T,H) log-decay, ≤ 0
+
+    # ---- chunk the time axis; scan over chunks (memory flat in T) ------
+    # per-chunk transient is (B,H,Q,Q): the (B,nc,H,Q,Q) all-chunks tensor
+    # would be tens of GB/device at train_4k.
+    chunk_first = lambda z: jnp.moveaxis(z.reshape(b, nc, q, *z.shape[2:]), 1, 0)
+    xc = chunk_first(xs.astype(jnp.float32))          # (nc,B,Q,H,dh)
+    bc = chunk_first(bmat.astype(jnp.float32))        # (nc,B,Q,N)
+    cc = chunk_first(cmat.astype(jnp.float32))        # (nc,B,Q,N)
+    dtc = chunk_first(dt)                             # (nc,B,Q,H)
+    dac = chunk_first(da)                             # (nc,B,Q,H)
+
+    s0 = (
+        jnp.zeros((b, nh, s.d_head, s.d_state), jnp.float32)
+        if state is None
+        else state.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        xq, bq, cq, dtq, daq = inp
+        xdt = xq * dtq[..., None]                      # (B,Q,H,dh)
+        seg = _segsum(jnp.moveaxis(daq, -1, -2))       # (B,H,Q,Q)
+        lmat = jnp.exp(seg)
+        y_diag = jnp.einsum("bqn,bsn,bhqs,bshd->bqhd", cq, bq, lmat, xdt, optimize=True)
+        cum = jnp.cumsum(daq, axis=1)                  # (B,Q,H)
+        decay_in = jnp.exp(cum)                        # chunk-start → step q
+        y_off = jnp.einsum("bqn,bhdn,bqh->bqhd", cq, h, decay_in, optimize=True)
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)      # step s → chunk end
+        h = h * jnp.exp(cum[:, -1, :])[..., None, None] + jnp.einsum(
+            "bsn,bsh,bshd->bhdn", bq, decay_out, xdt, optimize=True
+        )
+        return h, y_diag + y_off
+
+    ssm_final, yc = costmode.scan(step, s0, (xc, bc, cc, dtc, dac))
+    y = jnp.moveaxis(yc, 0, 1).reshape(b, tp, nh, s.d_head)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(b, tp, d_in)[:, :t].astype(dt_)
+
+    return _post(p, cfg, y, z, dt_), (conv_state, ssm_final.astype(jnp.float32))
+
+
+def mamba2_state_init(cfg, batch: int, dtype=jnp.float32) -> tuple:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return (
+        jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        jnp.zeros((batch, nh, s.d_head, s.d_state), jnp.float32),
+    )
+
+
+def mamba2_decode(p, cfg, x, state):
+    """x: (B, 1, D); state = (conv_state, ssm_state). O(1) per token."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    conv_st, h = state
+    b = x.shape[0]
+    dt_ = x.dtype
+
+    z, xbc, dt = _split_proj(p, cfg, x)               # (B,1,·)
+    window = jnp.concatenate([conv_st, xbc], axis=1)  # (B, d_conv, conv_dim)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"].astype(dt_)) + p["conv_b"].astype(dt_)
+    xbc1 = jax.nn.silu(conv_out)                      # (B, conv_dim)
+    xs = xbc1[:, :d_in].reshape(b, nh, s.d_head)
+    bvec = xbc1[:, d_in : d_in + s.d_state]
+    cvec = xbc1[:, d_in + s.d_state :]
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # (B,H)
+    da = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt1)  # (B,H)
+
+    xdt = xs.astype(jnp.float32) * dt1[..., None]     # (B,H,dh)
+    h = h * da[..., None, None] + jnp.einsum("bhd,bn->bhdn", xdt, bvec.astype(jnp.float32))
+    y = jnp.einsum("bhdn,bn->bhd", h, cvec.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[:, None]
+    y = y.reshape(b, 1, d_in).astype(dt_)
+
+    out = _post(p, cfg, y, z, dt_)
+    return out, (window[:, 1:, :], h)
+
+
+def mamba2_recurrent_ref(p, cfg, x):
+    """Exact per-step recurrence oracle (tests: chunked ≡ recurrent)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b, t, _ = x.shape
+    state = mamba2_state_init(cfg, b, x.dtype)
+    outs = []
+    for i in range(t):
+        o, state = mamba2_decode(p, cfg, x[:, i : i + 1], state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1), state

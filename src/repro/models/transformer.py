@@ -1,0 +1,432 @@
+"""Unified LM assembly for every assigned architecture family.
+
+A model is a *program*: an ordered list of homogeneous segments. Each
+segment's layers are init'd stacked (L, ...) and executed under
+``lax.scan`` (+ optional ``jax.checkpoint``), which keeps HLO size flat in
+depth — essential for the 60-layer deepseek dry-run compiles. Segment
+kinds:
+
+  attn_mlp    pre-norm GQA/MQA + (gated) MLP          dense / vlm backbones
+  attn_moe    GQA + MoE FFN (shared + routed)         qwen2-moe
+  mla_mlp     DeepSeek MLA + dense MLP                 deepseek leading layer
+  mla_moe     DeepSeek MLA + MoE FFN                   deepseek-v2
+  mamba       Mamba2 SSD block                         zamba2 backbone
+  rwkv        RWKV6 time-mix + channel-mix             rwkv6
+  site        zamba2 shared-attention invocation (one weight set, per-site
+              LoRA deltas; unrolled — each site owns a KV cache)
+
+Decode uses the same program; per-layer KV/SSM states ride through the
+layer scan as xs/ys (fixed shapes, no dynamic carry).
+
+Whisper's encoder-decoder assembly lives in whisper.py on top of the same
+segment machinery.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import rwkv6 as rk
+from . import ssm as mb
+from .attention import (causal_mask, cross_forward, cross_init, cross_kv,
+                        gqa_cache_init, gqa_decode, gqa_forward, gqa_init,
+                        mla_cache_init, mla_decode, mla_forward, mla_init,
+                        prefix_lm_mask)
+from .layers import (cross_entropy, dense_init, embed_init, layernorm,
+                     layernorm_init, mlp, mlp_init, rmsnorm, rmsnorm_init,
+                     unembed)
+from . import costmode
+from .meshops import shard_logits, shard_residual
+from .moe import moe_apply, moe_init
+
+
+@dataclass(frozen=True)
+class SegSpec:
+    kind: str
+    count: int
+
+
+def program(cfg) -> list[SegSpec]:
+    if cfg.family == "hybrid":
+        segs, every, left = [], cfg.shared_attn_every, cfg.n_layers
+        while left > 0:
+            k = min(every, left)
+            segs.append(SegSpec("mamba", k))
+            left -= k
+            if left > 0 or k == every:
+                segs.append(SegSpec("site", 1))
+        return segs
+    if cfg.ssm is not None and cfg.ssm.kind == "rwkv6":
+        return [SegSpec("rwkv", cfg.n_layers)]
+    if cfg.ssm is not None:
+        return [SegSpec("mamba", cfg.n_layers)]
+    if cfg.moe is not None and cfg.mla is not None:
+        segs = []
+        if cfg.n_dense_layers:
+            segs.append(SegSpec("mla_mlp", cfg.n_dense_layers))
+        segs.append(SegSpec("mla_moe", cfg.n_layers - cfg.n_dense_layers))
+        return segs
+    if cfg.moe is not None:
+        return [SegSpec("attn_moe", cfg.n_layers)]
+    return [SegSpec("attn_mlp", cfg.n_layers)]
+
+
+def n_sites(cfg) -> int:
+    return sum(1 for s in program(cfg) if s.kind == "site")
+
+
+# ---------------------------------------------------------------- norm disp
+def _norm_init(cfg, dtype):
+    return layernorm_init(cfg.d_model, dtype) if cfg.norm == "ln" else rmsnorm_init(cfg.d_model, dtype)
+
+
+def _norm(cfg, p, x):
+    return layernorm(p, x, cfg.norm_eps) if cfg.norm == "ln" else rmsnorm(p, x, cfg.norm_eps)
+
+
+# ------------------------------------------------------------- block init
+def block_init(rng, cfg, dtype, kind: str) -> dict:
+    ks = jax.random.split(rng, 4)
+    if kind in ("attn_mlp", "attn_moe"):
+        p = {"norm1": _norm_init(cfg, dtype), "attn": gqa_init(ks[0], cfg, dtype), "norm2": _norm_init(cfg, dtype)}
+        if kind == "attn_moe":
+            p["moe"] = moe_init(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, gated=cfg.gated_mlp)
+        return p
+    if kind in ("mla_mlp", "mla_moe"):
+        p = {"norm1": _norm_init(cfg, dtype), "attn": mla_init(ks[0], cfg, dtype), "norm2": _norm_init(cfg, dtype)}
+        if kind == "mla_moe":
+            p["moe"] = moe_init(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, gated=cfg.gated_mlp)
+        return p
+    if kind == "mamba":
+        return {"norm1": _norm_init(cfg, dtype), "mixer": mb.mamba2_init(ks[0], cfg, dtype)}
+    if kind == "rwkv":
+        return {
+            "norm1": _norm_init(cfg, dtype),
+            "tmix": rk.rwkv6_mix_init(ks[0], cfg, dtype),
+            "norm2": _norm_init(cfg, dtype),
+            "cmix": rk.rwkv6_cmix_init(ks[1], cfg, dtype),
+        }
+    raise ValueError(kind)
+
+
+def _site_init(rng, cfg, dtype) -> dict:
+    """Zamba2 shared attention block: one weight set + per-site LoRA."""
+    ks = jax.random.split(rng, 3)
+    shared = {
+        "norm1": _norm_init(cfg, dtype),
+        "attn": gqa_init(ks[0], cfg, dtype),
+        "norm2": _norm_init(cfg, dtype),
+        "ffn": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, gated=cfg.gated_mlp),
+    }
+    r = cfg.shared_attn_lora
+    sites = n_sites(cfg)
+    lora = None
+    if r:
+        kl = jax.random.split(ks[2], 2)
+        d = cfg.d_model
+        lora = {
+            "a": dense_init(kl[0], (sites, d, r), dtype, scale=0.02),
+            "b": jnp.zeros((sites, r, d), dtype),
+        }
+    return {"shared": shared, "lora": lora}
+
+
+# ------------------------------------------------------------ block apply
+def _ffn_part(p, cfg, x):
+    h = _norm(cfg, p["norm2"], x)
+    if "moe" in p:
+        out, aux = moe_apply(p["moe"], cfg, h)
+    else:
+        out, aux = mlp(p["ffn"], h, cfg.act), jnp.zeros((), jnp.float32)
+    return x + out, aux
+
+
+def block_apply(p, cfg, kind, x, positions, mask, xl_carry=None):
+    """Full-sequence form. Returns (x, aux_loss, kv_for_cache)."""
+    if kind in ("attn_mlp", "attn_moe", "mla_mlp", "mla_moe"):
+        h = _norm(cfg, p["norm1"], x)
+        fwd = mla_forward if kind.startswith("mla") else gqa_forward
+        attn_out, kv = fwd(p["attn"], cfg, h, positions, mask)
+        x = x + attn_out
+        x, aux = _ffn_part(p, cfg, x)
+        return x, aux, kv
+    if kind == "mamba":
+        h = _norm(cfg, p["norm1"], x)
+        out, state = mb.mamba2_forward(p["mixer"], cfg, h)
+        return x + out, jnp.zeros((), jnp.float32), state
+    if kind == "rwkv":
+        h = _norm(cfg, p["norm1"], x)
+        tout, tstate = rk.rwkv6_mix_chunked(p["tmix"], cfg, h)
+        x = x + tout
+        h2 = _norm(cfg, p["norm2"], x)
+        cout, cx = rk.rwkv6_cmix(p["cmix"], cfg, h2)
+        x = x + cout
+        return x, jnp.zeros((), jnp.float32), (*tstate, cx)
+    raise ValueError(kind)
+
+
+def _site_apply(p, cfg, site_idx, x, positions, mask):
+    sp = dict(p["shared"])
+    h = _norm(cfg, sp["norm1"], x)
+    if p["lora"] is not None:
+        a = p["lora"]["a"][site_idx].astype(x.dtype)
+        b = p["lora"]["b"][site_idx].astype(x.dtype)
+        h = h + (h @ a) @ b
+    attn_out, kv = gqa_forward(sp["attn"], cfg, h, positions, mask)
+    x = x + attn_out
+    h2 = _norm(cfg, sp["norm2"], x)
+    x = x + mlp(sp["ffn"], h2, cfg.act)
+    return x, kv
+
+
+def block_decode(p, cfg, kind, x, cache_l, length):
+    """Single-token form; cache_l is this layer's state (no scalars)."""
+    if kind in ("attn_mlp", "attn_moe", "mla_mlp", "mla_moe"):
+        h = _norm(cfg, p["norm1"], x)
+        dec = mla_decode if kind.startswith("mla") else gqa_decode
+        attn_out, new = dec(p["attn"], cfg, h, {**cache_l, "len": length})
+        new.pop("len")
+        x = x + attn_out
+        x, _ = _ffn_part(p, cfg, x)
+        return x, new
+    if kind == "mamba":
+        h = _norm(cfg, p["norm1"], x)
+        out, state = mb.mamba2_decode(p["mixer"], cfg, h, (cache_l["conv"], cache_l["ssm"]))
+        return x + out, {"conv": state[0], "ssm": state[1]}
+    if kind == "rwkv":
+        h = _norm(cfg, p["norm1"], x)
+        tout, (s, xlast) = rk.rwkv6_mix_recurrent(
+            p["tmix"], cfg, h, state=cache_l["wkv"], xlast=cache_l["tshift"]
+        )
+        x = x + tout
+        h2 = _norm(cfg, p["norm2"], x)
+        cout, cx = rk.rwkv6_cmix(p["cmix"], cfg, h2, xlast=cache_l["cshift"])
+        x = x + cout
+        return x, {"wkv": s, "tshift": xlast, "cshift": cx}
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------------- assembly
+def lm_init(rng, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 8)
+    segs = program(cfg)
+    seg_params = []
+    site_p = None
+    for idx, seg in enumerate(segs):
+        if seg.kind == "site":
+            seg_params.append(None)
+            continue
+        kr = jax.random.fold_in(ks[0], idx)
+        seg_params.append(
+            jax.vmap(lambda k: block_init(k, cfg, dtype, seg.kind))(jax.random.split(kr, seg.count))
+        )
+    if any(s.kind == "site" for s in segs):
+        site_p = _site_init(ks[1], cfg, dtype)
+    p = {
+        "embed": embed_init(ks[2], cfg.padded_vocab, cfg.d_model, dtype),
+        "segments": seg_params,
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    if site_p is not None:
+        p["site"] = site_p
+    if not cfg.tie_embed:
+        p["unembed"] = dense_init(ks[3], (cfg.d_model, cfg.padded_vocab), dtype, scale=0.02)
+    if cfg.vis_ctx:
+        p["vis_proj"] = dense_init(ks[4], (cfg.vis_width, cfg.d_model), dtype)
+    return p
+
+
+def _logits(p, cfg, x, compute_dtype):
+    x = _norm(cfg, p["final_norm"], x)
+    if cfg.tie_embed:
+        out = unembed(x, p["embed"], compute_dtype)
+    else:
+        out = (x @ p["unembed"].astype(compute_dtype)).astype(jnp.float32)
+    return shard_logits(out)
+
+
+def _embed_inputs(p, cfg, batch, compute_dtype):
+    """tokens (+vis) → x (B,T,D), mask (B,T,T), positions (B,T)."""
+    tok = batch["tokens"]
+    x = p["embed"][tok].astype(compute_dtype)
+    if cfg.vis_ctx:
+        vis = batch["vis"].astype(compute_dtype) @ p["vis_proj"].astype(compute_dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    b, t, _ = x.shape
+    x = shard_residual(x)  # anchor: batch over (pod, data), D replicated
+    # mask SPEC, not a materialized (B,T,T) tensor — flash consumes it
+    mask = ("prefix", cfg.vis_ctx) if cfg.vis_ctx else ("causal", 0)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    return x, mask, positions
+
+
+def lm_forward(p, cfg, batch, compute_dtype=jnp.bfloat16, remat: bool = True,
+               last_only: bool = False, return_hidden: bool = False):
+    """Training/prefill forward. Returns (logits fp32, aux_loss, caches).
+    ``last_only`` → logits for the final position only (serving prefill:
+    avoids the (B,T,V) fp32 tensor entirely). ``return_hidden`` → the
+    final-norm hidden states instead of logits (chunked-CE path)."""
+    x, mask, positions = _embed_inputs(p, cfg, batch, compute_dtype)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    site_idx = 0
+    for seg, seg_p in zip(program(cfg), p["segments"]):
+        if seg.kind == "site":
+            x, kv = _site_apply(p["site"], cfg, site_idx, x, positions, mask)
+            x = shard_residual(x)
+            caches.append(kv)
+            site_idx += 1
+            continue
+
+        def body(carry, layer_p, _kind=seg.kind):
+            y, aux_layer, kv = block_apply(layer_p, cfg, _kind, carry, positions, mask)
+            return shard_residual(y), (aux_layer, kv)
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, (auxs, kvs) = costmode.scan(body_fn, x, seg_p)
+        aux_total = aux_total + auxs.sum()
+        caches.append(kvs)
+    if last_only:
+        x = x[:, -1:]
+    if return_hidden:
+        return _norm(cfg, p["final_norm"], x), aux_total, caches
+    return _logits(p, cfg, x, compute_dtype), aux_total, caches
+
+
+def lm_loss(p, cfg, batch, compute_dtype=jnp.bfloat16, remat: bool = True):
+    from . import perf_flags
+    from .layers import chunked_ce
+
+    labels = batch["labels"]
+    if perf_flags.CHUNKED_CE:
+        hid, aux, _ = lm_forward(p, cfg, batch, compute_dtype, remat, return_hidden=True)
+        if cfg.vis_ctx:
+            hid = hid[:, cfg.vis_ctx:]
+        w = p["embed"].T if cfg.tie_embed else p["unembed"]
+        n = hid.shape[0] * hid.shape[1]
+        ce = chunked_ce(
+            hid.reshape(n, -1).astype(compute_dtype), w.astype(compute_dtype),
+            labels.reshape(n), (labels >= 0).reshape(n),
+            cfg.vocab, perf_flags.CHUNKED_CE,
+        )
+        return ce + aux, {"ce": ce, "aux": aux}
+    logits, aux, _ = lm_forward(p, cfg, batch, compute_dtype, remat)
+    if cfg.vis_ctx:  # loss on text positions only
+        logits = logits[:, cfg.vis_ctx :]
+    ce = cross_entropy(logits, labels, vocab_valid=cfg.vocab)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# -------------------------------------------------------------------- cache
+def _layer_cache_init(cfg, kind, batch, t_max, dtype):
+    if kind in ("attn_mlp", "attn_moe"):
+        c = gqa_cache_init(cfg, batch, t_max, dtype)
+        c.pop("len")
+        return c
+    if kind in ("mla_mlp", "mla_moe"):
+        c = mla_cache_init(cfg, batch, t_max, dtype)
+        c.pop("len")
+        return c
+    if kind == "mamba":
+        conv, ssmst = mb.mamba2_state_init(cfg, batch, dtype)
+        return {"conv": conv, "ssm": ssmst}
+    if kind == "rwkv":
+        s, tsh, csh = rk.rwkv6_state_init(cfg, batch)
+        return {"wkv": s, "tshift": tsh, "cshift": csh}
+    raise ValueError(kind)
+
+
+def lm_cache_init(cfg, batch: int, t_max: int, dtype=jnp.bfloat16) -> dict:
+    """t_max includes vis_ctx for vlm archs."""
+    segs = program(cfg)
+    seg_caches = []
+    for seg in segs:
+        if seg.kind == "site":
+            c = gqa_cache_init(cfg, batch, t_max, dtype)
+            c.pop("len")
+            seg_caches.append(c)
+        else:
+            one = _layer_cache_init(cfg, seg.kind, batch, t_max, dtype)
+            seg_caches.append(
+                jax.tree.map(lambda x: jnp.zeros((seg.count,) + x.shape, x.dtype), one)
+            )
+    return {"segments": seg_caches, "len": jnp.zeros((), jnp.int32)}
+
+
+def lm_decode_step(p, cfg, batch, cache, compute_dtype=jnp.bfloat16):
+    """One-token decode. batch: {"tokens": (B,1)}. Returns (logits, cache')."""
+    tok = batch["tokens"]
+    x = p["embed"][tok].astype(compute_dtype)
+    length = cache["len"]
+    new_segs = []
+    site_idx = 0
+    for seg, seg_p, seg_c in zip(program(cfg), p["segments"], cache["segments"]):
+        if seg.kind == "site":
+            sp = {"shared": p["site"]["shared"], "lora": p["site"]["lora"]}
+            h = _norm(cfg, sp["shared"]["norm1"], x)
+            if sp["lora"] is not None:
+                a = sp["lora"]["a"][site_idx].astype(x.dtype)
+                b = sp["lora"]["b"][site_idx].astype(x.dtype)
+                h = h + (h @ a) @ b
+            attn_out, newc = gqa_decode(sp["shared"]["attn"], cfg, h, {**seg_c, "len": length})
+            newc.pop("len")
+            x = x + attn_out
+            h2 = _norm(cfg, sp["shared"]["norm2"], x)
+            x = x + mlp(sp["shared"]["ffn"], h2, cfg.act)
+            new_segs.append(newc)
+            site_idx += 1
+            continue
+
+        def body(carry, inp, _kind=seg.kind):
+            layer_p, cache_l = inp
+            y, new_l = block_decode(layer_p, cfg, _kind, carry, cache_l, length)
+            return y, new_l
+
+        x, new_c = costmode.scan(body, x, (seg_p, seg_c))
+        new_segs.append(new_c)
+    logits = _logits(p, cfg, x, compute_dtype)
+    return logits, {"segments": new_segs, "len": length + 1}
+
+
+def lm_prefill(p, cfg, batch, t_max: int, compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    """Prefill: forward + pack the per-layer kv into a decode cache.
+    Returns last-position logits only (the serving semantic)."""
+    logits, aux, caches = lm_forward(p, cfg, batch, compute_dtype, remat=False,
+                                     last_only=True)
+    t = batch["tokens"].shape[1] + (cfg.vis_ctx or 0)
+    b = batch["tokens"].shape[0]
+    cache = lm_cache_init(cfg, b, t_max, cache_dtype)
+    new_segs = []
+    for seg, got, init_c in zip(program(cfg), caches, cache["segments"]):
+        if seg.kind == "site":
+            k, v = got
+            new_segs.append({
+                "k": jax.lax.dynamic_update_slice(init_c["k"], k.astype(cache_dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(init_c["v"], v.astype(cache_dtype), (0, 0, 0, 0)),
+            })
+        elif seg.kind in ("attn_mlp", "attn_moe"):
+            k, v = got  # (L,B,T,kv,dh) from scan ys
+            new_segs.append({
+                "k": jax.lax.dynamic_update_slice(init_c["k"], k.astype(cache_dtype), (0, 0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(init_c["v"], v.astype(cache_dtype), (0, 0, 0, 0, 0)),
+            })
+        elif seg.kind in ("mla_mlp", "mla_moe"):
+            ckv, kpe = got
+            new_segs.append({
+                "ckv": jax.lax.dynamic_update_slice(init_c["ckv"], ckv.astype(cache_dtype), (0, 0, 0, 0)),
+                "kpe": jax.lax.dynamic_update_slice(init_c["kpe"], kpe.astype(cache_dtype), (0, 0, 0, 0)),
+            })
+        elif seg.kind == "mamba":
+            conv, ssmst = got
+            new_segs.append({"conv": conv.astype(cache_dtype), "ssm": ssmst})
+        elif seg.kind == "rwkv":
+            s, xlast, cx = got
+            new_segs.append({"wkv": s, "tshift": xlast, "cshift": cx})
+    return logits, {"segments": new_segs, "len": jnp.asarray(t, jnp.int32)}

@@ -1,0 +1,182 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, enc_ctx, d_model). The encoder
+is a non-causal transformer over the frames; the decoder is a causal LM
+with cross-attention to the encoder output. LayerNorm + non-gated GELU
+MLPs throughout (matching the real architecture); sinusoidal positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (causal_mask, cross_forward, cross_init, cross_kv,
+                        gqa_cache_init, gqa_decode, gqa_forward, gqa_init)
+from .layers import (cross_entropy, dense_init, embed_init, layernorm,
+                     layernorm_init, mlp, mlp_init)
+from . import costmode
+from .meshops import shard_logits, shard_residual
+
+
+def _sinusoid(t: int, d: int):
+    pos = jnp.arange(t, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _enc_block_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 2)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype),
+        "attn": gqa_init(ks[0], cfg, dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype),
+        "ffn": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, gated=False),
+    }
+
+
+def _dec_block_init(rng, cfg, dtype):
+    ks = jax.random.split(rng, 3)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype),
+        "attn": gqa_init(ks[0], cfg, dtype),
+        "norm_x": layernorm_init(cfg.d_model, dtype),
+        "cross": cross_init(ks[1], cfg, dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype),
+        "ffn": mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype, gated=False),
+    }
+
+
+def whisper_init(rng, cfg, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 4)
+    return {
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            jax.random.split(ks[0], cfg.n_enc_layers)
+        ),
+        "enc_norm": layernorm_init(cfg.d_model, dtype),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+            jax.random.split(ks[1], cfg.n_layers)
+        ),
+        "dec_norm": layernorm_init(cfg.d_model, dtype),
+        "embed": embed_init(ks[2], cfg.padded_vocab, cfg.d_model, dtype),
+    }
+
+
+def encode(p, cfg, frames, compute_dtype=jnp.bfloat16, remat: bool = True):
+    """frames: (B, enc_ctx, d_model) stub embeddings → encoder output."""
+    b, t, _ = frames.shape
+    x = frames.astype(compute_dtype) + _sinusoid(t, cfg.d_model).astype(compute_dtype)
+    x = shard_residual(x)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+
+    def body(carry, layer_p):
+        h = layernorm(layer_p["norm1"], carry, cfg.norm_eps)
+        attn, _ = gqa_forward(layer_p["attn"], cfg, h, positions, ("none", 0))
+        y = carry + attn
+        h2 = layernorm(layer_p["norm2"], y, cfg.norm_eps)
+        y = y + mlp(layer_p["ffn"], h2, "gelu")
+        return shard_residual(y), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = costmode.scan(body_fn, x, p["enc_blocks"])
+    return layernorm(p["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(p, cfg, tokens, enc_out, compute_dtype=jnp.bfloat16, remat: bool = True,
+                 last_only: bool = False):
+    """Teacher-forced decoder pass. Returns (logits fp32, self_kv stacked)."""
+    b, t = tokens.shape
+    x = p["embed"][tokens].astype(compute_dtype) + _sinusoid(t, cfg.d_model).astype(compute_dtype)
+    x = shard_residual(x)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    mask = ("causal", 0)
+
+    def body(carry, layer_p):
+        h = layernorm(layer_p["norm1"], carry, cfg.norm_eps)
+        attn, kv = gqa_forward(layer_p["attn"], cfg, h, positions, mask)
+        y = carry + attn
+        hx = layernorm(layer_p["norm_x"], y, cfg.norm_eps)
+        ck, cv = cross_kv(layer_p["cross"], enc_out)
+        y = y + cross_forward(layer_p["cross"], cfg, hx, ck, cv)
+        h2 = layernorm(layer_p["norm2"], y, cfg.norm_eps)
+        y = y + mlp(layer_p["ffn"], h2, "gelu")
+        return shard_residual(y), kv
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, kvs = costmode.scan(body_fn, x, p["dec_blocks"])
+    if last_only:
+        x = x[:, -1:]
+    x = layernorm(p["dec_norm"], x, cfg.norm_eps)
+    logits = (x.astype(compute_dtype) @ p["embed"].astype(compute_dtype).T).astype(jnp.float32)
+    return shard_logits(logits), kvs
+
+
+def whisper_loss(p, cfg, batch, compute_dtype=jnp.bfloat16, remat: bool = True):
+    enc = encode(p, cfg, batch["frames"], compute_dtype, remat)
+    logits, _ = decode_train(p, cfg, batch["tokens"], enc, compute_dtype, remat)
+    ce = cross_entropy(logits, batch["labels"], vocab_valid=cfg.vocab)
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+def whisper_cache_init(cfg, batch: int, t_max: int, dtype=jnp.bfloat16) -> dict:
+    """Self-attn KV per decoder layer + precomputed cross K/V per layer."""
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    self_c = gqa_cache_init(cfg, batch, t_max, dtype)
+    self_c.pop("len")
+    return {
+        "self": jax.tree.map(lambda x: jnp.zeros((l,) + x.shape, x.dtype), self_c),
+        "cross_k": jnp.zeros((l, batch, cfg.enc_ctx, h, dh), dtype),
+        "cross_v": jnp.zeros((l, batch, cfg.enc_ctx, h, dh), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def whisper_prefill(p, cfg, batch, t_max: int, compute_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    """Encode + teacher-forced prefix → decode cache (self KV + cross KV)."""
+    enc = encode(p, cfg, batch["frames"], compute_dtype, remat=False)
+    logits, kvs = decode_train(p, cfg, batch["tokens"], enc, compute_dtype, remat=False,
+                               last_only=True)
+    k, v = kvs
+    cache = whisper_cache_init(cfg, batch["tokens"].shape[0], t_max, cache_dtype)
+    ck, cv = jax.vmap(lambda lp: cross_kv(lp, enc))(
+        jax.tree.map(lambda x: x, p["dec_blocks"]["cross"])
+    )
+    return logits, {
+        "self": {
+            "k": jax.lax.dynamic_update_slice(cache["self"]["k"], k.astype(cache_dtype), (0,) * 5),
+            "v": jax.lax.dynamic_update_slice(cache["self"]["v"], v.astype(cache_dtype), (0,) * 5),
+        },
+        "cross_k": ck.astype(cache_dtype),
+        "cross_v": cv.astype(cache_dtype),
+        "len": jnp.asarray(batch["tokens"].shape[1], jnp.int32),
+    }
+
+
+def whisper_decode_step(p, cfg, batch, cache, compute_dtype=jnp.bfloat16):
+    """One decoder token against the cached self/cross KV."""
+    tok = batch["tokens"]  # (B, 1)
+    length = cache["len"]
+    pos_emb = _sinusoid(cache["self"]["k"].shape[2], cfg.d_model)
+    x = p["embed"][tok].astype(compute_dtype) + jax.lax.dynamic_slice_in_dim(
+        pos_emb, length, 1, axis=0
+    ).astype(compute_dtype)
+
+    def body(carry, inp):
+        layer_p, self_c, ck, cv = inp
+        h = layernorm(layer_p["norm1"], carry, cfg.norm_eps)
+        attn, new = gqa_decode(layer_p["attn"], cfg, h, {**self_c, "len": length})
+        new.pop("len")
+        y = carry + attn
+        hx = layernorm(layer_p["norm_x"], y, cfg.norm_eps)
+        y = y + cross_forward(layer_p["cross"], cfg, hx, ck.astype(carry.dtype), cv.astype(carry.dtype))
+        h2 = layernorm(layer_p["norm2"], y, cfg.norm_eps)
+        y = y + mlp(layer_p["ffn"], h2, "gelu")
+        return y, new
+
+    x, new_self = costmode.scan(
+        body, x, (p["dec_blocks"], cache["self"], cache["cross_k"], cache["cross_v"])
+    )
+    x = layernorm(p["dec_norm"], x, cfg.norm_eps)
+    logits = (x.astype(compute_dtype) @ p["embed"].astype(compute_dtype).T).astype(jnp.float32)
+    return logits, {**cache, "self": new_self, "len": length + 1}

@@ -1,0 +1,88 @@
+"""AdamW from first principles (no optax dependency), pytree-native.
+
+The optimizer state mirrors the param pytree (m, v in fp32 regardless of
+param dtype — bf16 Adam moments diverge). ZeRO-1 is *pure sharding*: the
+update is elementwise, so sharding m/v with the same PartitionSpec as the
+FSDP-sharded params makes the optimizer state automatically partitioned;
+no gather/scatter code is needed (GSPMD keeps the elementwise update
+local). The sharding planner assigns those specs; nothing here is
+distribution-aware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, base_lr: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup → cosine decay to floor·base_lr."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * (step + 1) / jnp.maximum(warmup, 1)  # never a 0-LR step
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor * base_lr + (1 - floor) * base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_init(params, master_fp32: bool = False) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master_fp32:
+        # bf16 params on the wire (halves FSDP all-gathers); fp32 truth here
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    """Returns (new_params, new_state). lr may be a traced scalar."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+    masters = state.get("master")
+
+    def upd(p, g, m, v, master):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        mhat = m / bc1
+        vhat = v / bc2
+        # decoupled weight decay on matrices only (ndim >= 2), not norms/bias
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p32 = (master if master is not None else p).astype(jnp.float32)
+        p_new = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p32)
+        return p_new.astype(p.dtype), m, v, p_new
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    flat_ma = tdef.flatten_up_to(masters) if masters is not None else [None] * len(flat_p)
+    out = [upd(*z) for z in zip(flat_p, flat_g, flat_m, flat_v, flat_ma)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if masters is not None:
+        new_state["master"] = tdef.unflatten([o[3] for o in out])
+    return new_p, new_state

@@ -1,0 +1,49 @@
+"""Int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At (2, 16, 16) the pod axis crosses the slowest links (DCN/optical). Pure
+data parallelism across pods means one gradient all-reduce per step over
+that axis; quantizing it 4× (fp32→int8 + per-tensor scale) cuts the
+dominant collective term. Error feedback keeps the quantization *unbiased
+over time*: the residual (g - dequant(quant(g))) is added to the next
+step's gradient, so the series of applied updates telescopes to the true
+gradient sum (Karimireddy et al., 2019).
+
+`ef_compressed_mean` is written for use inside shard_map: the local
+gradient is quantized, psum'd over the pod axis in int32 (bit-exact
+accumulation), and dequantized; the residual is returned for the caller
+to stash in the optimizer state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g):
+    """g → (q int8, scale). Symmetric per-tensor scaling."""
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compressed_mean(g, residual, axis_name: str):
+    """Error-feedback int8 mean over `axis_name` (use under shard_map).
+
+    Returns (g_mean fp32, new_residual fp32)."""
+    g32 = g.astype(jnp.float32) + residual
+    # shared scale via a scalar pmax → every pod quantizes on the same grid,
+    # so psum(q)·scale is the *exact* sum of the dequantized shards.
+    amax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis_name)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_residual = g32 - q.astype(jnp.float32) * scale
+    acc = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    npods = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    g_mean = acc.astype(jnp.float32) * scale / npods
+    return g_mean, new_residual

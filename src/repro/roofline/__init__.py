@@ -1,0 +1,2 @@
+from .analysis import (HW, collective_bytes, model_flops, roofline_report,
+                       roofline_terms)

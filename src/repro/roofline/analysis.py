@@ -1,0 +1,168 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+  compute term    = per-chip HLO FLOPs / 197 TFLOP/s (bf16, TPU v5e)
+  memory term     = per-chip HLO bytes / 819 GB/s HBM
+  collective term = per-chip collective operand bytes / 50 GB/s ICI link
+
+``compiled.cost_analysis()`` on an SPMD-partitioned module reports the
+*per-device* program, so its flops/bytes are already per-chip (the prompt
+formula's `HLO_FLOPs / chips` with a global count — identical numbers).
+Collective bytes are NOT in cost_analysis: we walk the optimized HLO text
+and sum operand sizes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (skipping ``*-done`` halves of async
+pairs so nothing is double-counted).
+"""
+from __future__ import annotations
+
+import re
+
+HW = {
+    "peak_flops": 197e12,   # bf16 per chip
+    "hbm_bw": 819e9,        # bytes/s per chip
+    "ici_bw": 50e9,         # bytes/s per link
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 0.5, "u4": 0.5,
+}
+
+_TYPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _type_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # [num_groups, group_size]<=[total]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        body = m.group(1).strip()
+        return len(body.split(",")) if body else 1
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-op-kind *operand* bytes over the optimized HLO text.
+
+    The optimized dump prints operands as bare %names, so operand size is
+    reconstructed from the RESULT type + replica-group size:
+      all-reduce / all-to-all / collective-permute: operand == result
+      all-gather:     operand = result / group_size
+      reduce-scatter: operand = result × group_size
+    Async ``*-start`` ops are counted (largest tuple element as the
+    result); ``*-done`` halves are skipped — nothing double-counts."""
+    out = {k: {"count": 0, "bytes": 0.0} for k in _COLL}
+    for line in hlo_text.splitlines():
+        if " = " not in line:
+            continue
+        for kind in _COLL:
+            hit = line.find(f" {kind}(")
+            if hit < 0:
+                hit = line.find(f" {kind}-start(")
+            if hit < 0:
+                continue
+            head = line[: hit]  # "%name = <result type(s)>"
+            sizes = [_type_bytes(d, s) for d, s in _TYPE_RE.findall(head)]
+            if not sizes:
+                continue
+            rbytes = max(sizes)
+            g = _group_size(line)
+            if kind == "all-gather":
+                nbytes = rbytes / max(g, 1)
+            elif kind == "reduce-scatter":
+                nbytes = rbytes * g
+            else:
+                nbytes = rbytes
+            out[kind]["count"] += 1
+            out[kind]["bytes"] += nbytes
+            break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items() if k in _COLL)
+    return out
+
+
+def roofline_terms(cost: dict, coll: dict) -> dict:
+    """cost: compiled.cost_analysis() dict (per-device program)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll["total_bytes"])
+    t_compute = flops / HW["peak_flops"]
+    t_memory = byts / HW["hbm_bw"]
+    t_coll = cbytes / HW["ici_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    denom = max(t_compute, t_memory, t_coll, 1e-30)
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": byts,
+        "collective_bytes_per_chip": cbytes,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction_compute": t_compute / denom,
+    }
+
+
+# ------------------------------------------------------------- model flops
+def _count_params(tree) -> int:
+    import jax
+
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def _routed_params(tree) -> int:
+    """Leaves with an expert leading dim: MoE (e, d, f) / (e, f, d) mats
+    (stacked over layers → ndim == 4)."""
+    import jax
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = [str(getattr(e, "key", "")) for e in path]
+        if any(k in ("w_up", "w_gate", "w_down") for k in keys) and leaf.ndim == 4:
+            total += int(leaf.size)
+    return total
+
+
+def model_flops(cfg, cell, params_abstract) -> dict:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (serve), N = active params
+    excluding the embedding lookup table (not a matmul)."""
+    n_total = _count_params(params_abstract)
+    routed = _routed_params(params_abstract)
+    n_embed = cfg.padded_vocab * cfg.d_model  # lookup table
+    active_routed = routed * (cfg.moe.top_k / cfg.moe.padded) if cfg.moe else routed
+    n_active = n_total - routed + active_routed - n_embed
+    tokens = cell.global_batch * (1 if cell.kind == "decode" else cell.seq_len)
+    mult = 6 if cell.kind == "train" else 2
+    return {
+        "n_params_total": n_total,
+        "n_params_active": n_active,
+        "tokens": tokens,
+        "model_flops": mult * n_active * tokens,
+    }
+
+
+def roofline_report(cost, coll, cfg, cell, params_abstract, n_chips: int) -> dict:
+    terms = roofline_terms(cost, coll)
+    mf = model_flops(cfg, cell, params_abstract)
+    global_hlo = terms["hlo_flops_per_chip"] * n_chips
+    terms.update(mf)
+    terms["useful_flops_ratio"] = mf["model_flops"] / max(global_hlo, 1e-30)
+    terms["n_chips"] = n_chips
+    return terms

@@ -1,0 +1,196 @@
+"""Checkpointing (atomic, async, resharding) + fault-tolerance supervisor
+(checkpoint-restart with exact replay) + elastic remesh + pipeline runner."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_tree, save_tree
+from repro.distributed import Supervisor
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    save_tree(t, tmp_path / "ck", step=7)
+    back = restore_tree(t, tmp_path / "ck")
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_restore_shape_mismatch_fails_loudly(tmp_path):
+    t = _tree()
+    save_tree(t, tmp_path / "ck")
+    bad = dict(t, w=jnp.zeros((9, 4)))
+    with pytest.raises(ValueError):
+        restore_tree(bad, tmp_path / "ck")
+
+
+def test_manager_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, _tree(s), blocking=True)
+    assert mgr.latest_step() == 30
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2 and steps[-1].endswith("00000030")
+
+
+def test_manager_async_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree(3)
+    mgr.save(5, t)           # async
+    restored, step = mgr.restore(t)
+    assert step == 5
+    np.testing.assert_array_equal(restored["w"], t["w"])
+
+
+def test_supervisor_restart_replays_exactly(tmp_path):
+    """Inject a failure mid-run; final state must equal the no-failure run."""
+
+    def run(fail_at):
+        calls = {"n": 0}
+
+        def step_fn(state, batch):
+            if fail_at is not None and int(state["i"]) == fail_at and calls["n"] != -1:
+                if not calls.get("failed"):
+                    calls["failed"] = True
+                    raise RuntimeError("injected")
+            return {"i": state["i"] + 1, "acc": state["acc"] + batch}, {"v": float(state["acc"])}
+
+        sup = Supervisor(CheckpointManager(tmp_path / f"ck{fail_at}"), ckpt_every=3)
+        batch_fn = lambda step: jnp.asarray(step + 1, jnp.float32)  # cursor-exact
+        res = sup.run({"i": jnp.asarray(0), "acc": jnp.asarray(0.0)}, step_fn, batch_fn, 10)
+        return res
+
+    clean = run(None)
+    failed = run(7)
+    assert failed.restarts == 1
+    assert clean.metrics_history[-1] == failed.metrics_history[-1]
+
+
+def test_supervisor_straggler_watchdog(tmp_path):
+    import time
+
+    slow = {11: 0.25}
+
+    def step_fn(state, batch):
+        time.sleep(slow.get(int(state), 0.002))
+        return state + 1, {}
+
+    hits = []
+    sup = Supervisor(CheckpointManager(tmp_path), ckpt_every=100,
+                     straggler_factor=5.0, on_straggler=lambda s, dt, ema: hits.append(s))
+    sup.run(jnp.asarray(0), step_fn, lambda s: None, 15)
+    assert len(hits) >= 1
+
+
+_SUB = dict(
+    cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    env=dict(os.environ, PYTHONPATH="src"),
+    capture_output=True,
+    text=True,
+)
+
+
+def test_elastic_remesh_subprocess():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import remesh
+        m8 = jax.make_mesh((8,), ("data",))
+        m4 = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("data",))
+        x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+        xs = jax.device_put(x, NamedSharding(m8, P("data")))
+        spec_fn = lambda mesh: NamedSharding(mesh, P("data"))
+        moved = remesh(xs, spec_fn, m4)
+        assert len(moved.sharding.device_set) == 4
+        np.testing.assert_array_equal(np.asarray(moved), np.asarray(x))
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", script], **_SUB)
+    assert "OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_pipeline_matches_sequential_subprocess():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.distributed import pipeline_apply
+        from repro.distributed.pipeline import split_stages
+        mesh = jax.make_mesh((4,), ("pipe",))
+        L, D, M, MB = 8, 16, 6, 4
+        ks = jax.random.split(jax.random.key(0), L)
+        layers = {"w": jax.vmap(lambda k: jax.random.normal(k, (D, D)) * 0.2)(ks)}
+
+        def stage_fn(params, x):  # params: (L/S, D, D)
+            def body(h, w):
+                return jnp.tanh(h @ w) + h, None
+            h, _ = jax.lax.scan(body, x, params["w"])
+            return h
+
+        xs = jax.random.normal(jax.random.key(1), (M, MB, D))
+        stages = split_stages(layers, 4)
+        out = pipeline_apply(stage_fn, stages, xs, mesh)
+        # sequential oracle
+        def seq(x):
+            def body(h, w):
+                return jnp.tanh(h @ w) + h, None
+            h, _ = jax.lax.scan(body, x, layers["w"])
+            return h
+        ref = jax.vmap(seq)(xs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+        # differentiability: grad wrt params flows through ppermute
+        loss = lambda st: (pipeline_apply(stage_fn, st, xs, mesh) ** 2).sum()
+        g = jax.grad(loss)(stages)
+        assert np.isfinite(np.asarray(g["w"]).sum())
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", script], **_SUB)
+    assert "OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_sharding_planner_subprocess():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from repro.configs import ARCHS
+        from repro.models import registry as R, sharding as SH
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        for arch in ("qwen3-1.7b", "deepseek-v2-236b", "rwkv6-3b", "whisper-large-v3"):
+            cfg = ARCHS[arch]
+            pa = R.abstract_params(cfg, jnp.float32)
+            specs = SH.param_specs(cfg, pa, mesh)
+            flat_p = jax.tree.leaves(pa)
+            flat_s = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "spec"))
+            assert len(flat_p) == len(flat_s)
+            for p, s in zip(flat_p, flat_s):
+                # every sharded dim must divide
+                for dim, ax in zip(p.shape, tuple(s.spec) + (None,) * 8):
+                    if ax is None: continue
+                    size = 1
+                    for a in (ax if isinstance(ax, tuple) else (ax,)):
+                        size *= mesh.shape[a]
+                    assert dim % size == 0, (arch, p.shape, s.spec)
+        print("OK")
+    """)
+    out = subprocess.run([sys.executable, "-c", script], **_SUB)
+    assert "OK" in out.stdout, out.stderr[-2000:]

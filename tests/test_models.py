@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + mixer oracles.
+
+Assignment requirement (f): every assigned architecture instantiates a
+REDUCED config of the same family and runs one forward/train step on CPU
+asserting output shapes + no NaNs. Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, TrainConfig
+from repro.models import registry as R
+from repro.models import rwkv6 as rk
+from repro.models import ssm as mb
+from repro.models.flash import flash_attention, sdpa_ref
+from repro.optim import adamw_init
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch(cfg, b=2, t=32, key=0):
+    rng = jax.random.key(key)
+    batch = {
+        "tokens": jax.random.randint(rng, (b, t), 0, cfg.vocab),
+        "labels": jax.random.randint(rng, (b, t), 0, cfg.vocab),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(rng, (b, cfg.enc_ctx, cfg.d_model)) * 0.1
+    if cfg.vis_ctx:
+        batch["vis"] = jax.random.normal(rng, (b, cfg.vis_ctx, cfg.vis_width)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = ARCHS[arch].reduced()
+    api = R.build(cfg, compute_dtype=jnp.float32)
+    params = api.init(jax.random.key(0))
+    batch = _batch(cfg)
+
+    loss, metrics = api.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+
+    tcfg = TrainConfig(compute_dtype="float32", total_steps=4, warmup=1)
+    step = R.make_train_step(cfg, tcfg)
+    opt = adamw_init(params)
+    p2, opt2, m = step(params, opt, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    assert int(opt2["step"]) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b2.astype(jnp.float32)))) > 0
+        for a, b2 in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert moved, f"{arch}: train step did not update params"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_prefill_decode_consistency(arch):
+    cfg = ARCHS[arch].reduced()
+    if cfg.moe:  # capacity drops are shape-dependent noise — widen for the check
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    api = R.build(cfg, compute_dtype=jnp.float32, remat=False)
+    params = api.init(jax.random.key(0))
+    b, t, t_max = 2, 16, 64
+    batch = _batch(cfg, b, t)
+    batch.pop("labels")
+
+    logits_pre, cache = api.prefill(params, batch, t_max)
+    assert logits_pre.shape[0] == b and logits_pre.shape[1] == 1  # last-only
+    nxt = jax.random.randint(jax.random.key(3), (b, 1), 0, cfg.vocab)
+    logits_dec, cache2 = api.decode(params, {"tokens": nxt}, cache)
+    assert int(cache2["len"]) == int(cache["len"]) + 1
+
+    full = dict(batch)
+    full["tokens"] = jnp.concatenate([batch["tokens"], nxt], axis=1)
+    logits_full, _ = api.prefill(params, full, t_max)
+    err = float(jnp.max(jnp.abs(logits_full[:, -1] - logits_dec[:, -1])))
+    assert err < 2e-2, f"{arch}: prefill/decode diverge by {err}"
+    assert bool(jnp.all(jnp.isfinite(logits_dec)))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_input_specs_cover_all_cells(arch):
+    cfg = ARCHS[arch]
+    for cell in SHAPES.values():
+        ok, reason = R.supports_cell(cfg, cell)
+        if not ok:
+            assert cell.name == "long_500k" and not cfg.sub_quadratic
+            continue
+        specs = R.input_specs(cfg, cell)
+        assert specs["tokens"].shape[0] == cell.global_batch
+        if cell.kind == "decode":
+            assert specs["tokens"].shape[1] == 1
+
+
+# ------------------------------------------------------------ mixer oracles
+def test_mamba2_chunked_equals_recurrent():
+    cfg = ARCHS["zamba2-1.2b"].reduced()
+    p = mb.mamba2_init(jax.random.key(1), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(2), (2, 48, cfg.d_model)) * 0.5
+    yc, (convc, sc) = mb.mamba2_forward(p, cfg, x)
+    yr, (convr, sr) = mb.mamba2_recurrent_ref(p, cfg, x)
+    np.testing.assert_allclose(yc, yr, atol=1e-4)
+    np.testing.assert_allclose(sc, sr, atol=1e-4)
+
+
+def test_rwkv6_chunked_equals_recurrent():
+    cfg = ARCHS["rwkv6-3b"].reduced()
+    p = rk.rwkv6_mix_init(jax.random.key(3), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(4), (2, 40, cfg.d_model)) * 0.5  # non-divisible T
+    oc, (s1, x1) = rk.rwkv6_mix_chunked(p, cfg, x)
+    orr, (s2, x2) = rk.rwkv6_mix_recurrent(p, cfg, x)
+    np.testing.assert_allclose(oc, orr, atol=1e-4)
+    np.testing.assert_allclose(s1, s2, atol=1e-4)
+
+
+def test_ssm_state_handoff():
+    """prefill(T) state == recurrent state after T steps (decode handoff)."""
+    cfg = ARCHS["zamba2-1.2b"].reduced()
+    p = mb.mamba2_init(jax.random.key(5), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(6), (1, 32, cfg.d_model)) * 0.5
+    _, (conv_s, ssm_s) = mb.mamba2_forward(p, cfg, x)
+    x2 = jax.random.normal(jax.random.key(7), (1, 1, cfg.d_model)) * 0.5
+    y_cont, _ = mb.mamba2_decode(p, cfg, x2, (conv_s, ssm_s))
+    full = jnp.concatenate([x, x2], axis=1)
+    y_full, _ = mb.mamba2_forward(p, cfg, full)
+    np.testing.assert_allclose(y_cont[:, 0], y_full[:, -1], atol=1e-4)
+
+
+# ------------------------------------------------------------ flash oracle
+@pytest.mark.parametrize(
+    "b,tq,tk,kv,g,dh,kind,prefix,bk",
+    [
+        (2, 64, 64, 2, 3, 16, "causal", 0, 16),
+        (2, 48, 48, 1, 4, 8, "prefix", 7, 32),
+        (1, 33, 50, 2, 2, 8, "none", 0, 16),
+        (2, 128, 128, 4, 1, 32, "causal", 0, 512),
+    ],
+)
+def test_flash_matches_dense(b, tq, tk, kv, g, dh, kind, prefix, bk):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, tq, kv, g, dh))
+    k = jax.random.normal(ks[1], (b, tk, kv, dh))
+    v = jax.random.normal(ks[2], (b, tk, kv, dh))
+    o1 = flash_attention(q, k, v, dh ** -0.5, kind, prefix, bk)
+    o2 = sdpa_ref(q, k, v, dh ** -0.5, kind, prefix)
+    np.testing.assert_allclose(o1, o2, atol=1e-5)
+
+    f1 = lambda *a: (flash_attention(*a, dh ** -0.5, kind, prefix, bk) ** 2).sum()
+    f2 = lambda *a: (sdpa_ref(*a, dh ** -0.5, kind, prefix) ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b2 in zip(g1, g2):
+        np.testing.assert_allclose(a, b2, atol=5e-5)
+
+
+def test_flash_mla_different_dv():
+    """MLA uses dh_k=192, dh_v=128 — flash must support dv != dk."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (2, 32, 4, 1, 24))
+    k = jax.random.normal(ks[1], (2, 32, 4, 24))
+    v = jax.random.normal(ks[2], (2, 32, 4, 16))
+    o = flash_attention(q, k, v, 24 ** -0.5, "causal", 0, 16)
+    assert o.shape == (2, 32, 4, 1, 16)
+    g = jax.grad(lambda *a: (flash_attention(*a, 24 ** -0.5, "causal", 0, 16) ** 2).sum(),
+                 argnums=(0, 1, 2))(q, k, v)
+    assert g[2].shape == v.shape and bool(jnp.all(jnp.isfinite(g[2])))
+
+
+def test_moe_dispatch_matches_dense_ref():
+    from repro.models.moe import moe_apply, moe_init, moe_ref
+
+    cfg = dataclasses.replace(
+        ARCHS["qwen2-moe-a2.7b"].reduced(),
+        moe=dataclasses.replace(ARCHS["qwen2-moe-a2.7b"].reduced().moe, capacity_factor=16.0),
+    )
+    p = moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg.d_model)) * 0.5
+    out, aux = moe_apply(p, cfg, x)
+    ref = moe_ref(p, cfg, x)
+    np.testing.assert_allclose(out, ref, atol=1e-4)

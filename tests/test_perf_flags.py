@@ -1,0 +1,93 @@
+"""Beyond-paper perf toggles must be exact (same math, less traffic)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, TrainConfig
+from repro.models import perf_flags
+from repro.models import registry as R
+from repro.models.layers import chunked_ce, cross_entropy
+from repro.optim import adamw_init, adamw_update
+
+
+def test_chunked_ce_matches_dense():
+    rng = np.random.default_rng(0)
+    n, d, v, vocab_valid = 24, 16, 40, 37
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, vocab_valid, n), jnp.int32)
+    valid = jnp.asarray(rng.random(n) > 0.2)
+
+    def dense(x, w):
+        logits = (x @ w)[None]  # (1, N, V) for cross_entropy's shape conv
+        lab = jnp.where(valid, labels, -1)[None]
+        return cross_entropy(logits, lab, vocab_valid=vocab_valid)
+
+    def chunked(x, w):
+        return chunked_ce(x, w, labels, valid, vocab_valid, chunk=8)
+
+    np.testing.assert_allclose(dense(x, w), chunked(x, w), rtol=1e-5)
+    g1 = jax.grad(dense, argnums=(0, 1))(x, w)
+    g2 = jax.grad(chunked, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(g1[0], g2[0], atol=1e-5)
+    np.testing.assert_allclose(g1[1], g2[1], atol=1e-5)
+
+
+def test_chunk_must_divide_vocab_helper():
+    from repro.models.layers import _ce_chunk
+
+    assert _ce_chunk(152064, 8192) <= 8192
+    assert 152064 % _ce_chunk(152064, 8192) == 0
+
+
+def test_master_fp32_tracks_fp32_run():
+    rng = np.random.default_rng(1)
+    p32 = {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)}
+    pbf = jax.tree.map(lambda x: x.astype(jnp.bfloat16), p32)
+    s32 = adamw_init(p32)
+    sbf = adamw_init(pbf, master_fp32=True)
+    # master starts from the bf16 cast (realistic init path)
+    s32 = {**s32}
+    p32 = jax.tree.map(lambda x: x.astype(jnp.bfloat16).astype(jnp.float32), p32)
+    for t in range(5):
+        g = {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)}
+        p32, s32 = adamw_update(p32, g, s32, 1e-2)
+        pbf, sbf = adamw_update(pbf, g, sbf, 1e-2)
+    np.testing.assert_allclose(sbf["master"]["w"], p32["w"], atol=1e-6)
+    # the bf16 params are the rounded master
+    np.testing.assert_array_equal(
+        np.asarray(pbf["w"]), np.asarray(sbf["master"]["w"].astype(jnp.bfloat16))
+    )
+
+
+def test_flags_do_not_change_loss_math():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    api = R.build(cfg, compute_dtype=jnp.float32)
+    params = api.init(jax.random.key(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32), "labels": jnp.ones((2, 16), jnp.int32)}
+    base, _ = api.loss(params, batch)
+    try:
+        perf_flags.CHUNKED_CE = 64
+        perf_flags.FLASH_BF16 = False  # fp32 compute: exact equality expected
+        on, _ = api.loss(params, batch)
+    finally:
+        perf_flags.CHUNKED_CE = 0
+        perf_flags.FLASH_BF16 = False
+    np.testing.assert_allclose(float(base), float(on), rtol=2e-5)
+
+
+def test_flash_bf16_close_to_fp32():
+    cfg = ARCHS["qwen3-1.7b"].reduced()
+    api = R.build(cfg, compute_dtype=jnp.float32)
+    params = api.init(jax.random.key(0))
+    batch = {"tokens": jnp.ones((2, 16), jnp.int32), "labels": jnp.ones((2, 16), jnp.int32)}
+    base, _ = api.loss(params, batch)
+    try:
+        perf_flags.FLASH_BF16 = True
+        on, _ = api.loss(params, batch)
+    finally:
+        perf_flags.FLASH_BF16 = False
+    assert abs(float(base) - float(on)) < 5e-2  # bf16 matmul rounding only
