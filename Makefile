@@ -1,0 +1,16 @@
+# Repo verification targets. PYTHONPATH=src everywhere (no install step).
+PY ?= python
+
+.PHONY: test verify-kernels bench-pc ci
+
+test:  ## tier-1 suite
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+verify-kernels:  ## fast interpret-mode kernel + engine-parity smoke (no TPU needed)
+	PYTHONPATH=src $(PY) -m pytest -q -m kernels tests/test_kernels.py tests/test_engines.py
+
+bench-pc:  ## per-level engine timings -> BENCH_pc.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_engines
+
+ci:
+	bash scripts/ci.sh

@@ -1,0 +1,76 @@
+"""Per-level engine timings: jnp cuPC-S vs the kernel-backed "auto" hybrid.
+
+The first tracked perf datapoint for the kernel path (ISSUE 1): times
+``pc()`` per level on the scaled synthetic cuPC dataset configs for each
+engine, plus the chunk planner's compile-key footprint. Writes
+benchmarks/results/pc_engines.json and — as the repo-root perf trajectory
+file — BENCH_pc.json.
+
+NOTE on reading CPU numbers: off-TPU the "auto" engine executes the Pallas
+kernels in interpret mode, so its absolute times measure dispatch overhead,
+not kernel speed; the tracked signal on CPU is the jnp-S trend and the
+compile-key counts. On TPU the same harness times compiled Mosaic kernels.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import dataset, md_table, save, timed
+
+ROOT = Path(__file__).resolve().parent.parent
+
+CONFIGS = ["NCI-60-s", "MCC-s"]
+ENGINES = {"jnp-S": "S", "auto": "auto"}
+
+
+def _one(x, engine_name, quick):
+    from repro.core.pc import pc
+
+    run, total = timed(
+        lambda: pc(x, alpha=0.01, engine=engine_name, orient=False,
+                   max_level=2 if quick else None),
+        repeat=1 if quick else 2,
+    )
+    levels = {k: v for k, v in run.timings_s.items() if k.startswith("level")}
+    return {
+        "total_s": total,
+        "per_level_s": levels,
+        "levels_run": run.levels_run,
+        "edges": int(run.adj.sum()) // 2,
+        "engines_used": {st["level"]: st["engine"]
+                         for st in run.level_stats if not st["skipped"]},
+        "compile_keys": sorted(
+            {str(st["compile_key"]) for st in run.level_stats
+             if not st["skipped"] and "compile_key" in st}
+        ),
+    }
+
+
+def run(full: bool = False, quick: bool = False) -> str:
+    import jax
+
+    records = {}
+    for name in CONFIGS:
+        x, _, meta = dataset(name, full=full)
+        records[name] = {"meta": meta}
+        for label, engine_name in ENGINES.items():
+            records[name][label] = _one(x, engine_name, quick)
+
+    payload = {
+        "backend": jax.default_backend(),
+        "engines": list(ENGINES),
+        "configs": records,
+    }
+    save("pc_engines", payload)
+    (ROOT / "BENCH_pc.json").write_text(json.dumps(payload, indent=1, default=float))
+
+    rows = []
+    for name, rec in records.items():
+        for label in ENGINES:
+            r = rec[label]
+            lv = " ".join(f"{k[5:]}:{v * 1e3:.0f}ms" for k, v in r["per_level_s"].items())
+            rows.append([name, label, f"{r['total_s']:.2f}s", r["edges"], lv])
+    return "### PC engine timings (jnp-S vs kernel auto)\n\n" + md_table(
+        ["dataset", "engine", "total", "edges", "per-level"], rows
+    )

@@ -11,7 +11,7 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig5, fig6, fig7_8, fig9, fig10, pc_hillclimb,
+from . import (fig5, fig6, fig7_8, fig9, fig10, pc_engines, pc_hillclimb,
                roofline_table, table2)
 from .common import RESULTS
 
@@ -22,6 +22,7 @@ MODULES = [
     ("fig7_8", fig7_8),
     ("fig9", fig9),
     ("fig10", fig10),
+    ("pc_engines", pc_engines),
     ("pc_hillclimb", pc_hillclimb),
     ("roofline", roofline_table),
 ]

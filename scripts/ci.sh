@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# CI entry point: kernel smoke first (fast, catches Pallas regressions
+# without TPU hardware via interpret mode), then the full tier-1 suite.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "[ci] kernel + engine-parity smoke (interpret mode)"
+PYTHONPATH=src python -m pytest -q -m kernels tests/test_kernels.py tests/test_engines.py
+
+echo "[ci] tier-1 suite"
+PYTHONPATH=src python -m pytest -x -q

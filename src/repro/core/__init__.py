@@ -1,4 +1,5 @@
 """cuPC core: PC-stable skeleton + orientation engines (paper's contribution)."""
 from .pc import PCRun, pc, pc_from_corr  # noqa: F401
 from .cit import correlation_from_samples, fisher_z, threshold  # noqa: F401
+from .engines import DEFAULT_CELL_BUDGET, ENGINE_NAMES, resolve  # noqa: F401
 from .orient import cpdag_from_skeleton  # noqa: F401

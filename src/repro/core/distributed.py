@@ -22,7 +22,6 @@ replays at most one level.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -40,8 +39,11 @@ def pc_mesh(devices=None) -> Mesh:
     return Mesh(np.asarray(devices), ("rows",))
 
 
+@functools.lru_cache(maxsize=64)
 def _chunk_s_sharded_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int):
-    """Build the jitted shard_map chunk function for one (ℓ, chunk) config."""
+    """Build the jitted shard_map chunk function for one (ℓ, chunk) config.
+    lru_cache'd so bucketed (ℓ, n_chunk, n′) configs reuse the compiled
+    program across levels and calls (Mesh is hashable)."""
 
     @functools.partial(
         shard_map,
@@ -77,8 +79,11 @@ def _chunk_s_sharded_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int):
     return jax.jit(_sharded)
 
 
-def run_level_sharded(c, adj, sep, ell, tau, mesh, cell_budget=2**24):
-    """Distributed analogue of levels.run_level (cuPC-S engine)."""
+def run_level_sharded(c, adj, sep, ell, tau, mesh,
+                      cell_budget=L.DEFAULT_CELL_BUDGET, bucket=True):
+    """Distributed analogue of levels.run_level (cuPC-S engine), on the same
+    chunk planner: bucketed n′/chunk shapes keep one compiled shard_map
+    program live across level boundaries per mesh too."""
     n = c.shape[0]
     n_dev = mesh.devices.size
     counts_host = np.asarray(jax.device_get(jnp.sum(adj, axis=1)))
@@ -86,25 +91,28 @@ def run_level_sharded(c, adj, sep, ell, tau, mesh, cell_budget=2**24):
     if npr - 1 < ell:
         return adj, sep, {"skipped": True, "chunks": 0, "npr": npr}
 
-    compact, counts = compact_rows(adj, n_prime=npr)
     # pad rows to a device multiple; padded rows have counts=0 → fully masked
     pad = (-n) % n_dev
+    npr_b, n_chunk, total = L.plan_level(
+        npr, ell, max((n + pad) // n_dev, 1), engine="S",
+        cell_budget=cell_budget, bucket=bucket, n_cols=n,
+    )
+    compact, counts = compact_rows(adj, n_prime=npr_b)
     if pad:
         compact = jnp.pad(compact, ((0, pad), (0, 0)), constant_values=-1)
         counts = jnp.pad(counts, (0, pad))
     compact = jax.device_put(compact, NamedSharding(mesh, P("rows")))
     counts = jax.device_put(counts, NamedSharding(mesh, P("rows")))
 
-    total = math.comb(npr, ell)
-    per_rank_cells = max((n + pad) // n_dev, 1) * npr * max(ell, 1) ** 2
-    n_chunk = max(1, min(total, cell_budget // max(per_rank_cells, 1)))
-    fn = _chunk_s_sharded_fn(mesh, ell, n_chunk, npr)
+    fn = _chunk_s_sharded_fn(mesh, ell, n_chunk, npr_b)
     chunks = 0
     for t0 in range(0, total, n_chunk):
         adj, sep = fn(c, adj, sep, compact, counts,
                       jnp.asarray(t0, L._rank_dtype()), jnp.float32(tau))
         chunks += 1
-    return adj, sep, {"skipped": False, "chunks": chunks, "npr": npr, "total_sets": total}
+    return adj, sep, {"skipped": False, "chunks": chunks, "npr": npr,
+                      "npr_bucket": npr_b, "n_chunk": n_chunk, "total_sets": total,
+                      "compile_key": (ell, n_chunk, npr_b)}
 
 
 def pc_distributed(
@@ -115,9 +123,10 @@ def pc_distributed(
     mesh: Mesh | None = None,
     max_level: int | None = None,
     sepset_depth: int = 8,
-    cell_budget: int = 2**24,
+    cell_budget: int = L.DEFAULT_CELL_BUDGET,
     checkpoint_cb=None,
     resume=None,
+    bucket: bool = True,
 ):
     """Distributed PC-stable. Provide samples x (m,n) or corr matrix c + m.
 
@@ -159,7 +168,7 @@ def pc_distributed(
         if max_deg - 1 < ell:
             break
         adj, sep, st = run_level_sharded(c, adj, sep, ell, threshold(m, ell, alpha),
-                                         mesh, cell_budget=cell_budget)
+                                         mesh, cell_budget=cell_budget, bucket=bucket)
         stats.append({"level": ell, **st})
         if checkpoint_cb is not None:
             checkpoint_cb(ell, adj, sep)

@@ -1,0 +1,105 @@
+"""Engine registry: which code path runs a PC-stable level (the paper's
+cuPC-E/cuPC-S choice, extended with the Pallas kernel-backed paths).
+
+Names (case-insensitive; ``pc()`` / ``pc_from_corr()`` accept a name or a
+``callable(ell) -> name`` for custom per-level hybrids):
+
+  "S"         cuPC-S as jnp/XLA einsums (core/levels.chunk_s) — the
+              correctness anchor; fastest pure-XLA path on any backend.
+  "E"         cuPC-E as jnp/XLA einsums (core/levels.chunk_e) — paper
+              fidelity engine, no pseudo-inverse sharing.
+  "S-kernel"  cuPC-S with the per-set Cholesky inverse + CI sweep fused in
+              the Pallas kernels (kernels/ops.chunk_s_kernel → cholinv +
+              cisweep); gathers stay in XLA. Any level ℓ ≥ 1.
+  "L1-dense"  the fused dense ℓ=1 cube kernel (kernels/ops.level1_dense)
+              plus levels.commit_dense_l1 — erases the level that is
+              49–83 % of runtime (paper Fig. 6). ℓ=1 only; resolves to
+              "S" at ℓ ≥ 2 when requested for a whole run.
+  "auto"      the production hybrid: L1-dense at ℓ=1, S-kernel at ℓ≥2.
+              Off-TPU the kernels execute in Pallas interpret mode
+              (bit-identical decisions, Python speed) — pick "S" for CPU
+              throughput, "auto" for hardware runs.
+
+All engines share the chunk planner (levels.plan_level): n′ buckets and
+power-of-two chunk lengths keep the jit cache warm across level
+boundaries, and one VMEM-aware cell budget bounds every engine's per-
+dispatch worklist. All engines commit through the same deterministic
+(rank, endpoint-order) winner rule, so skeleton AND sepsets are identical
+across engines (asserted by tests/test_engines.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import levels as L
+from .levels import DEFAULT_CELL_BUDGET  # noqa: F401  (re-export; derivation there)
+
+ENGINE_NAMES = ("S", "E", "S-kernel", "L1-dense", "auto")
+_CANON = {name.lower(): name for name in ENGINE_NAMES}
+
+
+def resolve(engine, ell: int) -> str:
+    """Concrete engine for level ℓ. Accepts a name or callable(ell)->name."""
+    if callable(engine):
+        engine = engine(ell)
+    try:
+        name = _CANON[str(engine).lower()]
+    except KeyError:
+        raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINE_NAMES}")
+    if name == "auto":
+        return "L1-dense" if ell == 1 else "S-kernel"
+    if name == "L1-dense" and ell != 1:
+        return "S"  # the dense cube only exists at ℓ=1
+    return name
+
+
+def run_level(
+    c,
+    adj,
+    sep,
+    ell: int,
+    tau: float,
+    engine="auto",
+    cell_budget: int = DEFAULT_CELL_BUDGET,
+    bucket: bool = True,
+    chunk_fn_s=None,
+    chunk_fn_e=None,
+):
+    """Dispatch one PC-stable level to the resolved engine.
+
+    Same contract as levels.run_level: returns (adj, sep, stats) with
+    stats["engine"] naming the concrete path taken.
+    """
+    name = resolve(engine, ell)
+    if name == "L1-dense":
+        return _run_level_dense_l1(c, adj, sep, tau)
+    if name == "S-kernel":
+        from repro.kernels.ops import chunk_s_kernel
+
+        adj, sep, st = L.run_level(
+            c, adj, sep, ell, tau, engine="S", cell_budget=cell_budget,
+            chunk_fn_s=chunk_fn_s or chunk_s_kernel, bucket=bucket,
+        )
+        st["engine"] = "S-kernel"
+        return adj, sep, st
+    return L.run_level(
+        c, adj, sep, ell, tau, engine=name, cell_budget=cell_budget,
+        chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e, bucket=bucket,
+    )
+
+
+def _run_level_dense_l1(c, adj, sep, tau):
+    """ℓ=1 as ONE fused dense kernel launch + commit — no rank chunking, no
+    M2 gathers, no host loop (the paper's dominant level, Fig. 6)."""
+    from repro.kernels.ops import level1_dense
+
+    npr = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
+    if npr - 1 < 1:
+        return adj, sep, {"skipped": True, "chunks": 0, "npr": npr, "engine": "L1-dense"}
+    _removed, kwin = level1_dense(c, adj, tau)
+    adj_new, sep_new = L.commit_dense_l1(adj, sep, kwin)
+    return adj_new, sep_new, {
+        "skipped": False, "chunks": 1, "npr": npr, "npr_bucket": npr,
+        "total_sets": npr, "engine": "L1-dense", "dense": True,
+    }

@@ -21,9 +21,29 @@ optimisation; Fig. 6 shows ℓ=1 dominates runtime).
 
 SepSet determinism: within a level the winning separating set for an edge is
 the (endpoint-row, rank)-lexicographic minimum *per chunk*; across chunks the
-first separating chunk wins. This is a deterministic refinement of the
-paper's "whichever thread wins the race" and — like the paper — does not
-affect the skeleton (PC-stable order-independence).
+first separating chunk wins. Because ranks ascend across chunks, this equals
+the whole-level lexicographic minimum — the dense ℓ=1 kernel commit
+(``commit_dense_l1``) reproduces it exactly. This is a deterministic
+refinement of the paper's "whichever thread wins the race" and — like the
+paper — does not affect the skeleton (PC-stable order-independence).
+
+Engine-selection matrix (registry + dispatch live in core/engines.py; this
+module owns the jnp engines, the chunk planner and the commit layer):
+
+  engine     ℓ=1                     ℓ≥2                  backend
+  ─────────  ──────────────────────  ───────────────────  ─────────────────────
+  S          chunk_s                 chunk_s              any (XLA einsums)
+  E          chunk_e                 chunk_e              any (XLA einsums)
+  S-kernel   ops.chunk_s_kernel      ops.chunk_s_kernel   Pallas (interp off-TPU)
+  L1-dense   ops.level1_dense        (resolves to S)      Pallas (interp off-TPU)
+  auto       L1-dense                S-kernel             Pallas (interp off-TPU)
+
+Chunk planning (``plan_level``): n′ (max row degree) is bucketed up to the
+next power of two below one lane, then to lane (128) multiples, and the
+rank-chunk length is a power of two derived from a VMEM-aware cell budget.
+Both static shapes therefore recur across levels and runs instead of
+retriggering one XLA/Mosaic compile per exact max-degree — level boundaries
+reuse the jit cache (probed by tests/test_engines.py).
 """
 from __future__ import annotations
 
@@ -111,11 +131,17 @@ def _inv_spd(m, jitter=1e-8):
 # --------------------------------------------------------------------------
 # cuPC-S chunk: set-major with shared inverse
 # --------------------------------------------------------------------------
-def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int):
-    """cuPC-S CI tests for the given (possibly sharded) row block.
+def gather_s(c, adj, compact, counts, rows, ranks, *, ell: int, n_max: int):
+    """Shared cuPC-S worklist prologue: unrank the conditioning sets and
+    gather every array the CI math needs, with the full validity mask.
 
     c/adj are GLOBAL (n,n); compact/counts/rows are LOCAL (n_l rows, global
-    ids in `rows`). Returns (sep_found (n_l,T,npr) bool, s_ids (n_l,T,ell)).
+    ids in `rows`). Returns (m2 (n_l,T,ell,ell), ci_s (n_l,T,ell),
+    cj_s (n_l,T,npr,ell), cij (n_l,T,npr), mask (n_l,T,npr),
+    s_ids (n_l,T,ell)). Single source of truth for the rank-validity /
+    j∈S / alive-snapshot masking — the jnp engine (_tests_s) and the Pallas
+    engine (kernels/ops.chunk_s_kernel) must never diverge here or the
+    bit-identical cross-engine parity breaks.
     """
     n = c.shape[0]
     n_l, npr = compact.shape
@@ -130,30 +156,39 @@ def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int)
     s_ids = jnp.take_along_axis(compact, pos.reshape(n_l, -1), axis=1).reshape(n_l, n_chunk, ell)
     s_ids = jnp.clip(s_ids, 0, n - 1)  # padded slots are masked anyway
 
-    # M2 = C[S,S] and its inverse — ONE per (row, set): the cuPC-S sharing.
+    # M2 = C[S,S] — gathered ONCE per (row, set): the cuPC-S sharing.
     m2 = c[s_ids[..., :, None], s_ids[..., None, :]]  # (n_l,T,ell,ell)
+    ci_s = c[rows[:, None, None], s_ids]  # (n_l,T,ell)
+    j_ids = jnp.clip(compact, 0, n - 1)  # (n_l, npr)
+    cj_s = c[j_ids[:, None, :, None], s_ids[:, :, None, :]]  # (n_l,T,npr,ell)
+    cij = jnp.broadcast_to(c[rows[:, None], j_ids][:, None, :], (n_l, n_chunk, npr))
+
+    in_s = jnp.any(j_ids[:, None, :, None] == s_ids[:, :, None, :], axis=-1)
+    alive = adj[rows[:, None], j_ids] & (compact >= 0)  # (n_l,npr) snapshot
+    mask = valid_set[:, :, None] & ~in_s & alive[:, None, :]
+    return m2, ci_s, cj_s, cij, mask, s_ids
+
+
+def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int):
+    """cuPC-S CI tests for the given (possibly sharded) row block.
+
+    Returns (sep_found (n_l,T,npr) bool, s_ids (n_l,T,ell)).
+    """
+    m2, ci_s, cj_s, cij, mask, s_ids = gather_s(
+        c, adj, compact, counts, rows, ranks, ell=ell, n_max=n_max
+    )
+    # per-set inverse + shared vectors, then the neighbour sweep: MXU einsums
     if ell == 1:
         g = 1.0 / jnp.maximum(m2, 1e-8)  # scalar "inverse"
     else:
         g = _inv_spd(m2)
-
-    ci_s = c[rows[:, None, None], s_ids]  # (n_l,T,ell)
     u_i = jnp.einsum("ntab,ntb->nta", g, ci_s)
     var_i = 1.0 - jnp.einsum("nta,nta->nt", ci_s, u_i)
-
-    # sweep all neighbours j of row i (shared u_i): MXU einsums over (npr, ell)
-    j_ids = jnp.clip(compact, 0, n - 1)  # (n_l, npr)
-    cj_s = c[j_ids[:, None, :, None], s_ids[:, :, None, :]]  # (n_l,T,npr,ell)
-    cij = c[rows[:, None], j_ids][:, None, :]  # (n_l,1,npr)
     num = cij - jnp.einsum("ntpl,ntl->ntp", cj_s, u_i)
     gw = jnp.einsum("ntab,ntpb->ntpa", g, cj_s)
     var_j = 1.0 - jnp.einsum("ntpa,ntpa->ntp", cj_s, gw)
     rho = num / jnp.sqrt(jnp.maximum(var_i[..., None] * var_j, 1e-20))
     indep = fisher_z(rho) <= tau  # (n_l,T,npr)
-
-    in_s = jnp.any(j_ids[:, None, :, None] == s_ids[:, :, None, :], axis=-1)
-    alive = adj[rows[:, None], j_ids] & (compact >= 0)  # (n_l,npr) snapshot
-    mask = valid_set[:, :, None] & ~in_s & alive[:, None, :]
     return indep & mask, s_ids
 
 
@@ -296,6 +331,109 @@ def _commit(c, adj, sep, compact, counts, sep_found, ranks, s_ids_shared, s_ids_
 
 
 # --------------------------------------------------------------------------
+# dense ℓ=1 commit (kernel-backed L1-dense engine)
+# --------------------------------------------------------------------------
+@jax.jit
+def commit_dense_l1(adj, sep, kwin):
+    """Commit the fused dense ℓ=1 kernel result (kernels/level1.py).
+
+    kwin[i, j] is the minimum separating k restricted to adj(i) \\ {j} (or
+    ≥ 2^30 when row i found none). Its rank inside row i's sorted neighbour
+    list is exactly the combo-rank chunk_s would have found, so applying the
+    same (rank·2 + endpoint-order) lexicographic-min rule per undirected
+    edge yields sepsets bit-identical to the chunked S engine.
+    """
+    n = adj.shape[0]
+    imax = _imax()
+    rd = _rank_dtype()
+    adji = adj.astype(rd)
+    prefix = jnp.cumsum(adji, axis=1) - adji  # exclusive: rank of id k in row
+    kwin_c = jnp.clip(kwin, 0, n - 1).astype(jnp.int32)
+    rank = jnp.take_along_axis(prefix, kwin_c, axis=1)  # (n,n): rank of kwin[i,j]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    order_bit = (rows[:, None] > rows[None, :]).astype(rd)
+    own = (kwin < jnp.asarray(2**30, kwin.dtype)) & adj
+    key = jnp.where(own, rank * 2 + order_bit, imax)
+    final_key = jnp.minimum(key, key.T)
+    newly_removed = (final_key < imax) & adj
+    use_own = key <= key.T
+    s_win = jnp.where(use_own, kwin_c, kwin_c.T)
+    adj_new = adj & ~newly_removed
+    sep_new = sep.at[:, :, 0].set(jnp.where(newly_removed, s_win, sep[:, :, 0]))
+    return adj_new, sep_new
+
+
+# --------------------------------------------------------------------------
+# chunk planning: bucketed static shapes shared by jnp and kernel engines
+# --------------------------------------------------------------------------
+#: Cells (worklist entries) a single device dispatch may materialise —
+#: shared default of every engine (jnp, kernel, sharded). Derivation: one
+#: chunk's dominant array is the (n·T, n′, ℓ) fp32 gather — 2^24 cells
+#: ≈ 64 MB in HBM, far under one chip's HBM while big enough to amortise
+#: dispatch overhead; the Pallas kernels stream it through fixed (8, 128)
+#: VMEM tiles (ℓ²·4 KB per tile ≪ 16 MB VMEM), so the same budget is safe
+#: for the jnp and kernel engines alike.
+DEFAULT_CELL_BUDGET = 2**24
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+def _pow2_floor(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x.bit_length() - 1)
+
+
+def bucket_npr(npr: int, lane: int = 128) -> int:
+    """Round the compacted width n′ up to the next power of two (below one
+    lane) or lane multiple (at/above), so level boundaries reuse compiled
+    chunk functions instead of one fresh compile per exact max-degree."""
+    if npr <= 1:
+        return npr
+    return _pow2_ceil(npr) if npr < lane else -(-npr // lane) * lane
+
+
+def plan_level(
+    npr: int,
+    ell: int,
+    n_rows: int,
+    engine: str = "S",
+    cell_budget: int = DEFAULT_CELL_BUDGET,
+    bucket: bool = True,
+    n_cols: int | None = None,
+):
+    """Plan one level's static shapes: (npr_bucket, n_chunk, total_ranks).
+
+    ``cell_budget`` bounds the dominant worklist's cell count per dispatch —
+    shared by the jnp engines and the Pallas chunk_s_kernel (whose biggest
+    live array, the (n·T, n′, ℓ) neighbour gather, has the same cell count;
+    its per-tile VMEM footprint is a fixed ℓ²·8·128 fp32 regardless of T).
+    With ``bucket`` the chunk length is a power of two and ranks beyond
+    ``total`` are masked by the engines' valid_set/valid_rank logic, so the
+    (ℓ, n_chunk, n′) jit key recurs across levels; bucket=False reproduces
+    the legacy exact-shape behaviour (one compile per distinct max-degree).
+    ``n_cols`` (the global variable count) caps the bucket — a compact row
+    can never be wider than n, so buckets beyond it would misstate the
+    built shapes and shrink n_chunk below budget for nothing.
+    """
+    npr_b = bucket_npr(npr) if bucket else npr
+    if n_cols is not None:
+        npr_b = min(npr_b, n_cols)
+    if engine.upper() == "S":
+        total = math.comb(npr, ell)
+        per_rank_cells = n_rows * npr_b * max(ell, 1) * max(ell, 1)
+    else:
+        total = math.comb(max(npr - 1, 0), ell)
+        per_rank_cells = n_rows * npr_b * max(ell, 1) * max(ell, 1) * npr_b
+    budget_chunk = max(1, cell_budget // max(per_rank_cells, 1))
+    if bucket:
+        n_chunk = min(_pow2_ceil(total), _pow2_floor(budget_chunk))
+    else:
+        n_chunk = max(1, min(total, budget_chunk))
+    return npr_b, n_chunk, total
+
+
+# --------------------------------------------------------------------------
 # host-side level driver
 # --------------------------------------------------------------------------
 def run_level(
@@ -305,14 +443,17 @@ def run_level(
     ell: int,
     tau: float,
     engine: str = "S",
-    cell_budget: int = 2**24,
+    cell_budget: int = DEFAULT_CELL_BUDGET,
     chunk_fn_s=None,
     chunk_fn_e=None,
+    bucket: bool = True,
 ):
     """Run one PC-stable level. Host loop over rank-chunks (early-termination
     re-compaction happens implicitly through the `alive` snapshot).
 
-    Returns (adj, sep, stats-dict).
+    engine ∈ {"S", "E"} selects the jnp worklist shape; kernel-backed chunk
+    functions slot in via chunk_fn_s/chunk_fn_e (see core/engines.py for the
+    public registry). Returns (adj, sep, stats-dict).
     """
     from .compact import compact_rows
 
@@ -320,24 +461,22 @@ def run_level(
     counts_host = np.asarray(jax.device_get(jnp.sum(adj, axis=1)))
     npr = int(counts_host.max(initial=0))
     if npr - 1 < ell:
-        return adj, sep, {"skipped": True, "chunks": 0, "npr": npr}
-    compact, counts = compact_rows(adj, n_prime=npr)
+        return adj, sep, {"skipped": True, "chunks": 0, "npr": npr, "engine": engine}
+    npr_b, n_chunk, total = plan_level(
+        npr, ell, n, engine=engine, cell_budget=cell_budget, bucket=bucket, n_cols=n
+    )
+    compact, counts = compact_rows(adj, n_prime=npr_b)
+    fn = (chunk_fn_s or chunk_s) if engine.upper() == "S" else (chunk_fn_e or chunk_e)
 
-    if engine.upper() == "S":
-        total = math.comb(npr, ell)
-        per_rank_cells = n * npr * max(ell, 1) * max(ell, 1)
-        fn = chunk_fn_s or chunk_s
-    else:
-        total = math.comb(max(npr - 1, 0), ell)
-        per_rank_cells = n * npr * max(ell, 1) * max(ell, 1) * npr
-        fn = chunk_fn_e or chunk_e
-
-    n_chunk = max(1, min(total, cell_budget // max(per_rank_cells, 1)))
     chunks = 0
     for t0 in range(0, total, n_chunk):
         adj, sep = fn(
             c, adj, sep, compact, counts, jnp.asarray(t0, _rank_dtype()), tau,
-            ell=ell, n_chunk=n_chunk, n_max=npr,
+            ell=ell, n_chunk=n_chunk, n_max=npr_b,
         )
         chunks += 1
-    return adj, sep, {"skipped": False, "chunks": chunks, "npr": npr, "total_sets": total}
+    return adj, sep, {
+        "skipped": False, "chunks": chunks, "npr": npr, "npr_bucket": npr_b,
+        "n_chunk": n_chunk, "total_sets": total, "engine": engine,
+        "compile_key": (ell, n_chunk, npr_b),
+    }

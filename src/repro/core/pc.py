@@ -1,12 +1,15 @@
 """Top-level PC-stable driver — the public API of the paper's contribution.
 
-    result = pc(x_samples, alpha=0.01, engine="S")        # from raw samples
-    result = pc_from_corr(c, m, alpha=0.01, engine="E")   # from corr matrix
+    result = pc(x_samples, alpha=0.01)                    # kernel-backed auto
+    result = pc_from_corr(c, m, alpha=0.01, engine="S")   # force jnp cuPC-S
 
 Mirrors paper Algorithm 2: host loop over levels; level 0 fused; levels ≥ 1
-dispatched to the cuPC-E or cuPC-S batched engine; the adjacency is
-(re-)compacted at every level boundary. Orientation (v-structures + Meek)
-produces the CPDAG.
+dispatched through the engine registry (core/engines.py) — by default the
+"auto" hybrid: the fused dense ℓ=1 Pallas kernel, then the cholinv+cisweep
+cuPC-S kernel pipeline for ℓ≥2 (interpret mode off-TPU). The adjacency is
+(re-)compacted at every level boundary with bucketed static shapes so jit
+caches persist across levels. Orientation (v-structures + Meek) produces
+the CPDAG.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import engines as E
 from . import levels as L
 from .cit import correlation_from_samples, threshold
 from .combinadics import MAX_LEVEL
@@ -48,15 +52,21 @@ def pc_from_corr(
     c,
     m: int,
     alpha: float = 0.01,
-    engine: str = "S",
+    engine="auto",
     max_level: int | None = None,
     sepset_depth: int = 8,
-    cell_budget: int = 2**24,
+    cell_budget: int = E.DEFAULT_CELL_BUDGET,
     orient: bool = True,
     chunk_fn_s=None,
     chunk_fn_e=None,
+    bucket: bool = True,
 ) -> PCRun:
-    """Run PC-stable given a correlation matrix c (n,n) and sample count m."""
+    """Run PC-stable given a correlation matrix c (n,n) and sample count m.
+
+    engine: a name from engines.ENGINE_NAMES or callable(ell)->name;
+    bucket=False disables n′/chunk bucketing (one jit compile per exact
+    max-degree — the legacy behaviour, kept for the compile-count probe).
+    """
     t_start = time.perf_counter()
     c = jnp.asarray(c, jnp.float32)
     n = c.shape[0]
@@ -78,10 +88,10 @@ def pc_from_corr(
         if max_deg - 1 < ell:
             break
         t0 = time.perf_counter()
-        eng = engine(ell) if callable(engine) else engine  # per-level hybrid
-        adj, sep, st = L.run_level(
-            c, adj, sep, ell, threshold(m, ell, alpha), engine=eng,
-            cell_budget=cell_budget, chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e,
+        adj, sep, st = E.run_level(
+            c, adj, sep, ell, threshold(m, ell, alpha), engine=engine,
+            cell_budget=cell_budget, bucket=bucket,
+            chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e,
         )
         jax.block_until_ready(adj)
         timings[f"level{ell}"] = time.perf_counter() - t0
@@ -107,11 +117,25 @@ def pc_from_corr(
 def pc(
     x,
     alpha: float = 0.01,
-    engine: str = "S",
+    engine="auto",
     max_level: int | None = None,
+    corr: str = "auto",
     **kw,
 ) -> PCRun:
-    """Run PC-stable from raw samples x: (m, n)."""
+    """Run PC-stable from raw samples x: (m, n).
+
+    corr: "kernel" computes C on the tiled MXU kernel (kernels/corr.py),
+    "jnp" uses the XLA reference; "auto" picks the kernel on TPU and jnp
+    elsewhere (the interpreted kernel is exact but CPU-slow for large m·n²).
+    """
     x = jnp.asarray(x)
-    c = correlation_from_samples(x)
+    if corr not in ("auto", "kernel", "jnp"):
+        raise ValueError(f"corr must be auto|kernel|jnp, got {corr!r}")
+    use_kernel = corr == "kernel" or (corr == "auto" and jax.default_backend() == "tpu")
+    if use_kernel:
+        from repro.kernels.ops import correlation as corr_kernel
+
+        c = corr_kernel(x)
+    else:
+        c = correlation_from_samples(x)
     return pc_from_corr(c, int(x.shape[0]), alpha=alpha, engine=engine, max_level=max_level, **kw)

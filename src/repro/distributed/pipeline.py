@@ -17,7 +17,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 
@@ -68,7 +68,7 @@ def pipeline_apply(stage_fn, stage_params, xs, mesh, axis: str = "pipe"):
         jax.tree.map(lambda _: P(axis), stage_params),
         P(),
     )
-    fn = shard_map(runner, mesh=mesh, in_specs=in_specs, out_specs=P(), check_vma=False)
+    fn = shard_map(runner, mesh=mesh, in_specs=in_specs, out_specs=P(), check_rep=False)
     return fn(stage_params, xs)
 
 

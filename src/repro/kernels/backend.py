@@ -1,0 +1,18 @@
+"""Backend detection shared by the raw kernels and their ops.py wrappers.
+
+Every Pallas kernel in this package takes ``interpret=None`` and resolves it
+here: compiled Mosaic on TPU, Python interpret mode (bit-identical
+semantics, CPU speed) everywhere else. Callers hitting the raw kernels
+directly therefore get the right mode without knowing the backend; tests can
+still force ``interpret=True`` explicitly.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(flag: bool | None = None) -> bool:
+    """None → auto: interpret off-TPU, compiled on TPU. Bools pass through."""
+    if flag is None:
+        return jax.default_backend() != "tpu"
+    return bool(flag)

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .backend import resolve_interpret
+
 
 def _cholinv_kernel(m2_ref, ci_ref, g_ref, u_ref, var_ref, *, ell: int, jitter: float):
     # load a[i][j] as (bs, 128) lane tiles
@@ -72,10 +74,12 @@ def _cholinv_kernel(m2_ref, ci_ref, g_ref, u_ref, var_ref, *, ell: int, jitter: 
 @functools.partial(jax.jit, static_argnames=("ell", "bs", "interpret"))
 def cholinv_kernel(
     m2: jax.Array, ci_s: jax.Array, *, ell: int, bs: int = 8,
-    jitter: float = 1e-8, interpret: bool = True,
+    jitter: float = 1e-8, interpret: bool | None = None,
 ):
     """m2: (ℓ,ℓ,Bs,128) fp32 SPD batch; ci_s: (ℓ,Bs,128).
-    Returns g (ℓ,ℓ,Bs,128), u_i (ℓ,Bs,128), var_i (Bs,128)."""
+    Returns g (ℓ,ℓ,Bs,128), u_i (ℓ,Bs,128), var_i (Bs,128).
+    interpret=None auto-detects the backend (interpret mode off-TPU)."""
+    interpret = resolve_interpret(interpret)
     _, _, bs_total, lane = m2.shape
     grid = (bs_total // bs,)
     return pl.pallas_call(

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 
 def _cisweep_kernel(
     tau_ref, g_ref, u_ref, var_ref, cjs_ref, cij_ref, mask_ref, out_ref, *, ell: int,
@@ -48,10 +50,12 @@ def _cisweep_kernel(
 def cisweep_kernel(
     g: jax.Array, u_i: jax.Array, var_i: jax.Array, cj_s: jax.Array,
     cij: jax.Array, mask: jax.Array, tau: float, *, ell: int, bs: int = 8,
-    bp: int = 8, interpret: bool = True,
+    bp: int = 8, interpret: bool | None = None,
 ):
     """g:(ℓ,ℓ,Bs,128) u:(ℓ,Bs,128) var:(Bs,128) cj_s:(P,ℓ,Bs,128)
-    cij/mask:(P,Bs,128) → indep (P,Bs,128) uint8. P % bp == Bs % bs == 0."""
+    cij/mask:(P,Bs,128) → indep (P,Bs,128) uint8. P % bp == Bs % bs == 0.
+    interpret=None auto-detects the backend (interpret mode off-TPU)."""
+    interpret = resolve_interpret(interpret)
     p_total, _, bs_total, lane = cj_s.shape
     grid = (bs_total // bs, p_total // bp)
     tau_arr = jnp.asarray(tau, jnp.float32).reshape(1)

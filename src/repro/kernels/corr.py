@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 
 def _corr_kernel(x1_ref, x2_ref, o_ref, acc_ref, *, inv_m: float, k_steps: int):
     @pl.when(pl.program_id(2) == 0)
@@ -33,11 +35,13 @@ def _corr_kernel(x1_ref, x2_ref, o_ref, acc_ref, *, inv_m: float, k_steps: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "bm", "interpret"))
-def corr_matmul(xn: jax.Array, *, bn: int = 256, bm: int = 512, interpret: bool = True):
+def corr_matmul(xn: jax.Array, *, bn: int = 256, bm: int = 512, interpret: bool | None = None):
     """xn: (m, n) already standardized (zero mean, unit std); returns XnᵀXn/m.
 
-    m, n must be multiples of bm, bn (ops.py pads).
+    m, n must be multiples of bm, bn (ops.py pads). interpret=None
+    auto-detects the backend (interpret mode off-TPU).
     """
+    interpret = resolve_interpret(interpret)
     m, n = xn.shape
     k_steps = m // bm
     grid = (n // bn, n // bn, k_steps)

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 
 def _level0_kernel(tau_ref, c_ref, o_ref, *, bi: int, bj: int):
     tau = tau_ref[0]
@@ -23,8 +25,10 @@ def _level0_kernel(tau_ref, c_ref, o_ref, *, bi: int, bj: int):
 
 
 @functools.partial(jax.jit, static_argnames=("bi", "bj", "interpret"))
-def level0_kernel(c: jax.Array, tau: float, *, bi: int = 256, bj: int = 256, interpret: bool = True):
-    """c: (n, n) fp32 with n % bi == n % bj == 0 (ops.py pads). → uint8 adj."""
+def level0_kernel(c: jax.Array, tau: float, *, bi: int = 256, bj: int = 256, interpret: bool | None = None):
+    """c: (n, n) fp32 with n % bi == n % bj == 0 (ops.py pads). → uint8 adj.
+    interpret=None auto-detects the backend (interpret mode off-TPU)."""
+    interpret = resolve_interpret(interpret)
     n = c.shape[0]
     tau_arr = jnp.asarray(tau, jnp.float32).reshape(1)
     return pl.pallas_call(

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .backend import resolve_interpret
+
 _BIG = 2**30  # python int: jnp consts must not be captured by kernels
 
 
@@ -43,20 +45,27 @@ def _level1_kernel(
     rho = jnp.clip(rho, -0.9999999, 0.9999999)
     indep = jnp.abs(jnp.arctanh(rho)) <= tau  # (bi, bj, bk)
 
-    # masks: k ∈ adj(i) ∪ adj(j); k ≠ i, k ≠ j; edge alive
-    kmask = (adj_ik_ref[...] > 0)[:, None, :] | (adj_jk_ref[...] > 0)[None, :, :]
+    # masks: k ≠ i, k ≠ j; edge alive. `found` uses k ∈ adj(i) ∪ adj(j) (the
+    # union of both endpoints' candidate pools — what decides removal);
+    # `kwin` is restricted to the ROW-LOCAL pool k ∈ adj(i) so the host
+    # commit can rank it inside row i's compacted neighbour list and replay
+    # the chunked S engine's deterministic (rank, endpoint-order) winner.
+    k_own = (adj_ik_ref[...] > 0)[:, None, :]
+    kmask = k_own | (adj_jk_ref[...] > 0)[None, :, :]
     gi = pl.program_id(0) * bi + jax.lax.broadcasted_iota(jnp.int32, (bi, bk), 0)
     gj = pl.program_id(1) * bj + jax.lax.broadcasted_iota(jnp.int32, (bj, bk), 0)
     gk_i = pl.program_id(2) * bk + jax.lax.broadcasted_iota(jnp.int32, (bi, bk), 1)
     gk_j = pl.program_id(2) * bk + jax.lax.broadcasted_iota(jnp.int32, (bj, bk), 1)
-    kmask &= (gk_i != gi)[:, None, :] & (gk_j != gj)[None, :, :]
+    neq = (gk_i != gi)[:, None, :] & (gk_j != gj)[None, :, :]
+    kmask &= neq
     alive = (adj_ij_ref[...] > 0)
 
     sep = indep & kmask & alive[:, :, None]
     found_acc[...] |= jnp.any(sep, axis=-1).astype(jnp.uint8) > 0
+    sep_own = indep & k_own & neq & alive[:, :, None]
     gk3 = pl.program_id(2) * bk + jax.lax.broadcasted_iota(jnp.int32, (bi, bj, bk), 2)
     kmin_acc[...] = jnp.minimum(
-        kmin_acc[...], jnp.min(jnp.where(sep, gk3, _BIG), axis=-1)
+        kmin_acc[...], jnp.min(jnp.where(sep_own, gk3, _BIG), axis=-1)
     )
 
     @pl.when(pl.program_id(2) == k_steps - 1)
@@ -68,11 +77,14 @@ def _level1_kernel(
 @functools.partial(jax.jit, static_argnames=("bi", "bj", "bk", "interpret"))
 def level1_dense_kernel(
     c: jax.Array, adj: jax.Array, tau: float, *, bi: int = 8, bj: int = 128,
-    bk: int = 128, interpret: bool = True,
+    bk: int = 128, interpret: bool | None = None,
 ):
     """c: (n,n) fp32, adj: (n,n) uint8 (G′ snapshot), n % lcm(bi,bj,bk) == 0.
 
-    Returns (removed (n,n) uint8, kwin (n,n) int32)."""
+    Returns (removed (n,n) uint8 — separator exists in adj(i) ∪ adj(j);
+    kwin (n,n) int32 — min separating k ∈ adj(i) \\ {j}, else 2^30).
+    interpret=None auto-detects the backend (interpret mode off-TPU)."""
+    interpret = resolve_interpret(interpret)
     n = c.shape[0]
     k_steps = n // bk
     grid = (n // bi, n // bj, k_steps)

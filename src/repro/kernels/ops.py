@@ -2,8 +2,25 @@
 
 On non-TPU backends the kernels run in interpret mode (Python semantics on
 CPU) — bit-for-bit the algorithm that compiles for TPU. `interpret=None`
-auto-detects. The wrappers accept the natural batch-first layouts used by
-core/levels.py and do the SoA transposes the kernels want.
+auto-detects (kernels/backend.py). The wrappers accept the natural
+batch-first layouts used by core/levels.py and do the SoA transposes the
+kernels want.
+
+Engine-selection matrix (who calls which kernel; registry in
+core/engines.py, jnp engines in core/levels.py):
+
+  engine     ℓ=1                          ℓ≥2                  code path
+  ─────────  ───────────────────────────  ───────────────────  ─────────────────
+  S          levels.chunk_s               levels.chunk_s       XLA einsums
+  E          levels.chunk_e               levels.chunk_e       XLA einsums
+  S-kernel   ops.chunk_s_kernel           ops.chunk_s_kernel   cholinv+cisweep
+  L1-dense   ops.level1_dense             (resolves to S)      level1 cube
+  auto       L1-dense                     S-kernel             fused production
+
+On TPU every ops.* path compiles through Mosaic; off-TPU the same kernels
+execute in Pallas interpret mode, so `auto` stays bit-identical across
+backends (the XLA gathers feeding the kernels are backend-native either
+way). corr.py backs `pc(x, corr="kernel")`; level0.py is the fused Alg. 3.
 """
 from __future__ import annotations
 
@@ -17,12 +34,9 @@ from . import cisweep as _cisweep
 from . import corr as _corr
 from . import level0 as _level0
 from . import level1 as _level1
+from .backend import resolve_interpret as _interp
 
 LANE = 128
-
-
-def _interp(flag):
-    return jax.default_backend() != "tpu" if flag is None else flag
 
 
 def _pad_to(x, mult, axis, value=0.0):
@@ -62,7 +76,9 @@ def level0(c: jax.Array, tau: float, *, block: int = 256, interpret=None) -> jax
 
 # -------------------------------------------------------- level 1 (dense cube)
 def level1_dense(c: jax.Array, adj: jax.Array, tau: float, *, interpret=None):
-    """Returns (removed (n,n) bool, kwin (n,n) int32 min separating k)."""
+    """Returns (removed (n,n) bool — separator in adj(i) ∪ adj(j); kwin
+    (n,n) int32 — min separating k ∈ adj(i) \\ {j}, row-local for the
+    deterministic sepset commit in core/levels.commit_dense_l1)."""
     n = c.shape[0]
     bi, bj, bk = 8, min(128, _ceil_mult(n, LANE)), min(128, _ceil_mult(n, LANE))
     cp = _pad_to(_pad_to(c, max(bi, bj, bk), 0), max(bi, bj, bk), 1)
@@ -121,30 +137,17 @@ def ci_shared(
 @functools.partial(jax.jit, static_argnames=("ell", "n_chunk", "n_max"))
 def chunk_s_kernel(c, adj, sep, compact, counts, t0, tau, *, ell, n_chunk, n_max):
     """Same contract as core.levels.chunk_s but the per-set inverse + CI sweep
-    run in the Pallas kernels (gathers stay in XLA, which excels at them)."""
+    run in the Pallas kernels (the unrank/gather/mask prologue is the SAME
+    levels.gather_s the jnp engine uses — gathers stay in XLA, which excels
+    at them, and the masking semantics can't diverge across engines)."""
     from repro.core import levels as L
 
     n, npr = compact.shape
-    table = L._jtable(n_max)
     rows = jnp.arange(n, dtype=jnp.int32)
     ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
-    total = table[jnp.clip(counts, 0, n_max), ell]
-    valid_set = ranks[None, :] < total[:, None]
-
-    pos = L._unrank_dyn(ranks[None, :], counts[:, None], npr, ell, table)
-    pos = jnp.where(valid_set[..., None], pos, 0)
-    s_ids = jnp.take_along_axis(compact, pos.reshape(n, -1), axis=1).reshape(n, n_chunk, ell)
-    s_ids = jnp.clip(s_ids, 0, n - 1)
-
-    m2 = c[s_ids[..., :, None], s_ids[..., None, :]]
-    ci_s = c[rows[:, None, None], s_ids]
-    j_ids = jnp.clip(compact, 0, n - 1)
-    cj_s = c[j_ids[:, None, :, None], s_ids[:, :, None, :]]
-    cij = jnp.broadcast_to(c[rows[:, None], j_ids][:, None, :], (n, n_chunk, npr))
-
-    in_s = jnp.any(j_ids[:, None, :, None] == s_ids[:, :, None, :], axis=-1)
-    alive = adj[rows[:, None], j_ids] & (compact >= 0)
-    mask = valid_set[:, :, None] & ~in_s & alive[:, None, :]
+    m2, ci_s, cj_s, cij, mask, s_ids = L.gather_s(
+        c, adj, compact, counts, rows, ranks, ell=ell, n_max=n_max
+    )
 
     bsz = n * n_chunk
     sep_found = ci_shared(

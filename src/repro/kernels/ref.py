@@ -32,7 +32,11 @@ def level1_dense_ref(c: jax.Array, adj: jax.Array, tau: float):
     """Dense level-1 sweep: for every alive edge (i,j), test every
     k ∈ adj(i) ∪ adj(j), k ∉ {i,j} with the closed-form ρ(i,j|k).
 
-    Returns (removed (n,n) bool, kwin (n,n) int32 — min separating k, or 2^30).
+    Returns (removed (n,n) bool — separator found in the union pool,
+    kwin (n,n) int32 — min separating k restricted to the ROW-LOCAL pool
+    adj(i) \\ {j}, or 2^30). kwin is row-local so the driver's commit can
+    rank it within row i's compacted neighbour list and replay the chunked
+    S engine's deterministic (rank, endpoint-order) sepset winner.
     """
     n = c.shape[0]
     adj = adj.astype(bool)
@@ -46,13 +50,15 @@ def level1_dense_ref(c: jax.Array, adj: jax.Array, tau: float):
     indep = jnp.abs(jnp.arctanh(rho)) <= tau  # (i,j,k)
 
     ks = jnp.arange(n)
-    kmask = (adj[:, None, :] | adj[None, :, :])  # k nbr of i or j (G')
-    kmask &= (ks[None, None, :] != jnp.arange(n)[:, None, None])
-    kmask &= (ks[None, None, :] != jnp.arange(n)[None, :, None])
+    k_own = adj[:, None, :]  # k nbr of i (G')
+    neq = (ks[None, None, :] != jnp.arange(n)[:, None, None])
+    neq &= (ks[None, None, :] != jnp.arange(n)[None, :, None])
+    kmask = (k_own | adj[None, :, :]) & neq  # k nbr of i or j (G')
     alive = adj & ~jnp.eye(n, dtype=bool)
     sep = indep & kmask & alive[:, :, None]
     removed = jnp.any(sep, axis=-1)
-    kwin = jnp.min(jnp.where(sep, ks[None, None, :], _BIG), axis=-1)
+    sep_own = indep & k_own & neq & alive[:, :, None]
+    kwin = jnp.min(jnp.where(sep_own, ks[None, None, :], _BIG), axis=-1)
     return removed, kwin.astype(jnp.int32)
 
 

@@ -1,9 +1,14 @@
 """Launcher for the paper's workload: PC-stable causal discovery.
 
     PYTHONPATH=src python -m repro.launch.pc_run --n 500 --m 10000 --d 0.1 \
-        --engine S --alpha 0.01
+        --engine auto --alpha 0.01
     PYTHONPATH=src python -m repro.launch.pc_run --dataset DREAM5-Insilico
 
+``--engine`` selects the level engine (see repro/core/engines.py for the
+matrix): jnp cuPC-S/-E ("S"/"E"), the Pallas cuPC-S kernel pipeline
+("S-kernel"), the fused dense ℓ=1 kernel ("L1-dense"), or the production
+"auto" hybrid (L1-dense at ℓ=1, S-kernel at ℓ≥2; interpret mode off-TPU).
+``--corr`` picks the correlation path (tiled MXU kernel vs XLA einsum).
 ``--devices K`` runs the row-sharded distributed engine on K (real or
 forced-host) devices; level barriers are one OR-all-reduce of the
 adjacency per level (DESIGN §4).
@@ -28,7 +33,22 @@ def main():
     ap.add_argument("--m", type=int, default=10_000)
     ap.add_argument("--d", type=float, default=0.1)
     ap.add_argument("--alpha", type=float, default=0.01)
-    ap.add_argument("--engine", default="S", choices=["E", "S"])
+    ap.add_argument(
+        "--engine", default="auto", choices=["E", "S", "S-kernel", "L1-dense", "auto"],
+        help="level engine: jnp cuPC-E/-S, Pallas cuPC-S pipeline (S-kernel), "
+             "fused dense l=1 kernel (L1-dense), or the auto hybrid "
+             "(L1-dense at l=1 + S-kernel at l>=2; interpret mode off-TPU)",
+    )
+    ap.add_argument(
+        "--corr", default="auto", choices=["auto", "kernel", "jnp"],
+        help="correlation matrix path: tiled MXU Pallas kernel vs XLA einsum "
+             "(auto = kernel on TPU, jnp elsewhere)",
+    )
+    ap.add_argument(
+        "--no-bucket", action="store_true",
+        help="disable n'/chunk-shape bucketing (one jit compile per exact "
+             "max-degree -- the legacy behaviour; useful for compile probes)",
+    )
     ap.add_argument("--max-level", type=int, default=None)
     ap.add_argument("--devices", type=int, default=0, help=">0: distributed over rows")
     ap.add_argument("--seed", type=int, default=0)
@@ -53,12 +73,17 @@ def main():
         from repro.core.distributed import pc_distributed
         from repro.launch.mesh import make_pc_mesh
 
+        if args.engine != "auto" or args.corr != "auto":
+            print("[pc_run] note: --devices uses the sharded jnp cuPC-S engine; "
+                  "--engine/--corr selections apply to single-device runs only")
         mesh = make_pc_mesh(args.devices)
-        run = pc_distributed(x, alpha=alpha, mesh=mesh, max_level=args.max_level)
+        run = pc_distributed(x, alpha=alpha, mesh=mesh, max_level=args.max_level,
+                             bucket=not args.no_bucket)
     else:
         from repro.core.pc import pc
 
-        run = pc(x, alpha=alpha, engine=args.engine, max_level=args.max_level)
+        run = pc(x, alpha=alpha, engine=args.engine, max_level=args.max_level,
+                 corr=args.corr, bucket=not args.no_bucket)
     dt = time.perf_counter() - t0
 
     n_edges = int(run.adj.sum()) // 2

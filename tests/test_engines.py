@@ -1,0 +1,168 @@
+"""Engine registry: kernel-backed "auto" parity with the jnp S engine and
+the serial oracle, npr-bucketing invariance + boundary behaviour, and the
+compile-count probe for bucketed chunk planning."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import engines, levels as L
+from repro.core.cit import correlation_from_samples, fisher_z, partial_corr_single, threshold
+from repro.core.pc import pc, pc_from_corr
+from repro.core.stable_ref import pc_stable_skeleton
+from repro.data.synthetic_dag import sample_gaussian_dag
+
+pytestmark = pytest.mark.kernels
+
+
+# ------------------------------------------------------------------ registry
+def test_resolve_auto_hybrid():
+    assert engines.resolve("auto", 1) == "L1-dense"
+    assert engines.resolve("auto", 2) == "S-kernel"
+    assert engines.resolve("auto", 5) == "S-kernel"
+    assert engines.resolve("L1-dense", 1) == "L1-dense"
+    assert engines.resolve("L1-dense", 2) == "S"  # dense cube is ℓ=1 only
+    assert engines.resolve("s-kernel", 3) == "S-kernel"  # case-insensitive
+    assert engines.resolve(lambda ell: "E" if ell == 1 else "S", 1) == "E"
+    with pytest.raises(ValueError):
+        engines.resolve("warp", 1)
+
+
+# ------------------------------------------- end-to-end parity: auto == S == ref
+@pytest.mark.parametrize(
+    "n,density,alpha,seed",
+    [(15, 0.2, 0.01, 0), (20, 0.15, 0.01, 1), (18, 0.3, 0.05, 3), (25, 0.1, 0.01, 2)],
+)
+def test_auto_engine_parity(n, density, alpha, seed):
+    """engine="auto" (Pallas L1-dense + cholinv/cisweep) must produce the
+    identical skeleton, sepsets and CPDAG as the jnp "S" engine, and the
+    same skeleton as the serial PC-stable oracle."""
+    m = 3000
+    x, _ = sample_gaussian_dag(n=n, m=m, density=density, seed=seed)
+    c = correlation_from_samples(jnp.asarray(x))
+    ref = pc_stable_skeleton(np.asarray(c), m=m, alpha=alpha)
+    s_run = pc_from_corr(c, m, alpha=alpha, engine="S")
+    a_run = pc_from_corr(c, m, alpha=alpha, engine="auto")
+
+    np.testing.assert_array_equal(a_run.adj, ref.adj)
+    np.testing.assert_array_equal(a_run.adj, s_run.adj)
+    np.testing.assert_array_equal(a_run.sepsets, s_run.sepsets)
+    np.testing.assert_array_equal(a_run.cpdag, s_run.cpdag)
+
+    # dispatch proof: the Pallas paths actually ran
+    ran = {st["level"]: st["engine"] for st in a_run.level_stats if not st["skipped"]}
+    assert ran.get(1) == "L1-dense"
+    assert all(e == "S-kernel" for lvl, e in ran.items() if lvl >= 2)
+    assert any(lvl >= 2 for lvl in ran), "no ℓ≥2 level exercised the cisweep path"
+
+
+def test_auto_sepsets_certify_removals():
+    """Every sepset the kernel engines record must pass the CI test it
+    claims (certification, not just agreement)."""
+    m = 3000
+    x, _ = sample_gaussian_dag(n=18, m=m, density=0.25, seed=11)
+    c = correlation_from_samples(jnp.asarray(x))
+    run = pc_from_corr(c, m, alpha=0.01, engine="auto")
+    n = run.adj.shape[0]
+    checked = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            s = run.sepsets[i, j]
+            if run.adj[i, j] or s[0] == -2:
+                continue
+            ids = s[s >= 0]
+            if len(ids) == 0:
+                continue
+            rho = partial_corr_single(c, i, j, jnp.asarray(ids))
+            assert float(fisher_z(rho)) <= threshold(m, len(ids), 0.01), (i, j, ids)
+            checked += 1
+    assert checked > 0
+
+
+def test_pc_corr_kernel_path():
+    """pc(x, corr="kernel") routes C through the tiled MXU kernel and still
+    recovers the same skeleton as the jnp correlation."""
+    x, _ = sample_gaussian_dag(n=16, m=2000, density=0.25, seed=5)
+    base = pc(x, alpha=0.01, engine="S", corr="jnp")
+    kern = pc(x, alpha=0.01, engine="S", corr="kernel")
+    np.testing.assert_array_equal(base.adj, kern.adj)
+    with pytest.raises(ValueError):
+        pc(x, corr="mxu")
+
+
+# ------------------------------------------------------------- npr bucketing
+def test_bucket_npr_boundaries():
+    assert [L.bucket_npr(v) for v in (1, 2, 3, 8, 9, 17, 127)] == [1, 2, 4, 8, 16, 32, 128]
+    assert L.bucket_npr(128) == 128
+    assert L.bucket_npr(129) == 256
+    assert L.bucket_npr(300) == 384  # lane multiples above one lane
+
+
+@pytest.mark.parametrize("hub_degree", [8, 9])  # just below / above a bucket edge
+def test_run_level_bucket_boundary(hub_degree):
+    """run_level with bucketing must return bit-identical (adj, sep) to the
+    exact-shape plan when the max degree sits on either side of a bucket
+    edge, while the static n′ snaps to the bucket."""
+    rng = np.random.default_rng(0)
+    n = 24
+    x, _ = sample_gaussian_dag(n=n, m=1500, density=0.3, seed=13)
+    c = jnp.asarray(np.asarray(correlation_from_samples(jnp.asarray(x))))
+    # hub row 0 with exactly `hub_degree` neighbours + a sparse tail
+    adj = rng.random((n, n)) < 0.15
+    adj = np.triu(adj, 1)
+    adj[0, :] = False
+    adj[0, 1 : 1 + hub_degree] = True
+    adj = adj | adj.T
+    np.fill_diagonal(adj, False)
+    max_deg = int(adj.sum(1).max())
+    assert max_deg == hub_degree
+    sep = jnp.full((n, n, 8), -1, jnp.int32)
+    tau = threshold(1500, 2, 0.01)
+
+    for ell in (1, 2):
+        a_b, s_b, st_b = L.run_level(c, jnp.asarray(adj), sep, ell, tau, bucket=True)
+        a_e, s_e, st_e = L.run_level(c, jnp.asarray(adj), sep, ell, tau, bucket=False)
+        np.testing.assert_array_equal(np.asarray(a_b), np.asarray(a_e))
+        np.testing.assert_array_equal(np.asarray(s_b), np.asarray(s_e))
+        assert st_b["npr_bucket"] == L.bucket_npr(max_deg)
+        assert st_e["npr_bucket"] == max_deg
+        assert (st_b["n_chunk"] & (st_b["n_chunk"] - 1)) == 0  # power of two
+
+
+def test_bucketing_reduces_chunk_compilations():
+    """The whole point of bucketing: the (ℓ, n_chunk, n′) jit key of every
+    chunk dispatch must recur across multi-level runs whose exact max-degrees
+    differ, so the workload's distinct chunk_s compilations STRICTLY drop.
+    Probed two ways: the stats' compile keys and the jit cache itself
+    (chunk_s._cache_size) on the second run of each mode."""
+    # dense-ish graphs → several levels with distinct non-power-of-two degrees;
+    # seeds chosen so per-level exact n′ differ between runs but buckets agree
+    cs = []
+    for seed in (2, 6):
+        x, _ = sample_gaussian_dag(n=41, m=900, density=0.35, seed=seed)
+        cs.append(correlation_from_samples(jnp.asarray(x)))
+
+    probe = getattr(L.chunk_s, "_cache_size", None)
+    keys, new_compiles = {}, {}
+    for bucket in (False, True):
+        runs = []
+        for i, c in enumerate(cs):
+            before = probe() if probe else 0
+            runs.append(pc_from_corr(c, 900, engine="S", bucket=bucket))
+            if i == 1:  # compiles triggered by the SECOND run of this mode
+                new_compiles[bucket] = (probe() if probe else 0) - before
+        keys[bucket] = {
+            st["compile_key"] for r in runs for st in r.level_stats if not st["skipped"]
+        }
+        if bucket:  # bucketing must not change results
+            for r, c in zip(runs, cs):
+                exact_r = pc_from_corr(c, 900, engine="S", bucket=False)
+                np.testing.assert_array_equal(r.adj, exact_r.adj)
+                np.testing.assert_array_equal(r.sepsets, exact_r.sepsets)
+
+    assert len(keys[False]) >= 4, "workload too shallow to exercise the planner"
+    assert len(keys[True]) < len(keys[False]), (keys[True], keys[False])
+    if probe:
+        assert new_compiles[True] < new_compiles[False], (
+            f"2nd bucketed run compiled {new_compiles[True]} chunk_s variants, "
+            f"2nd exact run compiled {new_compiles[False]}"
+        )

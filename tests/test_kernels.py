@@ -7,6 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.kernels
 
 RNG = np.random.default_rng(42)
 

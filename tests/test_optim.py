@@ -80,7 +80,7 @@ def test_ef_compressed_mean_under_shard_map():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import jax, jax.numpy as jnp, numpy as np
-        from jax import shard_map
+        from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.optim import ef_compressed_mean
         mesh = jax.make_mesh((4,), ("pod",))
@@ -88,7 +88,7 @@ def test_ef_compressed_mean_under_shard_map():
         r0 = jnp.zeros((4, 256), jnp.float32)
         fn = shard_map(lambda g, r: ef_compressed_mean(g[0], r[0], "pod"),
                        mesh=mesh, in_specs=(P("pod"), P("pod")),
-                       out_specs=(P(None), P("pod")), check_vma=False)
+                       out_specs=(P(None), P("pod")), check_rep=False)
         mean_c, _ = fn(g, r0)
         true = g.mean(0)
         scale = float(jnp.max(jnp.abs(g))) / 127.0
