@@ -1,7 +1,7 @@
 # Repo verification targets. PYTHONPATH=src everywhere (no install step).
 PY ?= python
 
-.PHONY: test verify-kernels bench-pc ci
+.PHONY: test verify-kernels verify-batch bench-pc bench-pc-batch ci
 
 test:  ## tier-1 suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -9,8 +9,14 @@ test:  ## tier-1 suite
 verify-kernels:  ## fast interpret-mode kernel + engine-parity smoke (no TPU needed)
 	PYTHONPATH=src $(PY) -m pytest -q -m kernels tests/test_kernels.py tests/test_engines.py
 
+verify-batch:  ## batched-PC subsystem: traced-scan parity + ensemble + orientation
+	PYTHONPATH=src $(PY) -m pytest -q -m batch tests/test_batch.py
+
 bench-pc:  ## per-level engine timings -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_engines
+
+bench-pc-batch:  ## many-graph throughput (vmapped scan vs loop) -> BENCH_pc.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_batch
 
 ci:
 	bash scripts/ci.sh

@@ -32,6 +32,22 @@ def save(name: str, payload: dict):
     (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=1, default=float))
 
 
+def merge_bench_trajectory(updates: dict):
+    """Merge a module's sections into the repo-root BENCH_pc.json perf
+    trajectory file, overwriting only the given keys so every benchmark
+    module's section survives the others' runs. Tolerates a missing or
+    corrupt file (starts fresh)."""
+    path = RESULTS.parent.parent / "BENCH_pc.json"
+    trajectory = {}
+    if path.exists():
+        try:
+            trajectory = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            trajectory = {}
+    trajectory.update(updates)
+    path.write_text(json.dumps(trajectory, indent=1, default=float))
+
+
 def load(name: str) -> dict | None:
     p = RESULTS / f"{name}.json"
     return json.loads(p.read_text()) if p.exists() else None

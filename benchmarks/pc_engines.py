@@ -13,12 +13,7 @@ compile-key counts. On TPU the same harness times compiled Mosaic kernels.
 """
 from __future__ import annotations
 
-import json
-from pathlib import Path
-
-from .common import dataset, md_table, save, timed
-
-ROOT = Path(__file__).resolve().parent.parent
+from .common import dataset, md_table, merge_bench_trajectory, save, timed
 
 CONFIGS = ["NCI-60-s", "MCC-s"]
 ENGINES = {"jnp-S": "S", "auto": "auto"}
@@ -63,7 +58,7 @@ def run(full: bool = False, quick: bool = False) -> str:
         "configs": records,
     }
     save("pc_engines", payload)
-    (ROOT / "BENCH_pc.json").write_text(json.dumps(payload, indent=1, default=float))
+    merge_bench_trajectory(payload)
 
     rows = []
     for name, rec in records.items():

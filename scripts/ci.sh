@@ -7,5 +7,8 @@ cd "$(dirname "$0")/.."
 echo "[ci] kernel + engine-parity smoke (interpret mode)"
 PYTHONPATH=src python -m pytest -q -m kernels tests/test_kernels.py tests/test_engines.py
 
+echo "[ci] batched-PC subsystem (traced-scan parity + ensemble)"
+PYTHONPATH=src python -m pytest -q -m batch tests/test_batch.py
+
 echo "[ci] tier-1 suite"
 PYTHONPATH=src python -m pytest -x -q

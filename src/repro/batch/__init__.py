@@ -1,0 +1,36 @@
+"""Batched PC engine + bootstrap ensemble subsystem (ISSUE 2).
+
+cuPC parallelises ONE PC run across CI tests; real deployments run PC many
+times — bootstrap replicates, alpha sweeps, thousands of small per-module
+datasets (ParallelPC, arXiv 1510.03042). This package provides:
+
+  scan_pc.pc_scan        fixed-shape, fully-traced PC-stable: one XLA
+                         program per (shape, level-cap) instead of a host
+                         loop per level — bit-identical to the "S" engine.
+  scan_pc.pc_scan_batch  the same program vmapped over a leading batch of
+                         correlation matrices: B graphs per dispatch.
+  ensemble.bootstrap_pc  on-device bootstrap resampling → per-replicate
+                         correlation → vmapped pc_scan → edge-frequency
+                         aggregation + stability-selected CPDAG.
+"""
+from .ensemble import EnsembleRun, bootstrap_corr, bootstrap_pc
+from .scan_pc import (
+    ScanResult,
+    pc_scan,
+    pc_scan_batch,
+    plan_n_prime,
+    plan_schedule,
+    scan_levels_batch,
+)
+
+__all__ = [
+    "EnsembleRun",
+    "ScanResult",
+    "bootstrap_corr",
+    "bootstrap_pc",
+    "pc_scan",
+    "pc_scan_batch",
+    "plan_n_prime",
+    "plan_schedule",
+    "scan_levels_batch",
+]

@@ -1,0 +1,203 @@
+"""Bootstrap ensemble PC: resample → correlate → vmapped scan → aggregate.
+
+Single-run PC on finite samples is brittle: edges near the CI threshold
+flip with the draw. The practitioner fix (stability selection / bootstrap
+aggregation, cf. ParallelPC's many-runs workload) is to run PC on B
+bootstrap resamples and keep edges that recur. The whole pipeline here is
+device-resident and compiled once:
+
+  1. resampling: B index vectors from one threaded ``jax.random`` key —
+     explicit key splitting, so a (seed, n_boot) pair is exactly
+     reproducible across hosts and backends;
+  2. per-replicate correlation: XLA einsum by default, routed through the
+     tiled MXU kernel (kernels/corr.py) on TPU;
+  3. B skeletons in one dispatch via ``scan_pc.pc_scan_batch``;
+  4. aggregation: edge frequencies, a stability-selected skeleton
+     (freq ≥ threshold), a per-(i,j,k) majority vote over the replicates'
+     separating sets, and an aggregated CPDAG through the existing
+     ``core/orient`` machinery (``cpdag_from_membership``).
+
+Memory note: aggregation materialises a (B, n, n, n) membership tensor —
+the same n³ scaling the single-run orientation already has, ×B. For n in
+the thousands, orient per replicate instead (follow-on in ROADMAP.md).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cit import correlation_from_samples
+from repro.core.levels import DEFAULT_CELL_BUDGET
+from repro.core.orient import cpdag_from_membership, sepset_membership
+
+from .scan_pc import DEFAULT_MAX_LEVEL, pc_scan_batch, scan_levels_batch
+
+
+@dataclass
+class EnsembleRun:
+    """Aggregated result of a bootstrap PC ensemble (host numpy arrays)."""
+
+    edge_freq: np.ndarray  # (n,n) float32 — fraction of replicates with the edge
+    adj: np.ndarray  # (n,n) bool — stability-selected skeleton
+    cpdag: np.ndarray  # (n,n) bool — CPDAG of the aggregated skeleton
+    replicate_adj: np.ndarray  # (B,n,n) bool — per-replicate skeletons
+    replicate_ok: np.ndarray  # (B,) bool — per-replicate exactness (scan `ok`);
+    # False marks a degree-capped replicate (only possible with a
+    # user-supplied n_prime narrower than that replicate's live degrees)
+    n_boot: int
+    stability_threshold: float
+    schedule: tuple  # per-level static widths the replicate batch ran at
+    timings_s: dict = field(default_factory=dict)
+
+    def stable_edges(self) -> list[tuple[int, int]]:
+        """(i, j), i < j, of the stability-selected skeleton."""
+        i, j = np.nonzero(np.triu(self.adj, 1))
+        return list(zip(i.tolist(), j.tolist()))
+
+
+def _resample(x, key):
+    """One bootstrap draw: m row indices with replacement."""
+    m = x.shape[0]
+    idx = jax.random.randint(key, (m,), 0, m)
+    return jnp.take(x, idx, axis=0)
+
+
+@jax.jit
+def _bootstrap_corr_jnp(x, keys):
+    return jax.vmap(lambda k: correlation_from_samples(_resample(x, k)))(keys)
+
+
+@jax.jit
+def _bootstrap_corr_kernel(x, keys):
+    from repro.kernels.ops import correlation as corr_kernel
+
+    # sequential pallas_call launches inside one program: the tiled MXU
+    # kernel owns the whole chip per launch, so vmapping it buys nothing
+    return jax.lax.map(lambda k: corr_kernel(_resample(x, k)), keys)
+
+
+def bootstrap_corr(x, keys, corr: str = "auto"):
+    """B bootstrap-resampled correlation matrices from samples x (m, n).
+
+    keys: (B, 2) uint32 jax.random keys, one per replicate. corr follows
+    ``core/pc.pc``: "kernel" uses the tiled MXU kernel, "jnp" the XLA
+    einsum, "auto" picks the kernel on TPU. Returns (B, n, n) fp32.
+    """
+    if corr not in ("auto", "kernel", "jnp"):
+        raise ValueError(f"corr must be auto|kernel|jnp, got {corr!r}")
+    use_kernel = corr == "kernel" or (corr == "auto" and jax.default_backend() == "tpu")
+    x = jnp.asarray(x, jnp.float32)
+    fn = _bootstrap_corr_kernel if use_kernel else _bootstrap_corr_jnp
+    return fn(x, keys)
+
+
+@jax.jit
+def _aggregate(adj_b, sep_b, thresh):
+    """Edge frequencies + stability skeleton + voted-sepset CPDAG.
+
+    Sepset vote: k ∈ SepSet(i,j) for the aggregate iff a strict majority of
+    the replicates that REMOVED (i,j) recorded k as a separator. Replicates
+    keeping the edge abstain; level-0 removals vote "empty set" (their
+    sentinel slots never match a variable id), which is their true sepset.
+    """
+    n = adj_b.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    freq = jnp.mean(adj_b, axis=0, dtype=jnp.float32)
+    skel = (freq >= thresh) & ~eye
+
+    removed = ~adj_b & ~eye[None]  # (B,n,n)
+    member_b = jax.vmap(sepset_membership)(sep_b)  # (B,n,n,n)
+    votes = jnp.sum(removed[..., None] & member_b, axis=0)  # (n,n,n)
+    denom = jnp.sum(removed, axis=0)[..., None]
+    member = votes * 2 > denom
+    cpdag = cpdag_from_membership(skel, member)
+    return freq, skel, cpdag
+
+
+def bootstrap_pc(
+    x,
+    n_boot: int = 32,
+    alpha: float = 0.01,
+    stability_threshold: float = 0.5,
+    max_level: int | None = None,
+    sepset_depth: int = 8,
+    seed: int = 0,
+    key=None,
+    corr: str = "auto",
+    n_prime: int | None = None,
+    cell_budget: int = DEFAULT_CELL_BUDGET,
+) -> EnsembleRun:
+    """Bootstrap-ensemble PC-stable on samples x (m, n).
+
+    Pass ``key`` (a jax.random key) to thread reproducible randomness from a
+    caller; otherwise one is derived from ``seed``. ``n_prime=None`` (the
+    default) runs the level-synced batch driver, which discovers the tight
+    width schedule on the fly (one host sync per level for all replicates,
+    always exact); a pre-planned schedule (or int width) from
+    ``scan_pc.plan_schedule`` instead runs the zero-sync one-program path.
+    """
+    t_start = time.perf_counter()
+    x = jnp.asarray(x, jnp.float32)
+    m = int(x.shape[0])
+    if max_level is None:
+        max_level = DEFAULT_MAX_LEVEL
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, n_boot)
+
+    timings: dict[str, float] = {}
+    t0 = time.perf_counter()
+    cs = bootstrap_corr(x, keys, corr=corr)
+    cs.block_until_ready()
+    timings["bootstrap_corr"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    if n_prime is None:
+        res, schedule = scan_levels_batch(
+            cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
+            cell_budget=cell_budget, orient=False,
+        )
+        scan_phase = "scan_levels_batch"
+    else:
+        res = pc_scan_batch(
+            cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
+            n_prime=n_prime, cell_budget=cell_budget, orient=False,
+        )
+        schedule = tuple(n_prime) if isinstance(n_prime, (tuple, list)) \
+            else (int(n_prime),) * max_level
+        scan_phase = "pc_scan_batch"
+    jax.block_until_ready(res.adj)
+    timings[scan_phase] = time.perf_counter() - t0
+
+    replicate_ok = np.asarray(jax.device_get(res.ok))
+    if not replicate_ok.all():
+        import warnings
+
+        warnings.warn(
+            f"{int((~replicate_ok).sum())}/{n_boot} bootstrap replicates were "
+            f"degree-capped by n_prime={n_prime!r} (scan ok=False) — their "
+            "skeletons are approximate; pass n_prime=None for exact widths",
+            stacklevel=2,
+        )
+
+    t0 = time.perf_counter()
+    freq, skel, cpdag = _aggregate(res.adj, res.sepsets, float(stability_threshold))
+    jax.block_until_ready(cpdag)
+    timings["aggregate"] = time.perf_counter() - t0
+    timings["total"] = time.perf_counter() - t_start
+
+    return EnsembleRun(
+        edge_freq=np.asarray(jax.device_get(freq)),
+        adj=np.asarray(jax.device_get(skel)),
+        cpdag=np.asarray(jax.device_get(cpdag)),
+        replicate_adj=np.asarray(jax.device_get(res.adj)),
+        replicate_ok=replicate_ok,
+        n_boot=int(n_boot),
+        stability_threshold=float(stability_threshold),
+        schedule=schedule,
+        timings_s=timings,
+    )

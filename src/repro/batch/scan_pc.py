@@ -1,0 +1,462 @@
+"""Fixed-shape, fully-traced PC-stable — the compile-once formulation.
+
+``core/pc.pc_from_corr`` is a *host* loop: every level syncs the max degree
+back to Python, plans chunk shapes, and dispatches jitted chunk functions.
+That is the right shape for one huge graph, but for many-graph workloads
+(bootstrap replicates, alpha sweeps, per-module datasets) the per-run host
+traffic dominates. ``pc_scan`` re-states the whole skeleton phase as ONE
+traced program with static shapes:
+
+  * the level loop is unrolled at trace time over ``ell = 1..max_level``
+    (the static level cap — paper runs stop at single digits);
+  * each level ℓ is a masked dense sweep over all ``C(w_ell, ell)``
+    combo-ranks of a width-``w_ell`` compacted adjacency, processed in a
+    ``lax.fori_loop`` over rank chunks (budget-bounded, no host sync);
+  * the CI math and the commit are *the same traced functions* the "S"
+    engine uses (``levels._tests_s`` / ``levels._commit``), so every
+    accept/reject decision and every sepset winner is bit-identical to
+    ``pc_from_corr(engine="S")`` up to the level cap (asserted by
+    tests/test_batch.py).
+
+Why chunk boundaries don't matter for parity: the per-edge sepset winner is
+the whole-level lexicographic minimum of (rank, endpoint-order) — ranks
+ascend across chunks, so any chunking (including "one chunk = everything")
+commits the same winner (see core/levels.py docstring).
+
+Width schedules. The host driver re-plans its worklist width from the live
+max degree at every level; a traced program cannot. A single conservative
+width (the level-0 degree bound) is always exact but sweeps
+``C(w, ell)`` ranks at every level — quadratically wasteful once degrees
+shrink. ``n_prime`` therefore also accepts a per-level tuple
+``(w_1, …, w_max_level)``; ``plan_schedule`` discovers a tight schedule for
+a whole batch by probing level-by-level (ONE host sync per level for all B
+graphs — versus B syncs per level for the sequential loop). Exactness is
+*checked inside the trace*: each graph's ``ok`` output is True iff every
+level's width bounded that graph's live max degree (or the level was a
+provable no-op), i.e. the result is bit-identical to the unconstrained run.
+Rows wider than the schedule are degree-capped deterministically (their
+neighbour list is truncated at compaction), never silently corrupted —
+re-run flagged graphs with ``n_prime=None`` to get exact results.
+
+``pc_scan_batch`` wraps the same core in ``jax.vmap`` + ``jax.jit``: one
+XLA program learns B graphs per dispatch. ``scan_levels_batch`` is the
+plan-as-you-go variant (one sync per level, schedule discovered on the
+fly) used by the bootstrap ensemble.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import levels as L
+from repro.core.cit import threshold
+from repro.core.compact import compact_rows
+from repro.core.levels import DEFAULT_CELL_BUDGET
+from repro.core.orient import cpdag_from_skeleton
+
+#: Default static level cap for the traced path. PC on bounded-degree graphs
+#: rarely needs more; deeper runs should pass max_level explicitly (each
+#: additional level adds a statically unrolled masked sweep to the program).
+DEFAULT_MAX_LEVEL = 3
+
+
+class ScanResult(NamedTuple):
+    """Pytree result of the traced PC run (leading batch axis when vmapped).
+
+    adj:     (..., n, n) bool   skeleton
+    cpdag:   (..., n, n) bool   CPDAG digraph (== adj when orient=False)
+    sepsets: (..., n, n, Lmax) int32, -1 padded, -2 sentinel in slot 0 for
+             level-0 removals — same convention as core/pc.PCRun.
+    ok:      (...,) bool        True iff the static width schedule bounded
+             this graph's live max degree at every level (result is exact);
+             False marks a degree-capped (approximate) run.
+    max_degs: (..., max_level) int32 — live max degree at each level's
+             start; max_degs[ℓ-1] - 1 < ℓ means the host driver would have
+             stopped before level ℓ (lets callers report true levels-run).
+    """
+
+    adj: jax.Array
+    cpdag: jax.Array
+    sepsets: jax.Array
+    ok: jax.Array
+    max_degs: jax.Array
+
+
+# --------------------------------------------------------------------------
+# static planning
+# --------------------------------------------------------------------------
+def plan_n_prime(cs, m: int, alpha: float = 0.01) -> int:
+    """Single static compact width valid for a whole batch of correlation
+    matrices: the bucketed level-0 max degree over every graph.
+
+    Levels only remove edges, so this bounds every row at every level —
+    always exact (``ok`` True), but conservative; ``plan_schedule`` finds
+    the tight per-level widths. One fused device pass + one host sync.
+    """
+    cs = jnp.asarray(cs, jnp.float32)
+    if cs.ndim == 2:
+        cs = cs[None]
+    tau0 = threshold(m, 0, alpha)
+    deg = jax.vmap(lambda c: jnp.max(jnp.sum(L.level0(c, tau0), axis=1)))(cs)
+    npr = int(jax.device_get(jnp.max(deg)))
+    n = int(cs.shape[-1])
+    return max(1, min(L.bucket_npr(npr), n))
+
+
+def _plan_chunk(n: int, w: int, ell: int, cell_budget: int):
+    """Static (n_chunk, steps) for one level's rank sweep — same budget math
+    as levels.plan_level's S-engine branch, with power-of-two chunk lengths
+    so the fori_loop body shape recurs across levels. When the whole sweep
+    fits one chunk there is nothing to reuse — take the exact length."""
+    total = math.comb(w, ell)
+    if total == 0:
+        return 0, 0
+    per_rank_cells = n * w * max(ell, 1) * max(ell, 1)
+    budget_chunk = max(1, cell_budget // max(per_rank_cells, 1))
+    if budget_chunk >= total:
+        return total, 1
+    n_chunk = max(1, min(L._pow2_ceil(total), L._pow2_floor(budget_chunk)))
+    steps = -(-total // n_chunk)
+    return n_chunk, steps
+
+
+def _use_dense_l1(n: int, w: int, cell_budget: int) -> bool:
+    """Static choice for level 1: the closed-form dense (i, j, k) cube beats
+    the compacted sweep when compaction saves little (w near n) and the n³
+    cube fits the dispatch budget — the budget the caller already divided
+    by B, so the vmapped cube respects the same per-dispatch memory ceiling
+    as every other path. Dense is also exact at ANY degree (no width
+    truncation), so it never trips the ok flag."""
+    return w * 2 >= n and n ** 3 <= cell_budget
+
+
+def _level1_dense(c, adj, sep, tau):
+    """Level 1 as one fused elementwise pass over the dense (i, j, k) cube.
+
+    Exactly the arithmetic ``levels._tests_s`` performs at ℓ=1 — where
+    M2 = C[k,k] = 1 so the "inverse" is exact and every term collapses to
+    the closed form ρ(i,j|k) = (C_ij − C_ik·C_jk)/√((1−C_ik²)(1−C_jk²)) —
+    followed by the same deterministic winner commit the Pallas L1-dense
+    engine uses (``levels.commit_dense_l1``; bit-identical to chunk_s per
+    its docstring and tests/test_engines.py). No unranking, no gathers, no
+    masked-rank waste: the paper's "ℓ=1 dominates" level as n³ flops.
+    """
+    from repro.core.cit import fisher_z
+
+    n = c.shape[0]
+    cik = c[:, None, :]  # C[i,k] broadcast over j
+    cjk = c[None, :, :]  # C[j,k] broadcast over i
+    g = 1.0 / jnp.maximum(jnp.ones((), c.dtype), 1e-8)  # M2 = C[k,k] = 1
+    u_i = g * cik
+    var_i = 1.0 - cik * u_i
+    num = c[:, :, None] - cjk * u_i
+    var_j = 1.0 - cjk * (g * cjk)
+    rho = num / jnp.sqrt(jnp.maximum(var_i * var_j, 1e-20))
+    indep = fisher_z(rho) <= tau
+
+    ks = jnp.arange(n, dtype=jnp.int32)
+    mask = adj[:, None, :] & adj[:, :, None] & (ks[None, None, :] != ks[None, :, None])
+    sep_found = indep & mask  # (i, j, k)
+    big = jnp.int32(2**30)
+    kwin = jnp.min(jnp.where(sep_found, ks[None, None, :], big), axis=-1)
+    return L.commit_dense_l1(adj, sep, kwin)
+
+
+def _as_schedule(n_prime, max_level: int, n: int) -> tuple:
+    """Normalise int-or-tuple n_prime to a max_level-long width tuple."""
+    if isinstance(n_prime, (tuple, list)):
+        ws = [int(w) for w in n_prime]
+        if len(ws) < max_level:
+            ws += [ws[-1] if ws else n] * (max_level - len(ws))
+        ws = ws[:max_level]
+    else:
+        ws = [int(n_prime)] * max_level
+    return tuple(max(1, min(w, n)) for w in ws)
+
+
+# --------------------------------------------------------------------------
+# traced level sweep (shared by the one-program scan and the level driver)
+# --------------------------------------------------------------------------
+def _level_sweep(c, adj, sep, tau, *, ell: int, w: int, n_chunk: int, steps: int):
+    """One level's masked dense rank sweep at static width w.
+
+    Rows with more than w neighbours are degree-capped: compaction truncates
+    their (sorted) neighbour list and counts are clamped to w, so every test
+    is well-formed — the caller's ok flag records whether capping could have
+    happened at all.
+    """
+    n = c.shape[0]
+    rd = L._rank_dtype()
+    rows = jnp.arange(n, dtype=jnp.int32)
+    compact, counts = compact_rows(adj, n_prime=w)
+    counts = jnp.minimum(counts, w)
+
+    def body(step, carry):
+        adj, sep = carry
+        ranks = jnp.asarray(step, rd) * n_chunk + jnp.arange(n_chunk, dtype=rd)
+        sep_found, s_ids = L._tests_s(
+            c, adj, compact, counts, rows, ranks, tau, ell=ell, n_max=w
+        )
+        return L._commit(
+            c, adj, sep, compact, counts, sep_found, ranks, s_ids, None, ell
+        )
+
+    if steps == 1:
+        return body(0, (adj, sep))
+    return jax.lax.fori_loop(0, steps, body, (adj, sep))
+
+
+def _level_ok(max_deg, ell: int, w: int):
+    """Exactness certificate for one level at static width w: the width
+    bounded the live max degree, OR no row had enough neighbours for any
+    CI test at this level (max_deg ≤ ell ⇒ the level is a no-op — the only
+    candidate conditioning set of a full row contains the target)."""
+    return (max_deg <= w) | (max_deg <= ell)
+
+
+# --------------------------------------------------------------------------
+# one-program scan
+# --------------------------------------------------------------------------
+def _scan_core(
+    c,
+    *,
+    taus: tuple,
+    schedule: tuple,
+    sepset_depth: int,
+    cell_budget: int,
+    orient: bool,
+) -> ScanResult:
+    """One graph's full skeleton phase as a single traced computation."""
+    n = c.shape[0]
+    adj = L.level0(c, taus[0])
+    sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
+    sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
+
+    ok = jnp.asarray(True)
+    max_degs = []
+    for ell, w in enumerate(schedule, start=1):
+        max_deg = jnp.max(jnp.sum(adj, axis=1)).astype(jnp.int32)
+        max_degs.append(max_deg)
+        if ell == 1 and _use_dense_l1(n, w, cell_budget):
+            # exact at any degree — no width truncation, no ok contribution
+            adj, sep = _level1_dense(c, adj, sep, taus[1])
+            continue
+        ok = ok & _level_ok(max_deg, ell, w)
+        n_chunk, steps = _plan_chunk(n, w, ell, cell_budget)
+        if steps == 0:
+            continue  # C(w, ell) == 0: statically no work (ok still checked)
+        adj, sep = _level_sweep(
+            c, adj, sep, taus[ell], ell=ell, w=w, n_chunk=n_chunk, steps=steps
+        )
+
+    cpdag = cpdag_from_skeleton(adj, sep) if orient else adj
+    max_degs = jnp.stack(max_degs) if max_degs else jnp.zeros((0,), jnp.int32)
+    return ScanResult(adj=adj, cpdag=cpdag, sepsets=sep, ok=ok, max_degs=max_degs)
+
+
+@functools.lru_cache(maxsize=None)
+def _build(taus, schedule, sepset_depth, cell_budget, orient, batched):
+    core = functools.partial(
+        _scan_core,
+        taus=taus,
+        schedule=schedule,
+        sepset_depth=sepset_depth,
+        cell_budget=cell_budget,
+        orient=orient,
+    )
+    return jax.jit(jax.vmap(core) if batched else core)
+
+
+def _prep(c, m, alpha, max_level, sepset_depth, n_prime):
+    c = jnp.asarray(c, jnp.float32)
+    n = int(c.shape[-1])
+    if max_level is None:
+        max_level = DEFAULT_MAX_LEVEL
+    if max_level > sepset_depth:
+        raise ValueError(
+            f"max_level={max_level} exceeds sepset_depth={sepset_depth}: "
+            "sepsets of the deepest level would not fit"
+        )
+    if n_prime is None:
+        n_prime = plan_n_prime(c, m, alpha)
+    schedule = _as_schedule(n_prime, max_level, n)
+    taus = tuple(threshold(m, ell, alpha) for ell in range(max_level + 1))
+    return c, taus, max_level, schedule
+
+
+def pc_scan(
+    c,
+    m: int,
+    alpha: float = 0.01,
+    max_level: int | None = None,
+    sepset_depth: int = 8,
+    n_prime=None,
+    cell_budget: int = DEFAULT_CELL_BUDGET,
+    orient: bool = True,
+) -> ScanResult:
+    """Traced PC-stable on one correlation matrix c (n, n).
+
+    Bit-identical skeleton/sepsets to ``pc_from_corr(engine="S",
+    max_level=max_level)`` whenever the returned ``ok`` is True — which is
+    guaranteed for the default ``n_prime=None`` (plans the exact level-0
+    degree bound from ``c``, one host sync). ``n_prime`` may be an int
+    (one width for every level) or a per-level tuple from
+    ``plan_schedule``. ``max_level=None`` uses DEFAULT_MAX_LEVEL.
+    """
+    c, taus, max_level, schedule = _prep(c, m, alpha, max_level, sepset_depth, n_prime)
+    fn = _build(taus, schedule, sepset_depth, int(cell_budget), bool(orient), False)
+    return fn(c)
+
+
+def pc_scan_batch(
+    cs,
+    m: int,
+    alpha: float = 0.01,
+    max_level: int | None = None,
+    sepset_depth: int = 8,
+    n_prime=None,
+    cell_budget: int = DEFAULT_CELL_BUDGET,
+    orient: bool = True,
+) -> ScanResult:
+    """Vmapped ``pc_scan`` over a leading batch axis: cs (B, n, n).
+
+    One XLA program per (B, n, static-args) processes all B graphs per
+    dispatch — no per-graph host loop. Pass ``n_prime=plan_schedule(...)``
+    for throughput (tight per-level widths; per-graph ``ok`` certifies
+    exactness), or leave ``None`` for the always-exact level-0 bound. The
+    per-dispatch cell budget is divided by B so the batched worklists keep
+    the same memory ceiling as the single-graph engines.
+    """
+    cs = jnp.asarray(cs, jnp.float32)
+    if cs.ndim != 3:
+        raise ValueError(f"pc_scan_batch expects (B, n, n); got shape {cs.shape}")
+    b = int(cs.shape[0])
+    cs, taus, max_level, schedule = _prep(cs, m, alpha, max_level, sepset_depth, n_prime)
+    budget = max(int(cell_budget) // max(b, 1), 2**16)
+    fn = _build(taus, schedule, sepset_depth, budget, bool(orient), True)
+    return fn(cs)
+
+
+# --------------------------------------------------------------------------
+# level-synced batch driver + schedule planning
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _build_dense_l1():
+    return jax.jit(jax.vmap(_level1_dense, in_axes=(0, 0, 0, None)))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_orient():
+    return jax.jit(jax.vmap(cpdag_from_skeleton))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_level(ell, w, n_chunk, steps):
+    """Jitted vmapped one-level sweep, cached on its static shape key so the
+    same compiled program serves every level/batch with that shape."""
+
+    def step(c, adj, sep, tau):
+        return _level_sweep(c, adj, sep, tau, ell=ell, w=w, n_chunk=n_chunk, steps=steps)
+
+    return jax.jit(jax.vmap(step, in_axes=(0, 0, 0, None)))
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def _batch_init(cs, tau0, depth):
+    """Vmapped level 0 + sepset-tensor init for a whole batch."""
+    adj = jax.vmap(lambda c: L.level0(c, tau0))(cs)
+    b, n = cs.shape[0], cs.shape[-1]
+    sep = jnp.full((b, n, n, depth), -1, jnp.int32)
+    sep = sep.at[..., 0].set(jnp.where(adj, -1, -2))
+    return adj, sep
+
+
+def scan_levels_batch(
+    cs,
+    m: int,
+    alpha: float = 0.01,
+    max_level: int | None = None,
+    sepset_depth: int = 8,
+    cell_budget: int = DEFAULT_CELL_BUDGET,
+    orient: bool = True,
+    bucket: bool = True,
+):
+    """Batch PC with per-level re-planning: ONE host sync per level for all
+    B graphs (the sequential loop pays B syncs per level).
+
+    Discovers the tight width schedule on the fly — each level's static
+    width is the (bucketed) live max degree across the whole batch, so
+    every result is exact (``ok`` all True) and the jitted per-level
+    programs recur across calls via their (ell, w, n_chunk, steps) cache
+    key. ``bucket=False`` uses exact max-degree widths instead — fewer
+    masked cells per sweep at the cost of one compile per exact degree;
+    right for recurring workloads whose shapes repeat (same tradeoff as
+    ``levels.run_level(bucket=...)``). Returns ``(ScanResult, schedule)``;
+    feed the schedule to ``pc_scan_batch`` to run the same workload as one
+    fused program with zero level syncs.
+    """
+    cs = jnp.asarray(cs, jnp.float32)
+    if cs.ndim != 3:
+        raise ValueError(f"scan_levels_batch expects (B, n, n); got {cs.shape}")
+    b, n = int(cs.shape[0]), int(cs.shape[-1])
+    if max_level is None:
+        max_level = DEFAULT_MAX_LEVEL
+    if max_level > sepset_depth:
+        raise ValueError(f"max_level={max_level} exceeds sepset_depth={sepset_depth}")
+    budget = max(int(cell_budget) // max(b, 1), 2**16)
+
+    adj, sep = _batch_init(cs, threshold(m, 0, alpha), sepset_depth)
+
+    schedule, max_degs = [], []
+    for ell in range(1, max_level + 1):
+        deg_b = jnp.max(jnp.sum(adj, axis=-1), axis=-1).astype(jnp.int32)  # (B,)
+        max_degs.append(deg_b)
+        max_deg = int(jax.device_get(jnp.max(deg_b)))
+        w = max(1, min(L.bucket_npr(max_deg) if bucket else max_deg, n))
+        schedule.append(w)
+        if max_deg - 1 < ell:
+            continue  # no graph can run this level; keep probing widths
+        if ell == 1 and _use_dense_l1(n, w, budget):
+            adj, sep = _build_dense_l1()(cs, adj, sep, threshold(m, 1, alpha))
+            continue
+        n_chunk, steps = _plan_chunk(n, w, ell, budget)
+        if steps == 0:
+            continue
+        fn = _build_level(ell, w, n_chunk, steps)
+        adj, sep = fn(cs, adj, sep, threshold(m, ell, alpha))
+
+    cpdag = _build_orient()(adj, sep) if orient else adj
+    ok = jnp.ones((b,), bool)  # widths track the live bound by construction
+    max_degs = (jnp.stack(max_degs, axis=-1) if max_degs
+                else jnp.zeros((b, 0), jnp.int32))
+    return ScanResult(adj=adj, cpdag=cpdag, sepsets=sep, ok=ok,
+                      max_degs=max_degs), tuple(schedule)
+
+
+def plan_schedule(
+    cs,
+    m: int,
+    alpha: float = 0.01,
+    max_level: int | None = None,
+    sepset_depth: int = 8,
+    cell_budget: int = DEFAULT_CELL_BUDGET,
+    bucket: bool = True,
+) -> tuple:
+    """Tight per-level width schedule for a batched workload.
+
+    Runs the level-synced driver once (≈ one steady-state batch run) and
+    returns its discovered widths. Use for recurring workloads: plan on a
+    pilot batch, then serve every later batch through the one-program
+    ``pc_scan_batch`` and re-run the rare ``ok=False`` stragglers with
+    ``n_prime=None``. ``bucket=False`` plans exact max-degree widths
+    (fewest masked cells; one compile per exact degree).
+    """
+    _, schedule = scan_levels_batch(
+        cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
+        cell_budget=cell_budget, orient=False, bucket=bucket,
+    )
+    return schedule

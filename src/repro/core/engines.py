@@ -19,6 +19,11 @@ Names (case-insensitive; ``pc()`` / ``pc_from_corr()`` accept a name or a
               Off-TPU the kernels execute in Pallas interpret mode
               (bit-identical decisions, Python speed) — pick "S" for CPU
               throughput, "auto" for hardware runs.
+  "scan"      the fixed-shape fully-traced path (repro/batch/scan_pc.py):
+              the whole skeleton phase is ONE compiled program up to a
+              static level cap — no host loop, vmap-able over a batch of
+              graphs. A whole-run engine: pc_from_corr dispatches it before
+              the per-level loop; resolve() rejects it at level granularity.
 
 All engines share the chunk planner (levels.plan_level): n′ buckets and
 power-of-two chunk lengths keep the jit cache warm across level
@@ -35,8 +40,19 @@ import jax.numpy as jnp
 from . import levels as L
 from .levels import DEFAULT_CELL_BUDGET  # noqa: F401  (re-export; derivation there)
 
-ENGINE_NAMES = ("S", "E", "S-kernel", "L1-dense", "auto")
+ENGINE_NAMES = ("S", "E", "S-kernel", "L1-dense", "auto", "scan")
+#: Engines that take over the ENTIRE run (level loop included) instead of a
+#: single level; pc_from_corr dispatches them before its level loop.
+WHOLE_RUN_ENGINES = ("scan",)
 _CANON = {name.lower(): name for name in ENGINE_NAMES}
+
+
+def is_whole_run(engine) -> bool:
+    """True when the engine name replaces pc_from_corr's host level loop
+    wholesale (currently only "scan", the traced batch path)."""
+    return not callable(engine) and str(engine).lower() in (
+        n.lower() for n in WHOLE_RUN_ENGINES
+    )
 
 
 def resolve(engine, ell: int) -> str:
@@ -47,6 +63,12 @@ def resolve(engine, ell: int) -> str:
         name = _CANON[str(engine).lower()]
     except KeyError:
         raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINE_NAMES}")
+    if name in WHOLE_RUN_ENGINES:
+        raise ValueError(
+            f"{name!r} is a whole-run engine (repro/batch/scan_pc.py); it is "
+            "dispatched by pc_from_corr before the level loop and cannot be "
+            "selected per level"
+        )
     if name == "auto":
         return "L1-dense" if ell == 1 else "S-kernel"
     if name == "L1-dense" and ell != 1:

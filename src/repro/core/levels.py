@@ -124,8 +124,22 @@ def _unrank_dyn(t, n_dyn, n_max: int, ell: int, table):
 # shared CI math
 # --------------------------------------------------------------------------
 def _inv_spd(m, jitter=1e-8):
+    """Batched SPD inverse with Tikhonov jitter. The ℓ=2 case — the bulk of
+    every PC run's ℓ≥2 work — is solved in closed form (adjugate / det):
+    one fused elementwise op over the batch instead of 10⁵s of tiny LAPACK
+    factorisations, which dominate batched sweeps on CPU. Larger blocks go
+    through LAPACK as before."""
     eye = jnp.eye(m.shape[-1], dtype=m.dtype)
-    return jnp.linalg.inv(m + jitter * eye)
+    m = m + jitter * eye
+    if m.shape[-1] == 2:
+        a, b = m[..., 0, 0], m[..., 0, 1]
+        c, d = m[..., 1, 0], m[..., 1, 1]
+        det = a * d - b * c
+        adj2 = jnp.stack(
+            [jnp.stack([d, -b], axis=-1), jnp.stack([-c, a], axis=-1)], axis=-2
+        )
+        return adj2 / det[..., None, None]
+    return jnp.linalg.inv(m)
 
 
 # --------------------------------------------------------------------------

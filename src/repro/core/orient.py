@@ -14,6 +14,19 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def sepset_membership(sep: jax.Array) -> jax.Array:
+    """sep (n,n,Lmax) int32 id-lists → (n,n,n) bool, [i,j,k] = k ∈ SepSet(i,j).
+
+    The padding sentinels (-1 / -2) never equal a variable id, so they read
+    as "not a member". Shared by the single-run orientation below and the
+    ensemble aggregate (repro/batch/ensemble.py), which majority-votes these
+    membership tensors across bootstrap replicates.
+    """
+    n = sep.shape[0]
+    ks = jnp.arange(n)
+    return jnp.any(sep[:, :, None, :] == ks[None, None, :, None], axis=-1)
+
+
 def orient_v_structures(adj: jax.Array, sep: jax.Array) -> jax.Array:
     """For every unshielded triple i—k—j (i,j non-adjacent) with
     k ∉ SepSet(i,j): orient i→k←j.
@@ -21,13 +34,16 @@ def orient_v_structures(adj: jax.Array, sep: jax.Array) -> jax.Array:
     sep: (n,n,Lmax) int32 separating-set ids, -1 padded; sep[i,j] is valid
     only for removed edges (adj[i,j] == False there).
     """
+    return orient_v_structures_membership(adj, sepset_membership(sep))
+
+
+def orient_v_structures_membership(adj: jax.Array, in_sep: jax.Array) -> jax.Array:
+    """v-structure orientation from a boolean membership tensor in_sep
+    (n,n,n), [i,j,k] = k ∈ SepSet(i,j) — the form ensemble aggregation
+    produces directly (no id-list tensor exists for a voted sepset)."""
     n = adj.shape[0]
     adj = adj.astype(bool)
     d = adj.copy()
-
-    # k in SepSet(i, j)?  (n,n,n) — k axis last
-    ks = jnp.arange(n)
-    in_sep = jnp.any(sep[:, :, None, :] == ks[None, None, :, None], axis=-1)
 
     eye = jnp.eye(n, dtype=bool)
     nonadj = ~adj & ~eye  # i,j distinct non-adjacent
@@ -96,6 +112,12 @@ def meek_rules(d: jax.Array, max_iter: int | None = None) -> jax.Array:
 def cpdag_from_skeleton(adj: jax.Array, sep: jax.Array) -> jax.Array:
     """Full step-2: v-structures then Meek closure → CPDAG digraph."""
     return meek_rules(orient_v_structures(adj, sep))
+
+
+def cpdag_from_membership(adj: jax.Array, in_sep: jax.Array) -> jax.Array:
+    """Step-2 from a membership tensor (n,n,n) instead of id-lists — used by
+    the bootstrap ensemble's aggregated skeleton + voted sepsets."""
+    return meek_rules(orient_v_structures_membership(adj, in_sep))
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,11 @@ cuPC-S kernel pipeline for ℓ≥2 (interpret mode off-TPU). The adjacency is
 (re-)compacted at every level boundary with bucketed static shapes so jit
 caches persist across levels. Orientation (v-structures + Meek) produces
 the CPDAG.
+
+engine="scan" replaces the host level loop wholesale with the fixed-shape
+traced program (repro/batch/scan_pc.py) — bit-identical results up to its
+static level cap, and the formulation that batches over many graphs
+(repro/batch/ensemble.py bootstraps it B-wide in one dispatch).
 """
 from __future__ import annotations
 
@@ -37,15 +42,22 @@ class PCRun:
     timings_s: dict = field(default_factory=dict)
 
     def sepset_dict(self) -> dict:
-        out = {}
+        """{(i, j) i<j → tuple of separator ids} for removed edges with a
+        recorded sepset (level-0 removals carry the -2 sentinel and are
+        excluded — their sepset is empty by definition).
+
+        Vectorised: one upper-triangle mask pass selects the entries; Python
+        only iterates over the (sparse) selected pairs, not all n² cells.
+        """
         n = self.adj.shape[0]
-        for i in range(n):
-            for j in range(i + 1, n):
-                s = self.sepsets[i, j]
-                s = tuple(int(v) for v in s[s >= 0])
-                if not self.adj[i, j] and (s or self.sepsets[i, j, 0] != -2):
-                    out[(i, j)] = s
-        return out
+        iu, ju = np.triu_indices(n, 1)
+        srows = self.sepsets[iu, ju]  # (P, Lmax)
+        has_ids = (srows >= 0).any(axis=1)
+        keep = ~self.adj[iu, ju] & (has_ids | (srows[:, 0] != -2))
+        return {
+            (int(i), int(j)): tuple(int(v) for v in row[row >= 0])
+            for i, j, row in zip(iu[keep], ju[keep], srows[keep])
+        }
 
 
 def pc_from_corr(
@@ -71,6 +83,12 @@ def pc_from_corr(
     c = jnp.asarray(c, jnp.float32)
     n = c.shape[0]
     lmax = min(max_level if max_level is not None else MAX_LEVEL, sepset_depth)
+
+    if E.is_whole_run(engine):
+        return _pc_run_scan(
+            c, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
+            cell_budget=cell_budget, orient=orient, t_start=t_start,
+        )
 
     timings: dict[str, float] = {}
     t0 = time.perf_counter()
@@ -110,6 +128,57 @@ def pc_from_corr(
         sepsets=np.asarray(jax.device_get(sep)),
         levels_run=ell - 1,
         level_stats=stats,
+        timings_s=timings,
+    )
+
+
+def _pc_run_scan(c, m, alpha, max_level, sepset_depth, cell_budget, orient, t_start):
+    """engine="scan": the whole run as the fixed-shape traced program
+    (repro/batch/scan_pc.py) packaged into the PCRun contract.
+
+    max_level=None uses the scan path's static DEFAULT_MAX_LEVEL (deeper
+    levels need an explicit cap — each one is unrolled into the program);
+    results are bit-identical to engine="S" at the same cap. levels_run
+    reports the levels that actually had work (the host driver's stopping
+    rule applied to the recorded per-level max degrees), not the cap.
+    """
+    import warnings
+
+    from repro.batch.scan_pc import DEFAULT_MAX_LEVEL, pc_scan
+
+    if max_level is None and sepset_depth > DEFAULT_MAX_LEVEL:
+        warnings.warn(
+            f"engine='scan' runs a STATIC level cap of {DEFAULT_MAX_LEVEL} "
+            "by default, while the host-loop engines iterate until "
+            "convergence — on deep graphs the skeletons differ. Pass "
+            "max_level explicitly to choose the cap (and silence this).",
+            stacklevel=4,
+        )
+    lmax = min(DEFAULT_MAX_LEVEL if max_level is None else max_level, sepset_depth)
+    t0 = time.perf_counter()
+    res = pc_scan(
+        c, m, alpha=alpha, max_level=lmax, sepset_depth=sepset_depth,
+        cell_budget=cell_budget, orient=orient,
+    )
+    jax.block_until_ready(res.cpdag)
+    timings = {"scan": time.perf_counter() - t0,
+               "total": time.perf_counter() - t_start}
+    # the host driver stops at the first level with max_deg - 1 < ell
+    degs = np.asarray(jax.device_get(res.max_degs))
+    levels_run = 0
+    for ell in range(1, lmax + 1):
+        if degs[ell - 1] - 1 < ell:
+            break
+        levels_run = ell
+    return PCRun(
+        adj=np.asarray(jax.device_get(res.adj)),
+        cpdag=np.asarray(jax.device_get(res.cpdag)),
+        sepsets=np.asarray(jax.device_get(res.sepsets)),
+        levels_run=levels_run,
+        level_stats=[{"level": ell, "engine": "scan",
+                      "skipped": ell > levels_run,
+                      "npr": int(degs[ell - 1]), "max_level_static": lmax}
+                     for ell in range(1, lmax + 1)],
         timings_s=timings,
     )
 

@@ -12,6 +12,13 @@ matrix): jnp cuPC-S/-E ("S"/"E"), the Pallas cuPC-S kernel pipeline
 ``--devices K`` runs the row-sharded distributed engine on K (real or
 forced-host) devices; level barriers are one OR-all-reduce of the
 adjacency per level (DESIGN §4).
+
+Many-graph modes (repro/batch/):
+``--batch B`` learns B independent synthetic datasets in ONE compiled
+dispatch (vmapped pc_scan) and reports graphs/sec;
+``--bootstrap N`` runs the on-device bootstrap ensemble on the configured
+dataset and reports edge frequencies + the stability-selected CPDAG
+(``--stability-threshold`` sets the selection cutoff).
 """
 from __future__ import annotations
 
@@ -26,6 +33,75 @@ import jax
 jax.config.update("jax_enable_x64", True)  # C(n', l) ranks overflow int32
 
 
+def _run_bootstrap(args, x, n, m, d, alpha):
+    """--bootstrap N: the on-device ensemble on the configured dataset."""
+    from repro.batch.ensemble import bootstrap_pc
+
+    t0 = time.perf_counter()
+    run = bootstrap_pc(
+        x, n_boot=args.bootstrap, alpha=alpha,
+        stability_threshold=args.stability_threshold,
+        max_level=args.max_level, seed=args.seed, corr=args.corr,
+    )
+    dt = time.perf_counter() - t0
+    freq = run.edge_freq[np.triu_indices(n, 1)]
+    n_stable = len(run.stable_edges())
+    print(f"[pc_run] bootstrap N={run.n_boot} threshold={run.stability_threshold}"
+          f" widths={run.schedule}")
+    print(f"  stable skeleton edges: {n_stable};  mean replicate edges: "
+          f"{run.replicate_adj.sum(axis=(1, 2)).mean() / 2:.1f}")
+    print(f"  edge-freq deciles (non-zero pairs): "
+          f"{np.percentile(freq[freq > 0], [10, 50, 90]).round(2).tolist()}"
+          if (freq > 0).any() else "  no edges in any replicate")
+    print(f"  directed in aggregated CPDAG: {int((run.cpdag & ~run.cpdag.T).sum())}")
+    for k, v in run.timings_s.items():
+        print(f"  {k:>16s}: {v*1e3:9.1f} ms")
+    print(f"  total: {dt:.2f} s")
+    if args.json:
+        rec = {
+            "mode": "bootstrap", "n": n, "m": m, "density": d,
+            "n_boot": run.n_boot, "stability_threshold": run.stability_threshold,
+            "stable_edges": n_stable, "timings_s": run.timings_s, "total_s": dt,
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def _run_batch(args, n, m, d, alpha):
+    """--batch B: B independent datasets through one vmapped pc_scan."""
+    from repro.batch.scan_pc import DEFAULT_MAX_LEVEL, pc_scan_batch, plan_schedule
+    from repro.core.cit import correlation_from_samples
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    cs = np.stack([
+        np.asarray(correlation_from_samples(
+            sample_gaussian_dag(n=n, m=m, density=d, seed=args.seed + b)[0]))
+        for b in range(args.batch)
+    ])
+    max_level = args.max_level if args.max_level is not None else DEFAULT_MAX_LEVEL
+    schedule = plan_schedule(cs, m, alpha=alpha, max_level=max_level)
+    res = pc_scan_batch(cs, m, alpha=alpha, max_level=max_level, n_prime=schedule)
+    jax.block_until_ready(res.adj)  # compile + first run
+    t0 = time.perf_counter()
+    res = pc_scan_batch(cs, m, alpha=alpha, max_level=max_level, n_prime=schedule)
+    jax.block_until_ready(res.adj)
+    dt = time.perf_counter() - t0
+    edges = np.asarray(res.adj).sum(axis=(1, 2)) // 2
+    print(f"[pc_run] batch B={args.batch} max_level={max_level} widths={schedule}")
+    print(f"  edges per graph: min={int(edges.min())} mean={edges.mean():.1f} "
+          f"max={int(edges.max())};  exact: {int(np.asarray(res.ok).sum())}"
+          f"/{args.batch}")
+    print(f"  steady-state: {dt:.3f} s -> {args.batch / dt:.1f} graphs/sec")
+    if args.json:
+        rec = {
+            "mode": "batch", "n": n, "m": m, "density": d, "batch": args.batch,
+            "schedule": list(schedule), "max_level": max_level,
+            "steady_s": dt, "graphs_per_s": args.batch / dt,
+        }
+        with open(args.json, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default=None, help="paper Table-1 dataset name")
@@ -34,10 +110,14 @@ def main():
     ap.add_argument("--d", type=float, default=0.1)
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument(
-        "--engine", default="auto", choices=["E", "S", "S-kernel", "L1-dense", "auto"],
+        "--engine", default="auto",
+        choices=["E", "S", "S-kernel", "L1-dense", "auto", "scan"],
         help="level engine: jnp cuPC-E/-S, Pallas cuPC-S pipeline (S-kernel), "
-             "fused dense l=1 kernel (L1-dense), or the auto hybrid "
-             "(L1-dense at l=1 + S-kernel at l>=2; interpret mode off-TPU)",
+             "fused dense l=1 kernel (L1-dense), the auto hybrid "
+             "(L1-dense at l=1 + S-kernel at l>=2; interpret mode off-TPU), "
+             "or scan (whole run as one fixed-shape traced program; static "
+             "level cap = --max-level, defaulting to the scan path's "
+             "DEFAULT_MAX_LEVEL)",
     )
     ap.add_argument(
         "--corr", default="auto", choices=["auto", "kernel", "jnp"],
@@ -51,6 +131,15 @@ def main():
     )
     ap.add_argument("--max-level", type=int, default=None)
     ap.add_argument("--devices", type=int, default=0, help=">0: distributed over rows")
+    ap.add_argument("--batch", type=int, default=0,
+                    help=">0: learn B independent synthetic datasets in one "
+                         "vmapped pc_scan dispatch and report graphs/sec")
+    ap.add_argument("--bootstrap", type=int, default=0,
+                    help=">0: bootstrap-ensemble PC with N on-device "
+                         "replicates (repro/batch/ensemble.py)")
+    ap.add_argument("--stability-threshold", type=float, default=0.5,
+                    help="edge-frequency cutoff for the bootstrap ensemble's "
+                         "stability-selected skeleton")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
@@ -64,9 +153,16 @@ def main():
     else:
         n, m, d, alpha = args.n, args.m, args.d, args.alpha
 
-    x, _dag = sample_gaussian_dag(n=n, m=m, density=d, seed=args.seed)
     print(f"[pc_run] n={n} m={m} density={d} engine=cuPC-{args.engine}"
           + (f" devices={args.devices}" if args.devices else ""))
+
+    if args.batch:  # generates its own B datasets; skip the single-run one
+        _run_batch(args, n, m, d, alpha)
+        return
+    x, _dag = sample_gaussian_dag(n=n, m=m, density=d, seed=args.seed)
+    if args.bootstrap:
+        _run_bootstrap(args, x, n, m, d, alpha)
+        return
 
     t0 = time.perf_counter()
     if args.devices:
