@@ -1,7 +1,8 @@
 # Repo verification targets. PYTHONPATH=src everywhere (no install step).
 PY ?= python
 
-.PHONY: test verify-kernels verify-batch bench-pc bench-pc-batch ci
+.PHONY: test verify-kernels verify-batch verify-distributed lint \
+        bench-pc bench-pc-batch bench-check ci
 
 test:  ## tier-1 suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -12,11 +13,21 @@ verify-kernels:  ## fast interpret-mode kernel + engine-parity smoke (no TPU nee
 verify-batch:  ## batched-PC subsystem: traced-scan parity + ensemble + orientation
 	PYTHONPATH=src $(PY) -m pytest -q -m batch tests/test_batch.py
 
+verify-distributed:  ## sharding suite (row-sharded C + sharded batch axis) on a forced 8-device CPU mesh
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	  PYTHONPATH=src $(PY) -m pytest -q -m distributed tests/
+
+lint:  ## ruff over the python tree (same invocation as CI)
+	ruff check src tests benchmarks
+
 bench-pc:  ## per-level engine timings -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_engines
 
 bench-pc-batch:  ## many-graph throughput (vmapped scan vs loop) -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_batch
+
+bench-check:  ## rerun the quick batch bench and diff it against the committed BENCH_pc.json baseline
+	PYTHONPATH=src $(PY) -m benchmarks.check_regression --run
 
 ci:
 	bash scripts/ci.sh

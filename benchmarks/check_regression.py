@@ -1,0 +1,140 @@
+"""Benchmark regression gate: fresh results vs the committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression --run
+    PYTHONPATH=src python -m benchmarks.check_regression   # reuse results/
+
+Compares freshly produced benchmark payloads (benchmarks/results/*.json,
+optionally regenerated with ``--run``) against the committed repo-root
+``BENCH_pc.json`` baseline (read from ``git show HEAD:BENCH_pc.json`` so a
+bench run that already rewrote the working-tree file cannot compare against
+itself) and FAILS on structural regressions:
+
+  * a key present in the baseline section but missing from the fresh
+    payload (a bench stopped measuring something it used to);
+  * a parity flag ("parity_ok", "levels_parity_ok", "shard_parity_ok", …)
+    that was truthy in the baseline — or is new — but is falsy fresh: a
+    fast wrong answer is not a result.
+
+Raw timings are NOT gated (shared CI runners make them advisory); the
+fresh JSON is uploaded as a CI artifact instead. Wired as a non-blocking
+step in .github/workflows/ci.yml and as ``make bench-check``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+from .common import RESULTS
+
+ROOT = RESULTS.parent.parent
+
+#: section name → how to pull it out of the baseline BENCH_pc.json.
+#: pc_engines merges its payload at the top level; pc_batch nests.
+_SECTION_BASE = {
+    "pc_batch": lambda base: base.get("pc_batch"),
+    "pc_engines": lambda base: {
+        k: base[k] for k in ("backend", "engines", "configs") if k in base
+    } or None,
+}
+
+
+def load_baseline() -> dict:
+    """The committed BENCH_pc.json (git HEAD), falling back to the
+    working-tree file when git is unavailable (e.g. an exported tree)."""
+    try:
+        r = subprocess.run(
+            ["git", "show", "HEAD:BENCH_pc.json"],
+            cwd=ROOT, capture_output=True, text=True, timeout=30,
+        )
+        if r.returncode == 0:
+            return json.loads(r.stdout)
+    except (OSError, json.JSONDecodeError, subprocess.TimeoutExpired):
+        pass
+    path = ROOT / "BENCH_pc.json"
+    return json.loads(path.read_text()) if path.exists() else {}
+
+
+def missing_keys(base, fresh, path="") -> list[str]:
+    """Baseline dict keys absent from the fresh payload (recursive)."""
+    out = []
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            return [f"{path or '<root>'} (dict became {type(fresh).__name__})"]
+        for k, v in base.items():
+            sub = f"{path}.{k}" if path else str(k)
+            if k not in fresh:
+                out.append(sub)
+            else:
+                out.extend(missing_keys(v, fresh[k], sub))
+    return out
+
+
+def parity_regressions(base, fresh, path="") -> list[str]:
+    """Falsy parity flags in fresh that were truthy (or absent) in base."""
+    out = []
+    if isinstance(fresh, dict):
+        base = base if isinstance(base, dict) else {}
+        for k, v in fresh.items():
+            sub = f"{path}.{k}" if path else str(k)
+            if "parity" in str(k) and not isinstance(v, dict):
+                if not v and base.get(k, True):
+                    out.append(sub)
+            else:
+                out.extend(parity_regressions(base.get(k), v, sub))
+    return out
+
+
+def check_section(name: str, baseline: dict) -> list[str]:
+    problems = []
+    fresh_path = RESULTS / f"{name}.json"
+    if not fresh_path.exists():
+        return [f"{name}: no fresh payload at {fresh_path} (run with --run?)"]
+    fresh = json.loads(fresh_path.read_text())
+    base = _SECTION_BASE.get(name, lambda b: b.get(name))(baseline)
+    if base is None:
+        print(f"[bench-check] {name}: no committed baseline section — "
+              "structural diff skipped, parity flags still gated")
+        base = {}
+    problems += [f"{name}: missing key {p}" for p in missing_keys(base, fresh)]
+    problems += [f"{name}: parity regression at {p}"
+                 for p in parity_regressions(base, fresh)]
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run", action="store_true",
+                    help="regenerate the fresh payloads first "
+                         "(benchmarks.run --only <section>)")
+    ap.add_argument("--sections", nargs="*", default=["pc_batch"],
+                    help="BENCH sections to gate (default: pc_batch)")
+    args = ap.parse_args(argv)
+
+    baseline = load_baseline()  # BEFORE --run rewrites the working tree
+    if args.run:
+        from . import run as bench_run
+
+        for name in args.sections:
+            # drop any stale payload first: benchmarks.run keeps going past a
+            # failing module, so a leftover results/<name>.json from an older
+            # run must not be able to masquerade as a fresh measurement
+            (RESULTS / f"{name}.json").unlink(missing_ok=True)
+            bench_run.main(["--only", name])
+
+    problems = []
+    for name in args.sections:
+        problems += check_section(name, baseline)
+
+    if problems:
+        for p in problems:
+            print(f"[bench-check] FAIL: {p}")
+        return 1
+    print(f"[bench-check] OK: {', '.join(args.sections)} — no missing keys, "
+          "no parity regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,6 @@ import json
 import time
 from pathlib import Path
 
-import numpy as np
 
 RESULTS = Path(__file__).resolve().parent / "results"
 

@@ -11,7 +11,6 @@ cuPC-S adds the shared-M2 reuse.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from .common import dataset, md_table, save, timed
 

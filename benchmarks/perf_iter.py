@@ -19,8 +19,6 @@ import json
 import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
 
 RESULTS = Path(__file__).resolve().parent / "results"
 

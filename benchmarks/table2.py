@@ -9,8 +9,6 @@ from .common import BENCH_DATASETS, dataset, md_table, save, timed
 
 
 def run(full: bool = False, quick: bool = False):
-    import jax
-
     from repro.core.pc import pc
     from repro.core.stable_ref import pc_stable_skeleton
 

@@ -1,8 +1,17 @@
 #!/usr/bin/env bash
-# CI entry point: kernel smoke first (fast, catches Pallas regressions
-# without TPU hardware via interpret mode), then the full tier-1 suite.
+# CI entry point — the stages the GitHub workflow (.github/workflows/ci.yml)
+# runs on a forced 8-device CPU mesh, and `make ci` runs locally:
+#   lint (skipped when ruff is absent) → kernel/engine smoke → batch
+#   subsystem → distributed/sharding suite → full tier-1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if command -v ruff >/dev/null 2>&1; then
+  echo "[ci] lint (ruff)"
+  ruff check src tests benchmarks
+else
+  echo "[ci] lint skipped (ruff not installed in this environment)"
+fi
 
 echo "[ci] kernel + engine-parity smoke (interpret mode)"
 PYTHONPATH=src python -m pytest -q -m kernels tests/test_kernels.py tests/test_engines.py
@@ -10,5 +19,19 @@ PYTHONPATH=src python -m pytest -q -m kernels tests/test_kernels.py tests/test_e
 echo "[ci] batched-PC subsystem (traced-scan parity + ensemble)"
 PYTHONPATH=src python -m pytest -q -m batch tests/test_batch.py
 
-echo "[ci] tier-1 suite"
-PYTHONPATH=src python -m pytest -x -q
+echo "[ci] distributed/sharding suite (forced 8-device CPU mesh)"
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src python -m pytest -q -m distributed tests/
+
+echo "[ci] tier-1 remainder (kernels/batch/distributed already ran above)"
+PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed"
+
+# non-blocking: perf numbers on shared machines are advisory; structural
+# regressions (missing BENCH keys, parity-flag flips) are still surfaced.
+# CI_SKIP_BENCH=1 skips the rerun (the workflow's dedicated bench-check
+# job owns it there, uploading the fresh JSON as an artifact).
+if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
+  echo "[ci] bench-check (non-blocking)"
+  PYTHONPATH=src python -m benchmarks.check_regression --run \
+    || echo "[ci] bench-check reported regressions (non-blocking)"
+fi

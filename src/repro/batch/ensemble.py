@@ -130,6 +130,7 @@ def bootstrap_pc(
     corr: str = "auto",
     n_prime: int | None = None,
     cell_budget: int = DEFAULT_CELL_BUDGET,
+    mesh=None,
 ) -> EnsembleRun:
     """Bootstrap-ensemble PC-stable on samples x (m, n).
 
@@ -139,6 +140,12 @@ def bootstrap_pc(
     width schedule on the fly (one host sync per level for all replicates,
     always exact); a pre-planned schedule (or int width) from
     ``scan_pc.plan_schedule`` instead runs the zero-sync one-program path.
+
+    mesh (core/sharding.py): shard the replicate (B) axis over the mesh —
+    each device learns B/n_dev replicate skeletons with the same compiled
+    program, and the (B, n, n, n) sepset-vote membership tensor of the
+    aggregation is built shard-local along B before its reduction.
+    Bit-identical to mesh=None (same resampling keys, same commit math).
     """
     t_start = time.perf_counter()
     x = jnp.asarray(x, jnp.float32)
@@ -159,13 +166,13 @@ def bootstrap_pc(
     if n_prime is None:
         res, schedule = scan_levels_batch(
             cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
-            cell_budget=cell_budget, orient=False,
+            cell_budget=cell_budget, orient=False, mesh=mesh,
         )
         scan_phase = "scan_levels_batch"
     else:
         res = pc_scan_batch(
             cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
-            n_prime=n_prime, cell_budget=cell_budget, orient=False,
+            n_prime=n_prime, cell_budget=cell_budget, orient=False, mesh=mesh,
         )
         schedule = tuple(n_prime) if isinstance(n_prime, (tuple, list)) \
             else (int(n_prime),) * max_level

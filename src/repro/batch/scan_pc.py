@@ -42,6 +42,18 @@ re-run flagged graphs with ``n_prime=None`` to get exact results.
 XLA program learns B graphs per dispatch. ``scan_levels_batch`` is the
 plan-as-you-go variant (one sync per level, schedule discovered on the
 fly) used by the bootstrap ensemble.
+
+Multi-device: both batch entry points accept ``mesh`` (a flat 1-D mesh
+from ``core/sharding.py``). The leading B axis is then sharded over the
+mesh via ``jax.sharding`` — the SAME compiled program runs on every
+device over its B/n_dev local graphs (XLA partitions the vmapped program
+along the batch dim; there is no cross-graph communication in the
+skeleton phase, so the only collective is the per-level max-degree
+reduction in ``scan_levels_batch`` — still ONE host sync per level for
+the whole sharded batch). A batch not divisible by the device count is
+padded with identity-correlation graphs (empty level-0 skeletons — a few
+masked no-op lanes) and trimmed from every output; results are
+bit-identical to the single-device run (tests/test_sharding.py).
 """
 from __future__ import annotations
 
@@ -271,6 +283,29 @@ def _build(taus, schedule, sepset_depth, cell_budget, orient, batched):
     return jax.jit(jax.vmap(core) if batched else core)
 
 
+def _pad_shard_batch(cs, mesh):
+    """Pad the batch to a device-count multiple with identity-correlation
+    graphs (level 0 removes every edge → all levels are masked no-ops for
+    the pad lanes) and place it batch-sharded. Returns (cs, pad)."""
+    from repro.core import sharding as SH
+
+    pad = SH.pad_amount(cs.shape[0], mesh)
+    if pad:
+        n = cs.shape[-1]
+        eye = jnp.broadcast_to(jnp.eye(n, dtype=cs.dtype), (pad, n, n))
+        cs = jnp.concatenate([cs, eye], axis=0)
+    return SH.shard_batch(cs, mesh)[0], pad  # already a multiple: no 0-fill
+
+
+def _trim_result(res: ScanResult, pad: int) -> ScanResult:
+    """Drop the identity-graph pad lanes from every (B, ...) output."""
+    from repro.core.sharding import unpad_leading
+
+    if pad == 0:
+        return res
+    return ScanResult(*(unpad_leading(a, pad) for a in res))
+
+
 def _prep(c, m, alpha, max_level, sepset_depth, n_prime):
     c = jnp.asarray(c, jnp.float32)
     n = int(c.shape[-1])
@@ -321,6 +356,7 @@ def pc_scan_batch(
     n_prime=None,
     cell_budget: int = DEFAULT_CELL_BUDGET,
     orient: bool = True,
+    mesh=None,
 ) -> ScanResult:
     """Vmapped ``pc_scan`` over a leading batch axis: cs (B, n, n).
 
@@ -330,15 +366,30 @@ def pc_scan_batch(
     exactness), or leave ``None`` for the always-exact level-0 bound. The
     per-dispatch cell budget is divided by B so the batched worklists keep
     the same memory ceiling as the single-graph engines.
+
+    mesh (core/sharding.py): shard the batch axis over the mesh — each
+    device runs the same program on its B/n_dev local graphs, the budget
+    divides by the LOCAL batch (per-device memory is what it bounds), and
+    a non-divisible B is padded with identity graphs and trimmed. Results
+    are bit-identical to mesh=None (chunking never affects the committed
+    winners — see core/levels.py).
     """
     cs = jnp.asarray(cs, jnp.float32)
     if cs.ndim != 3:
         raise ValueError(f"pc_scan_batch expects (B, n, n); got shape {cs.shape}")
     b = int(cs.shape[0])
     cs, taus, max_level, schedule = _prep(cs, m, alpha, max_level, sepset_depth, n_prime)
-    budget = max(int(cell_budget) // max(b, 1), 2**16)
+    pad = 0
+    if mesh is not None:
+        from repro.core import sharding as SH
+
+        cs, pad = _pad_shard_batch(cs, mesh)
+        b_local = (b + pad) // SH.mesh_size(mesh)
+    else:
+        b_local = b
+    budget = max(int(cell_budget) // max(b_local, 1), 2**16)
     fn = _build(taus, schedule, sepset_depth, budget, bool(orient), True)
-    return fn(cs)
+    return _trim_result(fn(cs), pad)
 
 
 # --------------------------------------------------------------------------
@@ -384,6 +435,7 @@ def scan_levels_batch(
     cell_budget: int = DEFAULT_CELL_BUDGET,
     orient: bool = True,
     bucket: bool = True,
+    mesh=None,
 ):
     """Batch PC with per-level re-planning: ONE host sync per level for all
     B graphs (the sequential loop pays B syncs per level).
@@ -398,6 +450,10 @@ def scan_levels_batch(
     ``levels.run_level(bucket=...)``). Returns ``(ScanResult, schedule)``;
     feed the schedule to ``pc_scan_batch`` to run the same workload as one
     fused program with zero level syncs.
+
+    mesh (core/sharding.py): shard the batch axis — the per-level width
+    probe stays ONE host sync per level for the whole sharded batch (the
+    max-degree reduction becomes the only cross-device collective).
     """
     cs = jnp.asarray(cs, jnp.float32)
     if cs.ndim != 3:
@@ -407,7 +463,14 @@ def scan_levels_batch(
         max_level = DEFAULT_MAX_LEVEL
     if max_level > sepset_depth:
         raise ValueError(f"max_level={max_level} exceeds sepset_depth={sepset_depth}")
-    budget = max(int(cell_budget) // max(b, 1), 2**16)
+    pad = 0
+    b_local = b
+    if mesh is not None:
+        from repro.core import sharding as SH
+
+        cs, pad = _pad_shard_batch(cs, mesh)
+        b_local = (b + pad) // SH.mesh_size(mesh)
+    budget = max(int(cell_budget) // max(b_local, 1), 2**16)
 
     adj, sep = _batch_init(cs, threshold(m, 0, alpha), sepset_depth)
 
@@ -430,11 +493,14 @@ def scan_levels_batch(
         adj, sep = fn(cs, adj, sep, threshold(m, ell, alpha))
 
     cpdag = _build_orient()(adj, sep) if orient else adj
-    ok = jnp.ones((b,), bool)  # widths track the live bound by construction
+    ok = jnp.ones((b + pad,), bool)  # widths track the live bound by construction
     max_degs = (jnp.stack(max_degs, axis=-1) if max_degs
-                else jnp.zeros((b, 0), jnp.int32))
-    return ScanResult(adj=adj, cpdag=cpdag, sepsets=sep, ok=ok,
-                      max_degs=max_degs), tuple(schedule)
+                else jnp.zeros((b + pad, 0), jnp.int32))
+    res = _trim_result(
+        ScanResult(adj=adj, cpdag=cpdag, sepsets=sep, ok=ok, max_degs=max_degs),
+        pad,
+    )
+    return res, tuple(schedule)
 
 
 def plan_schedule(
@@ -445,6 +511,7 @@ def plan_schedule(
     sepset_depth: int = 8,
     cell_budget: int = DEFAULT_CELL_BUDGET,
     bucket: bool = True,
+    mesh=None,
 ) -> tuple:
     """Tight per-level width schedule for a batched workload.
 
@@ -453,10 +520,11 @@ def plan_schedule(
     pilot batch, then serve every later batch through the one-program
     ``pc_scan_batch`` and re-run the rare ``ok=False`` stragglers with
     ``n_prime=None``. ``bucket=False`` plans exact max-degree widths
-    (fewest masked cells; one compile per exact degree).
+    (fewest masked cells; one compile per exact degree). ``mesh`` shards
+    the planning pass's batch axis like :func:`scan_levels_batch`.
     """
     _, schedule = scan_levels_batch(
         cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
-        cell_budget=cell_budget, orient=False, bucket=bucket,
+        cell_budget=cell_budget, orient=False, bucket=bucket, mesh=mesh,
     )
     return schedule

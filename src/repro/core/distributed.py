@@ -11,9 +11,19 @@ the only communication is
      row i removing (i,j) must kill row j's edge too — the CUDA version
      does this through global-memory writes, we do it through the gather).
 
-C and adj are replicated (n ≤ ~16k ⇒ C is ≤ 1 GB fp32, far under one HBM);
-beyond that C itself can be row-sharded with the same layout (the tests only
-read C rows for i ∈ shard ∪ gathered columns — see DESIGN §4).
+C layout — two modes, bit-identical results (tests/test_sharding.py):
+
+  * replicated (default): every device holds the full (n,n) C. Fine to
+    n ≈ 16k (≤ 1 GB fp32), zero extra comms.
+  * row-sharded (``shard_c=True``): C is sharded with the SAME row layout
+    as the compacted adjacency (one ``core/sharding.py`` spec for both),
+    so each device keeps only its n²/n_dev block. The CI tests of shard
+    rows i only read C[a,b] with a ∈ shard ∪ cols, b ∈ cols ∪ {anything
+    for local rows}, where cols is the set of still-active candidate ids
+    (vertices with degree ≥ 1 — every conditioning-set member and every
+    tested j is one). Each chunk therefore all-gathers the O(n·k) column
+    slice C[:, cols] inside the shard_map body and NEVER materialises the
+    full n×n matrix per device: per-device C memory is O(n·k + n²/n_dev).
 
 Fault tolerance: the (adj, sep) pair after any level is a complete,
 idempotent checkpoint; the driver snapshots it per level so a restart
@@ -26,17 +36,66 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import levels as L
+from . import sharding as S
 from .compact import compact_rows
+from .sharding import AXIS
 
 
 def pc_mesh(devices=None) -> Mesh:
     """1-D mesh over all local devices; the PC row axis."""
-    devices = devices if devices is not None else jax.devices()
-    return Mesh(np.asarray(devices), ("rows",))
+    return S.make_mesh(devices=devices)
+
+
+def shard_correlation(c, mesh: Mesh):
+    """Place C row-sharded for ``shard_c`` runs: rows padded to a shard
+    multiple with the same layout as the compacted adjacency. Returns the
+    (n_pad, n) sharded array; per-device footprint is n_pad·n/n_dev."""
+    return S.shard_rows(jnp.asarray(c, jnp.float32), mesh)[0]
+
+
+def _active_columns(counts_host: np.ndarray, n: int):
+    """Host-side candidate-column plan for the sharded-C gather.
+
+    Every id a CI test reads through the gathered columns — conditioning-set
+    members AND tested neighbours j — is some row's compacted neighbour,
+    i.e. a vertex of degree ≥ 1 (symmetry). cols is that set, padded to a
+    bucketed static width k (duplicating cols[0], whose gathered column
+    values are identical, so duplicate positions cannot perturb parity) to
+    keep the shard_map compile key stable across levels.
+
+    Returns (cols (k,) int32, col_pos (n,) int32, k).
+    """
+    cols = np.flatnonzero(counts_host[:n] > 0).astype(np.int32)
+    k = max(1, min(L.bucket_npr(len(cols)), n))
+    col_pos = np.zeros(n, np.int32)
+    col_pos[cols] = np.arange(len(cols), dtype=np.int32)
+    if len(cols) < k:
+        cols = np.concatenate([cols, np.full(k - len(cols), cols[0], np.int32)])
+    return jnp.asarray(cols[:k]), jnp.asarray(col_pos), k
+
+
+def _shard_rows_ids(n_l: int):
+    """Global row ids of this shard inside a shard_map body."""
+    shard_idx = jax.lax.axis_index(AXIS)
+    return shard_idx * n_l + jnp.arange(n_l, dtype=jnp.int32)
+
+
+def _gather_and_commit(adj, sep, compact_l, t_win, removed_slot, s_win, ell):
+    """Shared epilogue of both shard_map bodies: all_gather the per-row
+    winner arrays and apply the replicated global symmetric commit."""
+    n = adj.shape[0]
+    t_win_f = jax.lax.all_gather(t_win, AXIS, tiled=True)
+    rem_f = jax.lax.all_gather(removed_slot, AXIS, tiled=True)
+    s_win_f = jax.lax.all_gather(s_win, AXIS, tiled=True)
+    compact_f = jax.lax.all_gather(compact_l, AXIS, tiled=True)
+    rows_f = jnp.arange(n, dtype=jnp.int32)
+    return L._global_commit(
+        adj, sep, compact_f[:n], rows_f, t_win_f[:n], rem_f[:n], s_win_f[:n], ell
+    )
 
 
 @functools.lru_cache(maxsize=64)
@@ -48,71 +107,102 @@ def _chunk_s_sharded_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int):
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(), P(), P(), P("rows"), P("rows"), P(), P()),
+        in_specs=(P(), P(), P(), P(AXIS), P(AXIS), P(), P()),
         out_specs=(P(), P()),
         check_rep=False,
     )
     def _sharded(c, adj, sep, compact_l, counts_l, t0, tau):
-        n = c.shape[0]
-        n_l = compact_l.shape[0]
-        shard_idx = jax.lax.axis_index("rows")
-        rows_l = shard_idx * n_l + jnp.arange(n_l, dtype=jnp.int32)
+        rows_l = _shard_rows_ids(compact_l.shape[0])
         ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
-
         sep_found, s_ids = L._tests_s(
             c, adj, compact_l, counts_l, rows_l, ranks, tau, ell=ell, n_max=n_max
         )
         t_win, removed_slot, s_win = L._winners(sep_found, ranks, s_ids, None)
+        return _gather_and_commit(adj, sep, compact_l, t_win, removed_slot, s_win, ell)
 
-        # gather winners from every shard → full-width arrays (replicated)
-        t_win_f = jax.lax.all_gather(t_win, "rows", tiled=True)
-        rem_f = jax.lax.all_gather(removed_slot, "rows", tiled=True)
-        s_win_f = jax.lax.all_gather(s_win, "rows", tiled=True)
-        compact_f = jax.lax.all_gather(compact_l, "rows", tiled=True)
-        rows_f = jnp.arange(n, dtype=jnp.int32)
+    return jax.jit(_sharded)
 
-        adj_new, sep_new = L._global_commit(
-            adj, sep, compact_f[:n], rows_f, t_win_f[:n], rem_f[:n], s_win_f[:n], ell
+
+@functools.lru_cache(maxsize=64)
+def _chunk_s_sharded_c_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int, k: int):
+    """shard_map chunk function for the ROW-SHARDED C layout.
+
+    c_rows arrives sharded with the same row spec as the compacted
+    adjacency; the body gathers only the k active candidate columns
+    (all_gather of each shard's (n_l, k) slice → (n_pad, k) per device) —
+    the full n×n matrix never exists on any one device.
+    """
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(AXIS), P(), P(), P(AXIS), P(AXIS), P(), P(), P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    def _sharded(c_rows, adj, sep, compact_l, counts_l, cols, col_pos, t0, tau):
+        rows_l = _shard_rows_ids(compact_l.shape[0])
+        ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
+        # the O(n·k) column gather — the only cross-shard C traffic
+        c_cols = jax.lax.all_gather(c_rows[:, cols], AXIS, tiled=True)
+        sep_found, s_ids = L._tests_s_cols(
+            c_rows, c_cols, col_pos, adj, compact_l, counts_l, rows_l, ranks,
+            tau, ell=ell, n_max=n_max,
         )
-        return adj_new, sep_new
+        t_win, removed_slot, s_win = L._winners(sep_found, ranks, s_ids, None)
+        return _gather_and_commit(adj, sep, compact_l, t_win, removed_slot, s_win, ell)
 
     return jax.jit(_sharded)
 
 
 def run_level_sharded(c, adj, sep, ell, tau, mesh,
-                      cell_budget=L.DEFAULT_CELL_BUDGET, bucket=True):
+                      cell_budget=L.DEFAULT_CELL_BUDGET, bucket=True,
+                      shard_c: bool = False):
     """Distributed analogue of levels.run_level (cuPC-S engine), on the same
     chunk planner: bucketed n′/chunk shapes keep one compiled shard_map
-    program live across level boundaries per mesh too."""
-    n = c.shape[0]
-    n_dev = mesh.devices.size
+    program live across level boundaries per mesh too.
+
+    shard_c: c is the ROW-SHARDED (n_pad, n) matrix from
+    :func:`shard_correlation` instead of a replicated (n, n) one.
+    """
+    n = adj.shape[0]
+    n_dev = S.mesh_size(mesh)
     counts_host = np.asarray(jax.device_get(jnp.sum(adj, axis=1)))
     npr = int(counts_host.max(initial=0))
     if npr - 1 < ell:
         return adj, sep, {"skipped": True, "chunks": 0, "npr": npr}
 
     # pad rows to a device multiple; padded rows have counts=0 → fully masked
-    pad = (-n) % n_dev
+    pad = S.pad_amount(n, mesh)
     npr_b, n_chunk, total = L.plan_level(
         npr, ell, max((n + pad) // n_dev, 1), engine="S",
         cell_budget=cell_budget, bucket=bucket, n_cols=n,
     )
     compact, counts = compact_rows(adj, n_prime=npr_b)
-    if pad:
-        compact = jnp.pad(compact, ((0, pad), (0, 0)), constant_values=-1)
-        counts = jnp.pad(counts, (0, pad))
-    compact = jax.device_put(compact, NamedSharding(mesh, P("rows")))
-    counts = jax.device_put(counts, NamedSharding(mesh, P("rows")))
+    compact, _ = S.shard_rows(compact, mesh, fill=-1)
+    counts, _ = S.shard_rows(counts, mesh)
 
-    fn = _chunk_s_sharded_fn(mesh, ell, n_chunk, npr_b)
+    stats = {"skipped": False, "npr": npr, "npr_bucket": npr_b,
+             "n_chunk": n_chunk, "total_sets": total, "shard_c": shard_c,
+             "compile_key": (ell, n_chunk, npr_b)}
+    if shard_c:
+        cols, col_pos, k = _active_columns(counts_host, n)
+        fn = _chunk_s_sharded_c_fn(mesh, ell, n_chunk, npr_b, k)
+        # replicate the column plan once per level, not once per chunk
+        args = (S.replicate(cols, mesh), S.replicate(col_pos, mesh))
+        stats["k_cols"] = k
+        stats["c_sharding"] = str(c.sharding)
+    else:
+        fn = _chunk_s_sharded_fn(mesh, ell, n_chunk, npr_b)
+        args = ()
+
     chunks = 0
     for t0 in range(0, total, n_chunk):
-        adj, sep = fn(c, adj, sep, compact, counts,
+        adj, sep = fn(c, adj, sep, compact, counts, *args,
                       jnp.asarray(t0, L._rank_dtype()), jnp.float32(tau))
         chunks += 1
-    return adj, sep, {"skipped": False, "chunks": chunks, "npr": npr,
-                      "npr_bucket": npr_b, "n_chunk": n_chunk, "total_sets": total,
-                      "compile_key": (ell, n_chunk, npr_b)}
+    stats["chunks"] = chunks
+    return adj, sep, stats
 
 
 def pc_distributed(
@@ -127,8 +217,14 @@ def pc_distributed(
     checkpoint_cb=None,
     resume=None,
     bucket: bool = True,
+    shard_c: bool = False,
 ):
     """Distributed PC-stable. Provide samples x (m,n) or corr matrix c + m.
+
+    shard_c=True row-shards the correlation matrix over the mesh (same
+    layout as the compacted adjacency) — per-device C memory drops from
+    O(n²) to O(n·k + n²/n_dev); skeleton/sepsets/CPDAG stay bit-identical
+    to the replicated path and the single-device "S" engine.
 
     checkpoint_cb(level, adj, sep): optional per-level snapshot hook — the
     fault-tolerance unit for multi-pod runs (levels are idempotent).
@@ -161,6 +257,11 @@ def pc_distributed(
         sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
         first_level = 1
 
+    if shard_c:
+        # one placement for the whole run: the padded row blocks live on
+        # their shard from here on (level 0 above still used the host copy)
+        c = shard_correlation(c, mesh)
+
     stats = []
     ell = first_level
     while ell <= lmax:
@@ -168,7 +269,8 @@ def pc_distributed(
         if max_deg - 1 < ell:
             break
         adj, sep, st = run_level_sharded(c, adj, sep, ell, threshold(m, ell, alpha),
-                                         mesh, cell_budget=cell_budget, bucket=bucket)
+                                         mesh, cell_budget=cell_budget,
+                                         bucket=bucket, shard_c=shard_c)
         stats.append({"level": ell, **st})
         if checkpoint_cb is not None:
             checkpoint_cb(ell, adj, sep)

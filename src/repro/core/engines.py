@@ -25,6 +25,13 @@ Names (case-insensitive; ``pc()`` / ``pc_from_corr()`` accept a name or a
               graphs. A whole-run engine: pc_from_corr dispatches it before
               the per-level loop; resolve() rejects it at level granularity.
 
+Sharded routes (core/sharding.py owns the mesh/spec/padding conventions):
+the row-sharded distributed engine (core/distributed.py, optionally with a
+row-sharded C via ``shard_c``) scales ONE graph past a device, and
+``batch_run`` below shards the leading B axis of the "scan" engine so a
+many-graph workload scales past a device — both through the same flat
+1-D mesh and exercised on forced-host CPU devices in CI.
+
 All engines share the chunk planner (levels.plan_level): n′ buckets and
 power-of-two chunk lengths keep the jit cache warm across level
 boundaries, and one VMEM-aware cell budget bounds every engine's per-
@@ -109,6 +116,25 @@ def run_level(
         c, adj, sep, ell, tau, engine=name, cell_budget=cell_budget,
         chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e, bucket=bucket,
     )
+
+
+def batch_run(cs, m, *, mesh=None, level_sync: bool = False, **kw):
+    """Dispatch a many-graph workload through the whole-run "scan" engine.
+
+    cs: (B, n, n) correlation matrices. mesh (core/sharding.py flat 1-D
+    mesh) shards the leading batch axis — same compiled program per device
+    over B/n_dev local graphs; None keeps everything on one device.
+    level_sync=True routes through scan_levels_batch (one host sync per
+    level for the whole — possibly sharded — batch, tight widths found on
+    the fly) and returns (ScanResult, schedule); otherwise pc_scan_batch
+    (zero level syncs) returns a ScanResult. Results are bit-identical
+    across both routes and any mesh (tests/test_sharding.py).
+    """
+    from repro.batch.scan_pc import pc_scan_batch, scan_levels_batch
+
+    if level_sync:
+        return scan_levels_batch(cs, m, mesh=mesh, **kw)
+    return pc_scan_batch(cs, m, mesh=mesh, **kw)
 
 
 def _run_level_dense_l1(c, adj, sep, tau):

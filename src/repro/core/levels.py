@@ -145,6 +145,39 @@ def _inv_spd(m, jitter=1e-8):
 # --------------------------------------------------------------------------
 # cuPC-S chunk: set-major with shared inverse
 # --------------------------------------------------------------------------
+def plan_sets(compact, counts, ranks, *, ell: int, n_max: int, n: int):
+    """Unrank one chunk's conditioning sets for a (possibly sharded) row
+    block: (s_ids (n_l,T,ell) clipped to [0, n-1], valid_set (n_l,T)).
+
+    Layout-independent half of the worklist prologue — shared verbatim by
+    the dense-C gather (:func:`gather_s`) and the row-sharded column gather
+    (:func:`gather_s_cols`) so the two C layouts can never diverge on which
+    sets a rank denotes.
+    """
+    n_l, npr = compact.shape
+    n_chunk = ranks.shape[0]
+    table = _jtable(n_max)
+    total = table[jnp.clip(counts, 0, n_max), ell]  # C(n'_i, ell) per row
+    valid_set = ranks[None, :] < total[:, None]  # (n_l, T)
+
+    # positions → variable ids of S             (n_l, T, ell)
+    pos = _unrank_dyn(ranks[None, :], counts[:, None], npr, ell, table)
+    pos = jnp.where(valid_set[..., None], pos, 0)
+    s_ids = jnp.take_along_axis(compact, pos.reshape(n_l, -1), axis=1).reshape(n_l, n_chunk, ell)
+    s_ids = jnp.clip(s_ids, 0, n - 1)  # padded slots are masked anyway
+    return s_ids, valid_set
+
+
+def _set_mask(adj, compact, rows, s_ids, valid_set, n):
+    """Full validity mask (n_l,T,npr): rank in range, j ∉ S, edge alive.
+    Single source of truth for BOTH C layouts (and the Pallas engine's
+    host-side gathers) — divergence here breaks cross-engine parity."""
+    j_ids = jnp.clip(compact, 0, n - 1)  # (n_l, npr)
+    in_s = jnp.any(j_ids[:, None, :, None] == s_ids[:, :, None, :], axis=-1)
+    alive = adj[rows[:, None], j_ids] & (compact >= 0)  # (n_l,npr) snapshot
+    return valid_set[:, :, None] & ~in_s & alive[:, None, :]
+
+
 def gather_s(c, adj, compact, counts, rows, ranks, *, ell: int, n_max: int):
     """Shared cuPC-S worklist prologue: unrank the conditioning sets and
     gather every array the CI math needs, with the full validity mask.
@@ -160,15 +193,7 @@ def gather_s(c, adj, compact, counts, rows, ranks, *, ell: int, n_max: int):
     n = c.shape[0]
     n_l, npr = compact.shape
     n_chunk = ranks.shape[0]
-    table = _jtable(n_max)
-    total = table[jnp.clip(counts, 0, n_max), ell]  # C(n'_i, ell) per row
-    valid_set = ranks[None, :] < total[:, None]  # (n_l, T)
-
-    # positions → variable ids of S             (n_l, T, ell)
-    pos = _unrank_dyn(ranks[None, :], counts[:, None], npr, ell, table)
-    pos = jnp.where(valid_set[..., None], pos, 0)
-    s_ids = jnp.take_along_axis(compact, pos.reshape(n_l, -1), axis=1).reshape(n_l, n_chunk, ell)
-    s_ids = jnp.clip(s_ids, 0, n - 1)  # padded slots are masked anyway
+    s_ids, valid_set = plan_sets(compact, counts, ranks, ell=ell, n_max=n_max, n=n)
 
     # M2 = C[S,S] — gathered ONCE per (row, set): the cuPC-S sharing.
     m2 = c[s_ids[..., :, None], s_ids[..., None, :]]  # (n_l,T,ell,ell)
@@ -177,21 +202,50 @@ def gather_s(c, adj, compact, counts, rows, ranks, *, ell: int, n_max: int):
     cj_s = c[j_ids[:, None, :, None], s_ids[:, :, None, :]]  # (n_l,T,npr,ell)
     cij = jnp.broadcast_to(c[rows[:, None], j_ids][:, None, :], (n_l, n_chunk, npr))
 
-    in_s = jnp.any(j_ids[:, None, :, None] == s_ids[:, :, None, :], axis=-1)
-    alive = adj[rows[:, None], j_ids] & (compact >= 0)  # (n_l,npr) snapshot
-    mask = valid_set[:, :, None] & ~in_s & alive[:, None, :]
+    mask = _set_mask(adj, compact, rows, s_ids, valid_set, n)
     return m2, ci_s, cj_s, cij, mask, s_ids
 
 
-def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int):
-    """cuPC-S CI tests for the given (possibly sharded) row block.
+def gather_s_cols(c_rows, c_cols, col_pos, adj, compact, counts, rows, ranks,
+                  *, ell: int, n_max: int):
+    """cuPC-S worklist prologue for the ROW-SHARDED C layout.
 
-    Returns (sep_found (n_l,T,npr) bool, s_ids (n_l,T,ell)).
+    Instead of the full (n,n) matrix, the caller supplies
+      c_rows:  (n_l, n)  this shard's rows of C (C[rows, :]);
+      c_cols:  (≥n, k)   the gathered active candidate columns C[:, cols]
+               (an all-gather of each shard's local column slice — O(n·k),
+               never O(n²));
+      col_pos: (n,)      global id → its position in `cols` (undefined for
+               ids outside `cols`; such ids only occur in masked cells).
+
+    Every C value the CI math reads satisfies "row ∈ shard OR column ∈
+    cols": C[S,S'] and C[j,S] come from c_cols (S ⊆ cols by construction —
+    cols ⊇ every compacted neighbour id), C[i,S] and C[i,j] from c_rows.
+    The gathered fp32 values are exactly the dense path's values, so the
+    downstream sweep is bit-identical (asserted by tests/test_sharding.py).
     """
-    m2, ci_s, cj_s, cij, mask, s_ids = gather_s(
-        c, adj, compact, counts, rows, ranks, ell=ell, n_max=n_max
-    )
-    # per-set inverse + shared vectors, then the neighbour sweep: MXU einsums
+    n = adj.shape[0]
+    n_l, npr = compact.shape
+    n_chunk = ranks.shape[0]
+    s_ids, valid_set = plan_sets(compact, counts, ranks, ell=ell, n_max=n_max, n=n)
+    loc = jnp.arange(n_l, dtype=jnp.int32)
+
+    s_pos = col_pos[s_ids]  # (n_l,T,ell) positions into the k gathered cols
+    m2 = c_cols[s_ids[..., :, None], s_pos[..., None, :]]  # (n_l,T,ell,ell)
+    ci_s = c_rows[loc[:, None, None], s_ids]  # (n_l,T,ell)
+    j_ids = jnp.clip(compact, 0, n - 1)  # (n_l, npr)
+    cj_s = c_cols[j_ids[:, None, :, None], s_pos[:, :, None, :]]  # (n_l,T,npr,ell)
+    cij = jnp.broadcast_to(c_rows[loc[:, None], j_ids][:, None, :], (n_l, n_chunk, npr))
+
+    mask = _set_mask(adj, compact, rows, s_ids, valid_set, n)
+    return m2, ci_s, cj_s, cij, mask, s_ids
+
+
+def ci_sweep(m2, ci_s, cj_s, cij, mask, tau, *, ell: int):
+    """The cuPC-S CI math on a gathered chunk: per-set inverse + shared
+    vectors, then the neighbour sweep as MXU einsums. Layout-independent —
+    both gather prologues feed it the same fp32 values, so its output is
+    bit-identical across the dense and row-sharded C layouts."""
     if ell == 1:
         g = 1.0 / jnp.maximum(m2, 1e-8)  # scalar "inverse"
     else:
@@ -203,7 +257,31 @@ def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int)
     var_j = 1.0 - jnp.einsum("ntpa,ntpa->ntp", cj_s, gw)
     rho = num / jnp.sqrt(jnp.maximum(var_i[..., None] * var_j, 1e-20))
     indep = fisher_z(rho) <= tau  # (n_l,T,npr)
-    return indep & mask, s_ids
+    return indep & mask
+
+
+def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int):
+    """cuPC-S CI tests for the given (possibly sharded) row block.
+
+    Returns (sep_found (n_l,T,npr) bool, s_ids (n_l,T,ell)).
+    """
+    m2, ci_s, cj_s, cij, mask, s_ids = gather_s(
+        c, adj, compact, counts, rows, ranks, ell=ell, n_max=n_max
+    )
+    return ci_sweep(m2, ci_s, cj_s, cij, mask, tau, ell=ell), s_ids
+
+
+def _tests_s_cols(c_rows, c_cols, col_pos, adj, compact, counts, rows, ranks,
+                  tau, *, ell: int, n_max: int):
+    """cuPC-S CI tests reading the row-sharded C layout (see gather_s_cols).
+
+    Returns (sep_found (n_l,T,npr) bool, s_ids (n_l,T,ell)).
+    """
+    m2, ci_s, cj_s, cij, mask, s_ids = gather_s_cols(
+        c_rows, c_cols, col_pos, adj, compact, counts, rows, ranks,
+        ell=ell, n_max=n_max,
+    )
+    return ci_sweep(m2, ci_s, cj_s, cij, mask, tau, ell=ell), s_ids
 
 
 @functools.partial(jax.jit, static_argnames=("ell", "n_chunk", "n_max"))

@@ -1,0 +1,135 @@
+"""Unified device-sharding layer for the PC engines (single source of truth).
+
+Both scaling axes of the repo shard over ONE flat 1-D mesh:
+
+  * the **row axis** of a single huge graph — `core/distributed.py` shards
+    the compacted adjacency (and, with ``shard_c``, the correlation matrix
+    itself) over the mesh so one run scales past a single HBM;
+  * the **batch axis** of a many-graph workload — `repro/batch` shards the
+    leading B dimension of ``pc_scan_batch`` / ``scan_levels_batch`` /
+    ``bootstrap_pc`` so ensembles scale past one chip.
+
+The axis is deliberately shared (``AXIS = "rows"``): a PC deployment
+dedicates its whole mesh to whichever axis the workload exposes, and the
+layer below (shard_map bodies, jit auto-partitioning) only ever names one
+axis. Mesh construction, the NamedSharding specs, and the shard-aligned
+padding helpers live here so the row path and the batch path can never
+drift apart on layout conventions.
+
+Everything works on forced-host CPU "devices" too — CI runs the whole
+sharded surface on an 8-device CPU mesh via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (see
+scripts/ci.sh and README "Running the sharded paths without a TPU").
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: The single mesh axis every PC sharding uses. Named for the original
+#: row-sharded engine; the batch path shards its leading B axis over the
+#: same name (one flat axis — there is nothing 2-D to disambiguate).
+AXIS = "rows"
+
+
+# --------------------------------------------------------------------------
+# mesh construction
+# --------------------------------------------------------------------------
+def make_mesh(n_devices: int | None = None, devices=None) -> Mesh:
+    """Flat 1-D mesh over (a prefix of) the local devices.
+
+    n_devices: use the first K devices (errors with an actionable hint when
+    fewer are available — on CPU, force more with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=K``).
+    devices: explicit device list (overrides n_devices).
+    """
+    if devices is None:
+        devices = jax.devices()
+        if n_devices is not None:
+            if n_devices > len(devices):
+                raise ValueError(
+                    f"requested a {n_devices}-device mesh but only "
+                    f"{len(devices)} devices are visible; on CPU force more "
+                    "with XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{n_devices}"
+                )
+            devices = devices[:n_devices]
+    return Mesh(np.asarray(devices), (AXIS,))
+
+
+def mesh_size(mesh: Mesh) -> int:
+    return int(mesh.devices.size)
+
+
+# --------------------------------------------------------------------------
+# sharding specs
+# --------------------------------------------------------------------------
+def row_spec(mesh: Mesh) -> NamedSharding:
+    """Leading axis sharded over the mesh: rows of C / the compacted
+    adjacency in the distributed engine."""
+    return NamedSharding(mesh, P(AXIS))
+
+
+def batch_spec(mesh: Mesh, ndim: int = 3) -> NamedSharding:
+    """Leading (batch) axis sharded, trailing dims replicated — the spec for
+    a (B, n, n) stack of correlation matrices/adjacencies and its (B, ...)
+    outputs."""
+    return NamedSharding(mesh, P(AXIS, *(None,) * (ndim - 1)))
+
+
+def replicated_spec(mesh: Mesh) -> NamedSharding:
+    """Fully replicated: one copy of the array per device (the global
+    adjacency/sepset state committed symmetrically each chunk)."""
+    return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------------------
+# shard-aligned padding
+# --------------------------------------------------------------------------
+def pad_amount(dim: int, mesh: Mesh) -> int:
+    """Rows/graphs of padding needed to make `dim` a device-count multiple."""
+    return (-dim) % mesh_size(mesh)
+
+
+def pad_leading(x, mesh: Mesh, fill=0):
+    """Pad the leading axis of x to a device-count multiple with `fill`.
+
+    Returns (padded, pad) — feed `pad` to :func:`unpad_leading`. The pad is
+    appended at the END so shard-local index k still addresses global index
+    ``shard * per_shard + k`` for every real row.
+    """
+    pad = pad_amount(x.shape[0], mesh)
+    if pad == 0:
+        return x, 0
+    import jax.numpy as jnp
+
+    widths = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill), pad
+
+
+def unpad_leading(x, pad: int):
+    """Drop trailing pad rows/graphs appended by :func:`pad_leading`."""
+    return x if pad == 0 else x[: x.shape[0] - pad]
+
+
+def shard_rows(x, mesh: Mesh, fill=0):
+    """Pad the leading axis to a shard multiple and place it row-sharded.
+
+    Returns (sharded, pad). This is THE way per-row state (compacted
+    adjacency, counts, row-blocks of C) enters a shard_map body.
+    """
+    x, pad = pad_leading(x, mesh, fill=fill)
+    return jax.device_put(x, row_spec(mesh)), pad
+
+
+def shard_batch(x, mesh: Mesh, fill=0):
+    """Pad the leading batch axis to a shard multiple and place it
+    batch-sharded (trailing dims replicated). Returns (sharded, pad)."""
+    x, pad = pad_leading(x, mesh, fill=fill)
+    return jax.device_put(x, batch_spec(mesh, x.ndim)), pad
+
+
+def replicate(x, mesh: Mesh):
+    """Place x fully replicated on every mesh device."""
+    return jax.device_put(x, replicated_spec(mesh))

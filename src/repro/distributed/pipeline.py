@@ -13,7 +13,6 @@ over ``pipe`` on dim 0); microbatch stream xs (M, mb, ...) is replicated
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

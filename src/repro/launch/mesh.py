@@ -15,6 +15,9 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_pc_mesh(n_devices: int | None = None):
-    """Flat 1-D mesh for the PC engines (rows shard over everything)."""
-    devs = jax.devices() if n_devices is None else jax.devices()[:n_devices]
-    return jax.sharding.Mesh(devs, ("rows",))
+    """Flat 1-D mesh for the PC engines (rows shard over everything).
+    Delegates to the unified sharding layer (core/sharding.py) so launcher
+    meshes and engine meshes can never disagree on axis conventions."""
+    from repro.core.sharding import make_mesh
+
+    return make_mesh(n_devices)

@@ -11,7 +11,9 @@ matrix): jnp cuPC-S/-E ("S"/"E"), the Pallas cuPC-S kernel pipeline
 ``--corr`` picks the correlation path (tiled MXU kernel vs XLA einsum).
 ``--devices K`` runs the row-sharded distributed engine on K (real or
 forced-host) devices; level barriers are one OR-all-reduce of the
-adjacency per level (DESIGN §4).
+adjacency per level (DESIGN §4). ``--shard-c`` additionally row-shards
+the correlation matrix itself (per-device C memory O(n·k + n²/n_dev)
+instead of O(n²) — the >16k-variables regime).
 
 Many-graph modes (repro/batch/):
 ``--batch B`` learns B independent synthetic datasets in ONE compiled
@@ -19,6 +21,12 @@ dispatch (vmapped pc_scan) and reports graphs/sec;
 ``--bootstrap N`` runs the on-device bootstrap ensemble on the configured
 dataset and reports edge frequencies + the stability-selected CPDAG
 (``--stability-threshold`` sets the selection cutoff).
+
+Sharding flags (core/sharding.py — all run on forced-host CPU devices
+too, see README "Running the sharded paths without a TPU"):
+``--mesh K`` builds a flat K-device mesh; ``--shard-batch`` shards the
+leading B axis of --batch/--bootstrap over it (same compiled program per
+device, B/K local graphs each).
 """
 from __future__ import annotations
 
@@ -33,15 +41,27 @@ import jax
 jax.config.update("jax_enable_x64", True)  # C(n', l) ranks overflow int32
 
 
+def _batch_mesh(args):
+    """The mesh for --shard-batch runs (None when sharding is off)."""
+    if not args.shard_batch:
+        return None
+    from repro.core.sharding import make_mesh
+
+    mesh = make_mesh(args.mesh if args.mesh else None)
+    print(f"[pc_run] batch axis sharded over {mesh.devices.size} devices")
+    return mesh
+
+
 def _run_bootstrap(args, x, n, m, d, alpha):
     """--bootstrap N: the on-device ensemble on the configured dataset."""
     from repro.batch.ensemble import bootstrap_pc
 
+    mesh = _batch_mesh(args)
     t0 = time.perf_counter()
     run = bootstrap_pc(
         x, n_boot=args.bootstrap, alpha=alpha,
         stability_threshold=args.stability_threshold,
-        max_level=args.max_level, seed=args.seed, corr=args.corr,
+        max_level=args.max_level, seed=args.seed, corr=args.corr, mesh=mesh,
     )
     dt = time.perf_counter() - t0
     freq = run.edge_freq[np.triu_indices(n, 1)]
@@ -68,22 +88,27 @@ def _run_bootstrap(args, x, n, m, d, alpha):
 
 
 def _run_batch(args, n, m, d, alpha):
-    """--batch B: B independent datasets through one vmapped pc_scan."""
-    from repro.batch.scan_pc import DEFAULT_MAX_LEVEL, pc_scan_batch, plan_schedule
+    """--batch B: B independent datasets through one vmapped pc_scan,
+    optionally sharded over the mesh (--shard-batch)."""
+    from repro.batch.scan_pc import DEFAULT_MAX_LEVEL, plan_schedule
     from repro.core.cit import correlation_from_samples
+    from repro.core.engines import batch_run
     from repro.data.synthetic_dag import sample_gaussian_dag
 
+    mesh = _batch_mesh(args)
     cs = np.stack([
         np.asarray(correlation_from_samples(
             sample_gaussian_dag(n=n, m=m, density=d, seed=args.seed + b)[0]))
         for b in range(args.batch)
     ])
     max_level = args.max_level if args.max_level is not None else DEFAULT_MAX_LEVEL
-    schedule = plan_schedule(cs, m, alpha=alpha, max_level=max_level)
-    res = pc_scan_batch(cs, m, alpha=alpha, max_level=max_level, n_prime=schedule)
+    schedule = plan_schedule(cs, m, alpha=alpha, max_level=max_level, mesh=mesh)
+    res = batch_run(cs, m, alpha=alpha, max_level=max_level, n_prime=schedule,
+                    mesh=mesh)
     jax.block_until_ready(res.adj)  # compile + first run
     t0 = time.perf_counter()
-    res = pc_scan_batch(cs, m, alpha=alpha, max_level=max_level, n_prime=schedule)
+    res = batch_run(cs, m, alpha=alpha, max_level=max_level, n_prime=schedule,
+                    mesh=mesh)
     jax.block_until_ready(res.adj)
     dt = time.perf_counter() - t0
     edges = np.asarray(res.adj).sum(axis=(1, 2)) // 2
@@ -131,6 +156,19 @@ def main():
     )
     ap.add_argument("--max-level", type=int, default=None)
     ap.add_argument("--devices", type=int, default=0, help=">0: distributed over rows")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help=">0: build a flat K-device mesh (core/sharding.py) "
+                         "for the sharded paths; 0 uses all visible devices "
+                         "when a sharded flag asks for one. On CPU force "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=K")
+    ap.add_argument("--shard-batch", action="store_true",
+                    help="shard the leading B axis of --batch/--bootstrap "
+                         "over the mesh (same compiled program per device)")
+    ap.add_argument("--shard-c", action="store_true",
+                    help="row-shard the correlation matrix in the "
+                         "distributed engine (per-device C memory "
+                         "O(n*k + n^2/n_dev) instead of O(n^2))")
     ap.add_argument("--batch", type=int, default=0,
                     help=">0: learn B independent synthetic datasets in one "
                          "vmapped pc_scan dispatch and report graphs/sec")
@@ -165,16 +203,19 @@ def main():
         return
 
     t0 = time.perf_counter()
-    if args.devices:
+    if args.devices or args.mesh or args.shard_c:
         from repro.core.distributed import pc_distributed
         from repro.launch.mesh import make_pc_mesh
 
         if args.engine != "auto" or args.corr != "auto":
             print("[pc_run] note: --devices uses the sharded jnp cuPC-S engine; "
                   "--engine/--corr selections apply to single-device runs only")
-        mesh = make_pc_mesh(args.devices)
+        mesh = make_pc_mesh(args.devices or args.mesh or None)
+        if args.shard_c:
+            print(f"[pc_run] correlation matrix row-sharded over "
+                  f"{mesh.devices.size} devices")
         run = pc_distributed(x, alpha=alpha, mesh=mesh, max_level=args.max_level,
-                             bucket=not args.no_bucket)
+                             bucket=not args.no_bucket, shard_c=args.shard_c)
     else:
         from repro.core.pc import pc
 

@@ -8,8 +8,6 @@ kpe=(B,T,d_rope), len=()) — 576 floats/token instead of 2·H·dh.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp

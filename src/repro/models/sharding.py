@@ -17,7 +17,6 @@ all ten architectures; nothing here is per-arch code.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -23,7 +23,6 @@ segment machinery.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 
 import jax
@@ -31,10 +30,8 @@ import jax.numpy as jnp
 
 from . import rwkv6 as rk
 from . import ssm as mb
-from .attention import (causal_mask, cross_forward, cross_init, cross_kv,
-                        gqa_cache_init, gqa_decode, gqa_forward, gqa_init,
-                        mla_cache_init, mla_decode, mla_forward, mla_init,
-                        prefix_lm_mask)
+from .attention import (gqa_cache_init, gqa_decode, gqa_forward, gqa_init,
+                        mla_cache_init, mla_decode, mla_forward, mla_init)
 from .layers import (cross_entropy, dense_init, embed_init, layernorm,
                      layernorm_init, mlp, mlp_init, rmsnorm, rmsnorm_init,
                      unembed)

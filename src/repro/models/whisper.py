@@ -11,9 +11,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .attention import (causal_mask, cross_forward, cross_init, cross_kv,
+from .attention import (cross_forward, cross_init, cross_kv,
                         gqa_cache_init, gqa_decode, gqa_forward, gqa_init)
-from .layers import (cross_entropy, dense_init, embed_init, layernorm,
+from .layers import (cross_entropy, embed_init, layernorm,
                      layernorm_init, mlp, mlp_init)
 from . import costmode
 from .meshops import shard_logits, shard_residual

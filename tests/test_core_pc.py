@@ -4,7 +4,6 @@ import itertools
 
 import numpy as np
 import pytest
-import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 

@@ -7,6 +7,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.distributed
+
 _SCRIPT = textwrap.dedent(
     """
     import jax, numpy as np

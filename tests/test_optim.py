@@ -3,13 +3,11 @@ int8 error-feedback compressed all-reduce (exactness + bias decay)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
-                         compress_int8, decompress_int8, ef_compressed_mean,
-                         warmup_cosine)
+                         compress_int8, decompress_int8, warmup_cosine)
 
 
 def _np_adamw(p, g, m, v, t, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):

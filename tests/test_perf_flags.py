@@ -1,12 +1,10 @@
 """Beyond-paper perf toggles must be exact (same math, less traffic)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import ARCHS, TrainConfig
+from repro.configs import ARCHS
 from repro.models import perf_flags
 from repro.models import registry as R
 from repro.models.layers import chunked_ce, cross_entropy

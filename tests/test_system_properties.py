@@ -2,14 +2,13 @@
 import json
 from pathlib import Path
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.configs import ARCHS, SHAPES
+from repro.configs import ARCHS
 from repro.core.cit import threshold
 from repro.core.pc import pc
 from repro.data.lm_tokens import TokenPipeline
