@@ -1,8 +1,8 @@
 # Repo verification targets. PYTHONPATH=src everywhere (no install step).
 PY ?= python
 
-.PHONY: test verify-kernels verify-batch verify-distributed lint \
-        bench-pc bench-pc-batch bench-check ci
+.PHONY: test verify-kernels verify-batch verify-distributed lint docs-check \
+        bench-pc bench-pc-batch bench-pc-distributed bench-check ci
 
 test:  ## tier-1 suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -18,13 +18,19 @@ verify-distributed:  ## sharding suite (row-sharded C + sharded batch axis) on a
 	  PYTHONPATH=src $(PY) -m pytest -q -m distributed tests/
 
 lint:  ## ruff over the python tree (same invocation as CI)
-	ruff check src tests benchmarks
+	ruff check src tests benchmarks scripts
+
+docs-check:  ## execute every fenced python snippet in README.md + docs/*.md
+	$(PY) scripts/check_docs.py
 
 bench-pc:  ## per-level engine timings -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_engines
 
 bench-pc-batch:  ## many-graph throughput (vmapped scan vs loop) -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_batch
+
+bench-pc-distributed:  ## pipelined-vs-sync dispatch + column-gather traffic -> BENCH_pc.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_distributed
 
 bench-check:  ## rerun the quick batch bench and diff it against the committed BENCH_pc.json baseline
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression --run

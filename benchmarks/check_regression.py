@@ -31,9 +31,10 @@ from .common import RESULTS
 ROOT = RESULTS.parent.parent
 
 #: section name → how to pull it out of the baseline BENCH_pc.json.
-#: pc_engines merges its payload at the top level; pc_batch nests.
+#: pc_engines merges its payload at the top level; the others nest.
 _SECTION_BASE = {
     "pc_batch": lambda base: base.get("pc_batch"),
+    "pc_distributed": lambda base: base.get("pc_distributed"),
     "pc_engines": lambda base: {
         k: base[k] for k in ("backend", "engines", "configs") if k in base
     } or None,
@@ -108,8 +109,10 @@ def main(argv=None) -> int:
     ap.add_argument("--run", action="store_true",
                     help="regenerate the fresh payloads first "
                          "(benchmarks.run --only <section>)")
-    ap.add_argument("--sections", nargs="*", default=["pc_batch"],
-                    help="BENCH sections to gate (default: pc_batch)")
+    ap.add_argument("--sections", nargs="*",
+                    default=["pc_batch", "pc_distributed"],
+                    help="BENCH sections to gate "
+                         "(default: pc_batch pc_distributed)")
     args = ap.parse_args(argv)
 
     baseline = load_baseline()  # BEFORE --run rewrites the working tree

@@ -1,0 +1,99 @@
+"""Distributed-dispatch benchmark: pipelined vs sync chunk dispatch, and
+hot-column-cache gather traffic (ISSUE 4).
+
+Times ``pc_distributed`` per level on one synthetic workload three ways —
+sync (pipeline_depth=1, cached), pipelined (depth 4, cached), and the
+legacy uncached column traffic — on a mesh over all visible devices (the
+harness runs on 1 CPU device in CI; on real hardware the same code times
+cross-chip collectives). Records per-level wall times, the column-gather
+collective counts/bytes from the level stats, and parity flags
+(``pipeline_parity_ok`` / ``cache_parity_ok``) gated by
+benchmarks/check_regression.py — a fast wrong answer is not a result.
+Writes benchmarks/results/pc_distributed.json and merges the
+``pc_distributed`` section into the repo-root BENCH_pc.json trajectory.
+
+NOTE on reading CPU numbers: with one forced-host device the collectives
+are memcpys, so the tracked signal here is the dispatch-overlap trend and
+the gathered-bytes accounting, not collective bandwidth.
+"""
+from __future__ import annotations
+
+from .common import md_table, merge_bench_trajectory, save, timed
+
+# small cell budget → several chunks per level, so dispatch pipelining and
+# per-chunk gather traffic are actually exercised (the default budget would
+# fit every level in one chunk at this scale)
+CONFIG = dict(n=64, m=4000, density=0.12, cell_budget=2**11)
+
+
+def _one(x, quick, **kw):
+    import numpy as np
+
+    from repro.core.distributed import pc_distributed
+
+    kwargs = dict(shard_c=True, cell_budget=CONFIG["cell_budget"],
+                  max_level=2 if quick else None, **kw)
+    run, total = timed(lambda: pc_distributed(x=x, **kwargs),
+                       repeat=1 if quick else 2)
+    levels = {k: v for k, v in run.timings_s.items() if k.startswith("level")}
+    return run, {
+        "total_s": total,
+        "per_level_s": levels,
+        "levels_run": run.levels_run,
+        "edges": int(np.asarray(run.adj).sum()) // 2,
+        "chunks": {st["level"]: st["chunks"] for st in run.level_stats},
+        "col_gathers": sum(st.get("col_gathers", 0) for st in run.level_stats),
+        "col_gather_bytes": sum(st.get("col_gather_bytes", 0)
+                                for st in run.level_stats),
+    }
+
+
+def run(full: bool = False, quick: bool = False) -> str:
+    import jax
+    import numpy as np
+
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    n = CONFIG["n"] * (4 if full else 1)
+    x, _ = sample_gaussian_dag(n=n, m=CONFIG["m"], density=CONFIG["density"],
+                               seed=11)
+
+    runs, records = {}, {}
+    variants = {
+        "sync": dict(pipeline_depth=1),
+        "pipelined": dict(pipeline_depth=4),
+        "uncached": dict(pipeline_depth=1, cache_cols=False),
+    }
+    for label, kw in variants.items():
+        runs[label], records[label] = _one(x, quick, **kw)
+
+    def _same(a, b):
+        return bool(np.array_equal(a.adj, b.adj)
+                    and np.array_equal(a.sepsets, b.sepsets)
+                    and np.array_equal(a.cpdag, b.cpdag))
+
+    payload = {
+        "backend": jax.default_backend(),
+        "n_devices": jax.device_count(),
+        "config": {**CONFIG, "n": n},
+        **records,
+        "pipeline_parity_ok": _same(runs["sync"], runs["pipelined"]),
+        "cache_parity_ok": _same(runs["sync"], runs["uncached"]),
+        "col_gather_bytes_saved": (records["uncached"]["col_gather_bytes"]
+                                   - records["sync"]["col_gather_bytes"]),
+    }
+    save("pc_distributed", payload)
+    merge_bench_trajectory({"pc_distributed": payload})
+
+    rows = []
+    for label in variants:
+        r = records[label]
+        lv = " ".join(f"{k[5:]}:{v * 1e3:.0f}ms" for k, v in r["per_level_s"].items())
+        rows.append([label, f"{r['total_s']:.2f}s", r["col_gathers"],
+                     f"{r['col_gather_bytes'] / 1e6:.2f}MB", lv])
+    return ("### Distributed dispatch (pipelined vs sync, column-gather "
+            "traffic)\n\n"
+            + md_table(["variant", "total", "col gathers", "gathered", "per-level"],
+                       rows)
+            + f"\n\nparity: pipeline={payload['pipeline_parity_ok']} "
+              f"cache={payload['cache_parity_ok']}")

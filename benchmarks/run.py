@@ -11,8 +11,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig5, fig6, fig7_8, fig9, fig10, pc_batch, pc_engines,
-               pc_hillclimb, roofline_table, table2)
+from . import (fig5, fig6, fig7_8, fig9, fig10, pc_batch, pc_distributed,
+               pc_engines, pc_hillclimb, roofline_table, table2)
 from .common import RESULTS
 
 MODULES = [
@@ -24,6 +24,7 @@ MODULES = [
     ("fig10", fig10),
     ("pc_engines", pc_engines),
     ("pc_batch", pc_batch),
+    ("pc_distributed", pc_distributed),
     ("pc_hillclimb", pc_hillclimb),
     ("roofline", roofline_table),
 ]

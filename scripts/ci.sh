@@ -2,13 +2,13 @@
 # CI entry point — the stages the GitHub workflow (.github/workflows/ci.yml)
 # runs on a forced 8-device CPU mesh, and `make ci` runs locally:
 #   lint (skipped when ruff is absent) → kernel/engine smoke → batch
-#   subsystem → distributed/sharding suite → full tier-1.
+#   subsystem → distributed/sharding suite → docs snippets → full tier-1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if command -v ruff >/dev/null 2>&1; then
   echo "[ci] lint (ruff)"
-  ruff check src tests benchmarks
+  ruff check src tests benchmarks scripts
 else
   echo "[ci] lint skipped (ruff not installed in this environment)"
 fi
@@ -22,6 +22,9 @@ PYTHONPATH=src python -m pytest -q -m batch tests/test_batch.py
 echo "[ci] distributed/sharding suite (forced 8-device CPU mesh)"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   PYTHONPATH=src python -m pytest -q -m distributed tests/
+
+echo "[ci] docs-check (execute fenced snippets in README.md + docs/)"
+python scripts/check_docs.py
 
 echo "[ci] tier-1 remainder (kernels/batch/distributed already ran above)"
 PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed"

@@ -7,23 +7,42 @@ the only communication is
 
   1. all_gather of the per-row winner arrays (t_win, removed_slot, s_win)
      after each chunk   — O(n · n′ · ℓ) ints, tiny vs the CI-test FLOPs;
-  2. the replicated global commit (edge removals must be symmetric, i.e.
+  2. the replicated adjacency commit (edge removals must be symmetric, i.e.
      row i removing (i,j) must kill row j's edge too — the CUDA version
      does this through global-memory writes, we do it through the gather).
 
-C layout — two modes, bit-identical results (tests/test_sharding.py):
+Every chunk is two dispatches — a *tests* shard_map (CI sweep → gathered
+winner arrays) and a *commit* (apply winners to the chained adj/sep) — so
+the host can keep up to ``pipeline_depth`` chunks' tests in flight while
+commits trail behind (see :func:`run_level_sharded`). The split is what
+makes dispatch-ahead safe: tests only read an *alive snapshot* of the
+adjacency, and a snapshot that lags the commits produces extra claims only
+on already-removed edges, which the chained commit discards — results are
+bit-identical for any depth (tests/test_sharding.py).
 
-  * replicated (default): every device holds the full (n,n) C. Fine to
+State layout — every combination is bit-identical (tests/test_sharding.py):
+
+  * C replicated (default): every device holds the full (n,n) C. Fine to
     n ≈ 16k (≤ 1 GB fp32), zero extra comms.
-  * row-sharded (``shard_c=True``): C is sharded with the SAME row layout
+  * C row-sharded (``shard_c=True``): C is sharded with the SAME row layout
     as the compacted adjacency (one ``core/sharding.py`` spec for both),
     so each device keeps only its n²/n_dev block. The CI tests of shard
     rows i only read C[a,b] with a ∈ shard ∪ cols, b ∈ cols ∪ {anything
     for local rows}, where cols is the set of still-active candidate ids
     (vertices with degree ≥ 1 — every conditioning-set member and every
-    tested j is one). Each chunk therefore all-gathers the O(n·k) column
-    slice C[:, cols] inside the shard_map body and NEVER materialises the
-    full n×n matrix per device: per-device C memory is O(n·k + n²/n_dev).
+    tested j is one). The O(n·k) column block C[:, cols] is all-gathered
+    ONCE per level into the :class:`ColumnCache` (and later levels merely
+    *subset* the cached block — C is constant and cols only shrink, so no
+    further collective is ever needed); per-device C memory is
+    O(n·k + n²/n_dev) and the full n×n matrix never exists on one device.
+  * sepsets row-sharded (``shard_sep=True``): the (n, n, depth) sepset
+    tensor rows are sharded with the same row layout; each chunk's commit
+    writes winner sepsets shard-locally (levels.commit_sep_rows) and only
+    the O(n²) bool adjacency symmetrization stays replicated. Per-device
+    sepset memory drops from O(n²·depth) to O(n²·depth / n_dev) — at
+    depth 8 and fp32-width slots that is 32 n² bytes replicated → 32 n² /
+    n_dev, the last replicated O(n²·depth) state. The global tensor is
+    reassembled only on host at run end (and for checkpoint callbacks).
 
 Fault tolerance: the (adj, sep) pair after any level is a complete,
 idempotent checkpoint; the driver snapshots it per level so a restart
@@ -32,6 +51,7 @@ replays at most one level.
 from __future__ import annotations
 
 import functools
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -67,7 +87,7 @@ def _active_columns(counts_host: np.ndarray, n: int):
     values are identical, so duplicate positions cannot perturb parity) to
     keep the shard_map compile key stable across levels.
 
-    Returns (cols (k,) int32, col_pos (n,) int32, k).
+    Returns host arrays (cols (k,) int32, col_pos (n,) int32, k).
     """
     cols = np.flatnonzero(counts_host[:n] > 0).astype(np.int32)
     k = max(1, min(L.bucket_npr(len(cols)), n))
@@ -75,7 +95,58 @@ def _active_columns(counts_host: np.ndarray, n: int):
     col_pos[cols] = np.arange(len(cols), dtype=np.int32)
     if len(cols) < k:
         cols = np.concatenate([cols, np.full(k - len(cols), cols[0], np.int32)])
-    return jnp.asarray(cols[:k]), jnp.asarray(col_pos), k
+    return cols[:k], col_pos, k
+
+
+class ColumnCache:
+    """Per-run hot-column cache for the row-sharded C layout.
+
+    The PR-3 path all-gathered C[:, cols] inside EVERY chunk body — the
+    same bytes re-shipped ``chunks`` times per level. But C is constant for
+    the whole run and the candidate set (degree ≥ 1 vertices) only ever
+    shrinks, so one gathered block stays a valid superset forever:
+
+      * level-boundary "invalidation" recomputes cols from the fresh degree
+        counts and — when the new set is a subset of the cached one, which
+        degree monotonicity guarantees — *subsets* the cached block locally
+        (levels.subset_cols): zero collectives after the first level;
+      * the first shard_c level (or a resume with no cache) pays the single
+        O(n·k) all-gather.
+
+    The cached block is replicated (n_pad, k) fp32; its values are exactly
+    what a fresh gather would produce, so parity is untouched
+    (tests/test_sharding.py asserts skeleton/sepset equality AND that the
+    per-level gather count strictly decreases vs the uncached path).
+
+    ``gathers`` counts collective column gathers performed over the run —
+    the benchmark and the cache-regression test read it.
+    """
+
+    def __init__(self):
+        self.c_cols = None  # (n_pad, k) replicated device block
+        self.member = None  # (n,) bool — ids present in the cached cols
+        self.col_pos = None  # (n,) int32 — id → position in cached block
+        self.gathers = 0
+
+    def level_block(self, c_rows, mesh: Mesh, counts_host: np.ndarray, n: int):
+        """The level's (c_cols, col_pos, k, level_gathers) — subsetting the
+        cache when possible, all-gathering (and counting it) otherwise."""
+        cols, col_pos, k = _active_columns(counts_host, n)
+        real = np.flatnonzero(counts_host[:n] > 0)
+        level_gathers = 0
+        if self.c_cols is not None and bool(np.all(self.member[real])):
+            c_cols = L.subset_cols(self.c_cols, jnp.asarray(self.col_pos[cols]))
+        else:  # first level (or defensive rebuild): the one collective
+            c_cols = _gather_cols_fn(mesh)(
+                c_rows, S.replicate(jnp.asarray(cols), mesh)
+            )
+            self.gathers += 1
+            level_gathers = 1
+        self.c_cols = c_cols
+        self.member = np.zeros(n, bool)
+        self.member[real] = True
+        self.col_pos = col_pos
+        return c_cols, col_pos, k, level_gathers
 
 
 def _shard_rows_ids(n_l: int):
@@ -84,86 +155,165 @@ def _shard_rows_ids(n_l: int):
     return shard_idx * n_l + jnp.arange(n_l, dtype=jnp.int32)
 
 
-def _gather_and_commit(adj, sep, compact_l, t_win, removed_slot, s_win, ell):
-    """Shared epilogue of both shard_map bodies: all_gather the per-row
-    winner arrays and apply the replicated global symmetric commit."""
-    n = adj.shape[0]
-    t_win_f = jax.lax.all_gather(t_win, AXIS, tiled=True)
-    rem_f = jax.lax.all_gather(removed_slot, AXIS, tiled=True)
-    s_win_f = jax.lax.all_gather(s_win, AXIS, tiled=True)
-    compact_f = jax.lax.all_gather(compact_l, AXIS, tiled=True)
-    rows_f = jnp.arange(n, dtype=jnp.int32)
-    return L._global_commit(
-        adj, sep, compact_f[:n], rows_f, t_win_f[:n], rem_f[:n], s_win_f[:n], ell
+def _gather_winners(t_win, removed_slot, s_win):
+    """Shared epilogue of the tests bodies: all_gather the per-row winner
+    arrays to full (n_pad, …) width — O(n·n′·ℓ) ints, the only per-chunk
+    cross-shard traffic besides the (cached) column gather."""
+    return (
+        jax.lax.all_gather(t_win, AXIS, tiled=True),
+        jax.lax.all_gather(removed_slot, AXIS, tiled=True),
+        jax.lax.all_gather(s_win, AXIS, tiled=True),
     )
 
 
 @functools.lru_cache(maxsize=64)
-def _chunk_s_sharded_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int):
-    """Build the jitted shard_map chunk function for one (ℓ, chunk) config.
+def _gather_cols_fn(mesh: Mesh):
+    """One-per-level column gather for the ColumnCache: each shard's local
+    (n_l, k) slice of C[:, cols] all-gathered to a replicated (n_pad, k)."""
+
+    @functools.partial(
+        shard_map, mesh=mesh, in_specs=(P(AXIS), P()), out_specs=P(),
+        check_rep=False,
+    )
+    def _gather(c_rows, cols):
+        return jax.lax.all_gather(c_rows[:, cols], AXIS, tiled=True)
+
+    return jax.jit(_gather)
+
+
+@functools.lru_cache(maxsize=64)
+def _tests_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int):
+    """Tests-only shard_map for the replicated-C layout: CI-sweep one chunk
+    on this shard's rows and return gathered full-width winner arrays.
     lru_cache'd so bucketed (ℓ, n_chunk, n′) configs reuse the compiled
     program across levels and calls (Mesh is hashable)."""
 
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(), P(), P(), P(AXIS), P(AXIS), P(), P()),
-        out_specs=(P(), P()),
+        in_specs=(P(), P(), P(AXIS), P(AXIS), P(), P()),
+        out_specs=(P(), P(), P()),
         check_rep=False,
     )
-    def _sharded(c, adj, sep, compact_l, counts_l, t0, tau):
+    def _tests(c, adj, compact_l, counts_l, t0, tau):
         rows_l = _shard_rows_ids(compact_l.shape[0])
         ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
         sep_found, s_ids = L._tests_s(
             c, adj, compact_l, counts_l, rows_l, ranks, tau, ell=ell, n_max=n_max
         )
-        t_win, removed_slot, s_win = L._winners(sep_found, ranks, s_ids, None)
-        return _gather_and_commit(adj, sep, compact_l, t_win, removed_slot, s_win, ell)
+        return _gather_winners(*L._winners(sep_found, ranks, s_ids, None))
 
-    return jax.jit(_sharded)
+    return jax.jit(_tests)
 
 
 @functools.lru_cache(maxsize=64)
-def _chunk_s_sharded_c_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int, k: int):
-    """shard_map chunk function for the ROW-SHARDED C layout.
+def _tests_sharded_c_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int, k: int,
+                        cached: bool):
+    """Tests-only shard_map for the ROW-SHARDED C layout.
 
     c_rows arrives sharded with the same row spec as the compacted
-    adjacency; the body gathers only the k active candidate columns
-    (all_gather of each shard's (n_l, k) slice → (n_pad, k) per device) —
-    the full n×n matrix never exists on any one device.
+    adjacency. cached=True receives the level's replicated (n_pad, k)
+    hot-column block (ColumnCache) — no collective in the body; cached=False
+    is the legacy per-chunk gather, kept for the cache's regression
+    benchmark/test. Either way the full n×n matrix never exists per device.
     """
+    if cached:
+
+        @functools.partial(
+            shard_map,
+            mesh=mesh,
+            in_specs=(P(AXIS), P(), P(), P(AXIS), P(AXIS), P(), P(), P()),
+            out_specs=(P(), P(), P()),
+            check_rep=False,
+        )
+        def _tests(c_rows, c_cols, adj, compact_l, counts_l, col_pos, t0, tau):
+            rows_l = _shard_rows_ids(compact_l.shape[0])
+            ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
+            sep_found, s_ids = L._tests_s_cols(
+                c_rows, c_cols, col_pos, adj, compact_l, counts_l, rows_l,
+                ranks, tau, ell=ell, n_max=n_max,
+            )
+            return _gather_winners(*L._winners(sep_found, ranks, s_ids, None))
+
+    else:
+
+        @functools.partial(
+            shard_map,
+            mesh=mesh,
+            in_specs=(P(AXIS), P(), P(AXIS), P(AXIS), P(), P(), P(), P()),
+            out_specs=(P(), P(), P()),
+            check_rep=False,
+        )
+        def _tests(c_rows, adj, compact_l, counts_l, cols, col_pos, t0, tau):
+            rows_l = _shard_rows_ids(compact_l.shape[0])
+            ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
+            # the per-chunk O(n·k) column gather (uncached legacy path)
+            c_cols = jax.lax.all_gather(c_rows[:, cols], AXIS, tiled=True)
+            sep_found, s_ids = L._tests_s_cols(
+                c_rows, c_cols, col_pos, adj, compact_l, counts_l, rows_l,
+                ranks, tau, ell=ell, n_max=n_max,
+            )
+            return _gather_winners(*L._winners(sep_found, ranks, s_ids, None))
+
+    return jax.jit(_tests)
+
+
+@functools.lru_cache(maxsize=64)
+def _commit_fn(mesh: Mesh, ell: int, shard_sep: bool):
+    """Commit one chunk's gathered winner arrays to the chained (adj, sep).
+
+    shard_sep=False: the replicated commit (levels._global_commit) — every
+    device updates its full (n, n, depth) sepset copy.
+    shard_sep=True: sep stays P(AXIS) row-sharded; the body computes the
+    replicated adjacency symmetrization (levels.commit_adj — the ONLY
+    remaining replicated commit) plus this shard's sepset rows
+    (levels.commit_sep_rows). Winner arrays arrive at gathered (n_pad, …)
+    width and are sliced to n (shard-pad rows have no claims).
+    """
+    sep_spec = P(AXIS) if shard_sep else P()
 
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(P(AXIS), P(), P(), P(AXIS), P(AXIS), P(), P(), P(), P()),
-        out_specs=(P(), P()),
+        in_specs=(P(), sep_spec, P(), P(), P(), P()),
+        out_specs=(P(), sep_spec),
         check_rep=False,
     )
-    def _sharded(c_rows, adj, sep, compact_l, counts_l, cols, col_pos, t0, tau):
-        rows_l = _shard_rows_ids(compact_l.shape[0])
-        ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
-        # the O(n·k) column gather — the only cross-shard C traffic
-        c_cols = jax.lax.all_gather(c_rows[:, cols], AXIS, tiled=True)
-        sep_found, s_ids = L._tests_s_cols(
-            c_rows, c_cols, col_pos, adj, compact_l, counts_l, rows_l, ranks,
-            tau, ell=ell, n_max=n_max,
+    def _commit(adj, sep, compact_full, t_win, rem, s_win):
+        n = adj.shape[0]
+        rows = jnp.arange(n, dtype=jnp.int32)
+        if not shard_sep:
+            return L._global_commit(
+                adj, sep, compact_full, rows, t_win[:n], rem[:n], s_win[:n], ell
+            )
+        row_ids = _shard_rows_ids(sep.shape[0])
+        _, key_mat = L._commit_key_mat(compact_full, rows, t_win[:n], rem[:n], n)
+        sep_new = L.commit_sep_rows(
+            sep, row_ids, adj, key_mat, compact_full, rem[:n], s_win[:n], ell
         )
-        t_win, removed_slot, s_win = L._winners(sep_found, ranks, s_ids, None)
-        return _gather_and_commit(adj, sep, compact_l, t_win, removed_slot, s_win, ell)
+        return L.commit_adj(adj, key_mat), sep_new
 
-    return jax.jit(_sharded)
+    return jax.jit(_commit)
 
 
 def run_level_sharded(c, adj, sep, ell, tau, mesh,
                       cell_budget=L.DEFAULT_CELL_BUDGET, bucket=True,
-                      shard_c: bool = False):
+                      shard_c: bool = False, shard_sep: bool = False,
+                      pipeline_depth: int = 1, col_cache: ColumnCache | None = None):
     """Distributed analogue of levels.run_level (cuPC-S engine), on the same
     chunk planner: bucketed n′/chunk shapes keep one compiled shard_map
     program live across level boundaries per mesh too.
 
     shard_c: c is the ROW-SHARDED (n_pad, n) matrix from
     :func:`shard_correlation` instead of a replicated (n, n) one.
+    shard_sep: sep is the ROW-SHARDED (n_pad, n, depth) tensor (same
+    layout); commits write this shard's rows only.
+    pipeline_depth: chunks' tests kept in flight before the oldest commit
+    is applied (1 = fully synchronous). Tests dispatched while commits
+    trail read an alive snapshot ≤ depth−1 chunks stale — bit-identical
+    results for any depth (see levels.chunk_s_tests).
+    col_cache: the run's :class:`ColumnCache` (shard_c only); None gathers
+    columns inside every chunk body (the pre-cache layout).
     """
     n = adj.shape[0]
     n_dev = S.mesh_size(mesh)
@@ -178,30 +328,61 @@ def run_level_sharded(c, adj, sep, ell, tau, mesh,
         npr, ell, max((n + pad) // n_dev, 1), engine="S",
         cell_budget=cell_budget, bucket=bucket, n_cols=n,
     )
-    compact, counts = compact_rows(adj, n_prime=npr_b)
-    compact, _ = S.shard_rows(compact, mesh, fill=-1)
-    counts, _ = S.shard_rows(counts, mesh)
+    compact_host, counts_full = compact_rows(adj, n_prime=npr_b)
+    compact_rep = S.replicate(compact_host, mesh)  # the commit's full view
+    compact, _ = S.shard_rows(compact_host, mesh, fill=-1)
+    counts, _ = S.shard_rows(counts_full, mesh)
 
+    depth = max(1, int(pipeline_depth))
     stats = {"skipped": False, "npr": npr, "npr_bucket": npr_b,
              "n_chunk": n_chunk, "total_sets": total, "shard_c": shard_c,
+             "shard_sep": shard_sep, "pipeline_depth": depth,
              "compile_key": (ell, n_chunk, npr_b)}
     if shard_c:
-        cols, col_pos, k = _active_columns(counts_host, n)
-        fn = _chunk_s_sharded_c_fn(mesh, ell, n_chunk, npr_b, k)
-        # replicate the column plan once per level, not once per chunk
-        args = (S.replicate(cols, mesh), S.replicate(col_pos, mesh))
+        if col_cache is not None:
+            c_cols, col_pos, k, gathers = col_cache.level_block(
+                c, mesh, counts_host, n
+            )
+            tests = _tests_sharded_c_fn(mesh, ell, n_chunk, npr_b, k, cached=True)
+            # c_cols is already replicated (gather out_specs P(); a subset of
+            # a replicated array stays replicated) — no extra device_put
+            pre_args = (c, c_cols)
+            mid_args = (S.replicate(jnp.asarray(col_pos), mesh),)
+            stats["col_gathers"] = gathers
+        else:
+            cols, col_pos, k = _active_columns(counts_host, n)
+            tests = _tests_sharded_c_fn(mesh, ell, n_chunk, npr_b, k, cached=False)
+            pre_args = (c,)
+            # replicate the column plan once per level, not once per chunk
+            mid_args = (S.replicate(jnp.asarray(cols), mesh),
+                        S.replicate(jnp.asarray(col_pos), mesh))
         stats["k_cols"] = k
         stats["c_sharding"] = str(c.sharding)
     else:
-        fn = _chunk_s_sharded_fn(mesh, ell, n_chunk, npr_b)
-        args = ()
+        tests = _tests_fn(mesh, ell, n_chunk, npr_b)
+        pre_args = (c,)
+        mid_args = ()
+    commit = _commit_fn(mesh, ell, shard_sep)
 
     chunks = 0
+    pending: deque = deque()
     for t0 in range(0, total, n_chunk):
-        adj, sep = fn(c, adj, sep, compact, counts, *args,
-                      jnp.asarray(t0, L._rank_dtype()), jnp.float32(tau))
+        pending.append(tests(
+            *pre_args, adj, compact, counts, *mid_args,
+            jnp.asarray(t0, L._rank_dtype()), jnp.float32(tau),
+        ))
         chunks += 1
+        if len(pending) >= depth:
+            adj, sep = commit(adj, sep, compact_rep, *pending.popleft())
+    while pending:
+        adj, sep = commit(adj, sep, compact_rep, *pending.popleft())
+
     stats["chunks"] = chunks
+    if shard_c:
+        if col_cache is None:
+            stats["col_gathers"] = chunks  # one collective per chunk body
+        # bytes the column collective(s) shipped this level (fp32)
+        stats["col_gather_bytes"] = stats["col_gathers"] * (n + pad) * k * 4
     return adj, sep, stats
 
 
@@ -218,16 +399,36 @@ def pc_distributed(
     resume=None,
     bucket: bool = True,
     shard_c: bool = False,
+    shard_sep: bool = False,
+    cache_cols: bool = True,
+    pipeline_depth: int = 1,
 ):
     """Distributed PC-stable. Provide samples x (m,n) or corr matrix c + m.
 
+    Memory/latency knobs — every combination is bit-identical (skeleton,
+    sepsets, CPDAG) to the replicated path and the single-device "S"
+    engine, including n % n_dev ≠ 0 (tests/test_sharding.py):
+
     shard_c=True row-shards the correlation matrix over the mesh (same
     layout as the compacted adjacency) — per-device C memory drops from
-    O(n²) to O(n·k + n²/n_dev); skeleton/sepsets/CPDAG stay bit-identical
-    to the replicated path and the single-device "S" engine.
+    O(n²) to O(n·k + n²/n_dev).
+    shard_sep=True row-shards the (n, n, sepset_depth) sepset tensor with
+    the same layout and commits winner rows shard-locally — per-device
+    sepset memory drops from O(n²·depth) to O(n²·depth / n_dev); the
+    O(n²) bool adjacency symmetrization is the sole replicated commit.
+    cache_cols (shard_c only): gather the active-column block once per
+    level into a :class:`ColumnCache` and subset it thereafter, instead of
+    re-gathering C[:, cols] in every chunk body (False = legacy traffic).
+    pipeline_depth ≥ 2 keeps that many chunks' tests in flight per level —
+    chunk t+1's gather/unrank overlaps chunk t's commit (double-buffered
+    dispatch at depth 2); the level barrier is the only host sync.
 
     checkpoint_cb(level, adj, sep): optional per-level snapshot hook — the
-    fault-tolerance unit for multi-pod runs (levels are idempotent).
+    fault-tolerance unit for multi-pod runs (levels are idempotent). With
+    shard_sep the callback receives the n-row global VIEW of the sharded
+    tensor (a lazy jax.Array slice — np.asarray / jax.device_get in the
+    callback assembles it on host), so snapshots are layout-agnostic and
+    feed straight back into ``resume=``.
     resume=(level, adj, sep): restart from a per-level snapshot — the
     whole algorithm state is (adjacency, sepsets, level); replaying a
     level is safe (PC-stable levels are deterministic given G').
@@ -237,6 +438,9 @@ def pc_distributed(
     from .orient import cpdag_from_skeleton
     from .pc import PCRun
 
+    import time
+
+    t_start = time.perf_counter()
     mesh = mesh or pc_mesh()
     if c is None:
         assert x is not None
@@ -261,26 +465,42 @@ def pc_distributed(
         # one placement for the whole run: the padded row blocks live on
         # their shard from here on (level 0 above still used the host copy)
         c = shard_correlation(c, mesh)
+    if shard_sep:
+        # same row layout as C/compacted adjacency: (n_pad, n, depth) blocks
+        sep = S.shard_rows(sep, mesh, fill=-1)[0]
+    col_cache = ColumnCache() if (shard_c and cache_cols) else None
 
+    timings: dict[str, float] = {}
     stats = []
     ell = first_level
     while ell <= lmax:
         max_deg = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
         if max_deg - 1 < ell:
             break
+        t_lv = time.perf_counter()
         adj, sep, st = run_level_sharded(c, adj, sep, ell, threshold(m, ell, alpha),
                                          mesh, cell_budget=cell_budget,
-                                         bucket=bucket, shard_c=shard_c)
+                                         bucket=bucket, shard_c=shard_c,
+                                         shard_sep=shard_sep,
+                                         pipeline_depth=pipeline_depth,
+                                         col_cache=col_cache)
+        jax.block_until_ready(adj)
+        jax.block_until_ready(sep)
+        timings[f"level{ell}"] = time.perf_counter() - t_lv
         stats.append({"level": ell, **st})
         if checkpoint_cb is not None:
-            checkpoint_cb(ell, adj, sep)
+            checkpoint_cb(ell, adj, sep[:n] if shard_sep else sep)
         ell += 1
 
+    if shard_sep:
+        sep = sep[:n]  # drop shard padding before orientation/export
     cpdag = cpdag_from_skeleton(adj, sep)
+    timings["total"] = time.perf_counter() - t_start
     return PCRun(
         adj=np.asarray(jax.device_get(adj)),
         cpdag=np.asarray(jax.device_get(cpdag)),
         sepsets=np.asarray(jax.device_get(sep)),
         levels_run=ell - 1,
         level_stats=stats,
+        timings_s=timings,
     )

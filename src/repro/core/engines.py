@@ -94,11 +94,18 @@ def run_level(
     bucket: bool = True,
     chunk_fn_s=None,
     chunk_fn_e=None,
+    pipeline_depth: int = 1,
 ):
     """Dispatch one PC-stable level to the resolved engine.
 
     Same contract as levels.run_level: returns (adj, sep, stats) with
     stats["engine"] naming the concrete path taken.
+
+    pipeline_depth ≥ 2 enables split tests/commit dispatch-ahead on the jnp
+    "S" worklist (levels.chunk_s_tests/chunk_s_commit) — bit-identical
+    results at any depth. Fused engines (E, the Pallas chunk functions, the
+    dense ℓ=1 cube) run depth-1 regardless; the distributed driver
+    (core/distributed.run_level_sharded) pipelines every layout.
     """
     name = resolve(engine, ell)
     if name == "L1-dense":
@@ -115,20 +122,30 @@ def run_level(
     return L.run_level(
         c, adj, sep, ell, tau, engine=name, cell_budget=cell_budget,
         chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e, bucket=bucket,
+        pipeline_depth=pipeline_depth,
     )
 
 
 def batch_run(cs, m, *, mesh=None, level_sync: bool = False, **kw):
     """Dispatch a many-graph workload through the whole-run "scan" engine.
 
-    cs: (B, n, n) correlation matrices. mesh (core/sharding.py flat 1-D
-    mesh) shards the leading batch axis — same compiled program per device
-    over B/n_dev local graphs; None keeps everything on one device.
+    cs: (B, n, n) fp32 correlation matrices; m: sample count behind them
+    (sets the Fisher-z thresholds). mesh (core/sharding.py flat 1-D mesh)
+    shards the leading batch axis with ``batch_spec`` — the same compiled
+    program runs per device over its B/n_dev local graphs (B % n_dev ≠ 0
+    is padded with identity-correlation no-op graphs and trimmed from every
+    output); None keeps everything on one device.
+
     level_sync=True routes through scan_levels_batch (one host sync per
     level for the whole — possibly sharded — batch, tight widths found on
     the fly) and returns (ScanResult, schedule); otherwise pc_scan_batch
-    (zero level syncs) returns a ScanResult. Results are bit-identical
-    across both routes and any mesh (tests/test_sharding.py).
+    (zero level syncs) returns a ScanResult, whose fields carry the leading
+    B axis: adj/cpdag (B,n,n) bool, sepsets (B,n,n,Lmax) int32, ok (B,)
+    exactness certificates, max_degs (B, max_level) int32.
+
+    Parity guarantee: results are bit-identical across both routes, any
+    mesh, and the single-device "S" engine up to the static level cap
+    whenever ``ok`` is True (tests/test_sharding.py, tests/test_batch.py).
     """
     from repro.batch.scan_pc import pc_scan_batch, scan_levels_batch
 

@@ -206,6 +206,28 @@ def gather_s(c, adj, compact, counts, rows, ranks, *, ell: int, n_max: int):
     return m2, ci_s, cj_s, cij, mask, s_ids
 
 
+def subset_cols(c_cols, positions):
+    """Cache-aware companion of :func:`gather_s_cols`: slice an already
+    gathered column block down to a shrunk candidate set WITHOUT re-gathering.
+
+    C never changes during a run and the active candidate set (vertices of
+    degree ≥ 1) only shrinks — across chunks within a level and across level
+    boundaries alike. A block gathered once therefore stays valid as a
+    superset forever: the next level's ``c_cols`` is a pure local column
+    subset of the cached one, bit-identical to a fresh all-gather.
+
+    c_cols:    (n_rows, k_old)  a previously gathered C[:, cols_old] block;
+    positions: (k_new,) int     position of each new col id inside cols_old
+               (``col_pos_old[cols_new]`` — the caller must have verified
+               cols_new ⊆ cols_old, which degree monotonicity guarantees).
+    Returns (n_rows, k_new) — exactly C[:, cols_new], zero collectives.
+    The per-level cache lifecycle (invalidation = recompute cols from the
+    fresh degree counts at each level boundary) lives in
+    ``core/distributed.ColumnCache``.
+    """
+    return c_cols[:, positions]
+
+
 def gather_s_cols(c_rows, c_cols, col_pos, adj, compact, counts, rows, ranks,
                   *, ell: int, n_max: int):
     """cuPC-S worklist prologue for the ROW-SHARDED C layout.
@@ -214,7 +236,8 @@ def gather_s_cols(c_rows, c_cols, col_pos, adj, compact, counts, rows, ranks,
       c_rows:  (n_l, n)  this shard's rows of C (C[rows, :]);
       c_cols:  (≥n, k)   the gathered active candidate columns C[:, cols]
                (an all-gather of each shard's local column slice — O(n·k),
-               never O(n²));
+               never O(n²) — or a cached/subset block: see
+               :func:`subset_cols`, which yields bit-identical values);
       col_pos: (n,)      global id → its position in `cols` (undefined for
                ids outside `cols`; such ids only occur in masked cells).
 
@@ -375,6 +398,24 @@ def _winners(sep_found, ranks, s_ids_shared, s_ids_per_edge):
     return t_win, removed_slot, s_win
 
 
+def _commit_key_mat(compact_full, rows_full, t_win, removed_slot, n):
+    """Scatter per-(row, slot) winner ranks into the dense (n, n) key matrix.
+
+    key_mat[i, j] is row i's claim on edge (i, j): rank·2 + endpoint-order
+    for winner slots, imax elsewhere. The symmetric edge decision is then
+    min(key_mat, key_mat.T) — shared by the replicated commit
+    (:func:`_global_commit`) and the row-sharded sepset commit
+    (:func:`commit_sep_rows`), so the two layouts cannot diverge on which
+    endpoint's separating set wins. Returns (j_ids (n, npr), key_mat (n, n)).
+    """
+    imax = _imax()
+    j_ids = jnp.clip(compact_full, 0, n - 1)
+    order_bit = (rows_full[:, None] > j_ids).astype(_rank_dtype())
+    key = jnp.where(removed_slot, t_win * 2 + order_bit, imax)
+    key_mat = jnp.full((n, n), imax, dtype=_rank_dtype()).at[rows_full[:, None], j_ids].min(key)
+    return j_ids, key_mat
+
+
 def _global_commit(adj, sep, compact_full, rows_full, t_win, removed_slot, s_win, ell):
     """Apply removals + sepsets to the GLOBAL adj/sep given full-width winner
     arrays (t_win/removed_slot/s_win over all n rows, e.g. after all_gather).
@@ -384,10 +425,7 @@ def _global_commit(adj, sep, compact_full, rows_full, t_win, removed_slot, s_win
     """
     n = adj.shape[0]
     imax = _imax()
-    j_ids = jnp.clip(compact_full, 0, n - 1)
-    order_bit = (rows_full[:, None] > j_ids).astype(_rank_dtype())
-    key = jnp.where(removed_slot, t_win * 2 + order_bit, imax)
-    key_mat = jnp.full((n, n), imax, dtype=_rank_dtype()).at[rows_full[:, None], j_ids].min(key)
+    j_ids, key_mat = _commit_key_mat(compact_full, rows_full, t_win, removed_slot, n)
     # sepset writes: ONLY winner slots may scatter — padded compact slots
     # clip onto column 0 and a last-writer-wins .set would stomp real
     # records with zeros (caught by test_sepsets_certify_removals).
@@ -413,12 +451,133 @@ def _global_commit(adj, sep, compact_full, rows_full, t_win, removed_slot, s_win
     return adj_new, sep_new
 
 
+def commit_adj(adj, key_mat):
+    """The replicated half of the commit: symmetric edge removal from the
+    dense winner-key matrix (adjacency symmetrization must see BOTH
+    endpoints' claims, so it stays replicated even when the sepset tensor
+    is row-sharded). Returns the updated (n, n) bool adjacency."""
+    return adj & ~(jnp.minimum(key_mat, key_mat.T) < _imax())
+
+
+def commit_sep_rows(sep_rows, row_ids, adj, key_mat, compact_full, removed_slot,
+                    s_win, ell):
+    """Row-shard-LOCAL sepset commit: update this shard's block of the
+    (n, n, Lmax) sepset tensor from full-width winner arrays.
+
+    The replicated commit (:func:`_global_commit`) scatters an O(n²·ℓ)
+    s_mat on every device; when the sepset tensor is row-sharded
+    (``pc_distributed(shard_sep=True)``) each device only needs the writes
+    landing in ITS rows — O(n²·ℓ / n_dev) work and memory. Two claim
+    sources feed a local row i:
+
+      * row i's own winner slots (scattered by target column j), and
+      * every other row j's winner slot targeting i (the transposed claim —
+        scattered by (j_ids[j, p] → local row, source j)).
+
+    The per-edge tie-break (``key_own <= key_oth``) replays
+    :func:`_global_commit`'s ``use_own`` rule exactly, so the sharded and
+    replicated layouts commit bit-identical sepsets (tests/test_sharding.py).
+
+    sep_rows:     (n_l, n, Lmax) this shard's sepset rows;
+    row_ids:      (n_l,) global row ids (ids ≥ n are shard padding — their
+                  writes are masked; their stored junk is trimmed on gather);
+    adj:          (n, n) PRE-commit adjacency (writes only hit edges alive
+                  until now, as in the replicated commit);
+    key_mat:      (n, n) from :func:`_commit_key_mat`;
+    compact_full / removed_slot / s_win: full-width (n, npr[, ℓ]) winner
+                  arrays (post all-gather).
+    Returns the updated (n_l, n, Lmax) block.
+    """
+    n = adj.shape[0]
+    n_l = sep_rows.shape[0]
+    imax = _imax()
+    rid = jnp.clip(row_ids, 0, n - 1)
+    valid_row = row_ids < n
+    key_own = key_mat[rid]  # (n_l, n): local rows' claims
+    key_oth = key_mat.T[rid]  # (n_l, n): the other endpoints' claims
+    use_own = key_own <= key_oth
+    newly_removed = jnp.minimum(key_own, key_oth) < imax
+
+    # own claims: scatter local winner slots by target column (losers → dump
+    # column n, same rule as the replicated commit's s_mat scatter)
+    j_ids_l = jnp.clip(compact_full[rid], 0, n - 1)  # (n_l, npr)
+    rem_l = removed_slot[rid]
+    loc = jnp.arange(n_l, dtype=jnp.int32)
+    j_write = jnp.where(rem_l, j_ids_l, n)
+    s_own = (
+        jnp.zeros((n_l, n + 1, ell), jnp.int32)
+        .at[loc[:, None], j_write]
+        .set(s_win[rid])[:, :n]
+    )
+
+    # transposed claims: global row g's winner slot p targets row
+    # compact_full[g, p]; claims landing inside this shard scatter into
+    # (target-local, g), everything else → dump row n_l
+    j_ids_f = jnp.clip(compact_full, 0, n - 1)  # (n, npr)
+    t_loc = j_ids_f - row_ids[0]
+    in_shard = removed_slot & (t_loc >= 0) & (t_loc < n_l)
+    t_loc = jnp.where(in_shard, t_loc, n_l)
+    g = jnp.arange(compact_full.shape[0], dtype=jnp.int32)
+    s_oth = (
+        jnp.zeros((n_l + 1, n, ell), jnp.int32)
+        .at[t_loc, jnp.broadcast_to(g[:, None], t_loc.shape)]
+        .set(s_win)[:n_l]
+    )
+
+    s_final = jnp.where(use_own[..., None], s_own, s_oth)
+    write = newly_removed & adj[rid] & valid_row[:, None]
+    lmax = sep_rows.shape[-1]
+    return jnp.where(
+        write[..., None] & (jnp.arange(lmax) < ell)[None, None, :],
+        jnp.pad(s_final, ((0, 0), (0, 0), (0, lmax - ell)), constant_values=-1),
+        sep_rows,
+    )
+
+
 def _commit(c, adj, sep, compact, counts, sep_found, ranks, s_ids_shared, s_ids_per_edge, ell):
     """sep_found: (n,T,npr). Shared engines pass s_ids (n,T,ell); edge-major
     engines pass per-edge sets (n,T,npr,ell)."""
     n = adj.shape[0]
     rows = jnp.arange(n, dtype=jnp.int32)
     t_win, removed_slot, s_win = _winners(sep_found, ranks, s_ids_shared, s_ids_per_edge)
+    return _global_commit(adj, sep, compact, rows, t_win, removed_slot, s_win, ell)
+
+
+# --------------------------------------------------------------------------
+# split tests/commit chunk functions (async dispatch pipelining)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("ell", "n_chunk", "n_max"))
+def chunk_s_tests(c, adj, compact, counts, t0, tau, *, ell: int, n_chunk: int, n_max: int):
+    """The tests half of :func:`chunk_s`: CI-test combo-ranks
+    [t0, t0+n_chunk) and reduce to per-(row, slot) winner arrays, WITHOUT
+    committing. Returns (t_win (n,npr), removed_slot (n,npr) bool,
+    s_win (n,npr,ell)) — feed to :func:`chunk_s_commit`.
+
+    Why the split is safe to pipeline: ``adj`` here is only an *alive
+    snapshot* masking which cells may claim a removal. A stale snapshot
+    (any adjacency between the level start and the latest commit) produces
+    extra claims ONLY on already-removed edges — claims for still-alive
+    edges are identical cell-for-cell — and :func:`chunk_s_commit` masks
+    sepset writes with the chained pre-commit adjacency, so stale claims
+    are discarded. Chunk t+1's tests therefore need not wait for chunk t's
+    commit: results stay bit-identical for ANY dispatch-ahead depth
+    (asserted by tests/test_sharding.py).
+    """
+    n = compact.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    ranks = t0 + jnp.arange(n_chunk, dtype=_rank_dtype())
+    sep_found, s_ids = _tests_s(c, adj, compact, counts, rows, ranks, tau, ell=ell, n_max=n_max)
+    return _winners(sep_found, ranks, s_ids, None)
+
+
+@functools.partial(jax.jit, static_argnames=("ell",))
+def chunk_s_commit(adj, sep, compact, t_win, removed_slot, s_win, *, ell: int):
+    """The commit half of :func:`chunk_s`: apply one chunk's winner arrays
+    (from :func:`chunk_s_tests`) to the chained (adj, sep) state. Commits
+    MUST apply in ascending-rank chunk order — the first separating chunk
+    wins (module docstring); the tests may run arbitrarily far ahead."""
+    n = adj.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
     return _global_commit(adj, sep, compact, rows, t_win, removed_slot, s_win, ell)
 
 
@@ -539,6 +698,7 @@ def run_level(
     chunk_fn_s=None,
     chunk_fn_e=None,
     bucket: bool = True,
+    pipeline_depth: int = 1,
 ):
     """Run one PC-stable level. Host loop over rank-chunks (early-termination
     re-compaction happens implicitly through the `alive` snapshot).
@@ -546,7 +706,19 @@ def run_level(
     engine ∈ {"S", "E"} selects the jnp worklist shape; kernel-backed chunk
     functions slot in via chunk_fn_s/chunk_fn_e (see core/engines.py for the
     public registry). Returns (adj, sep, stats-dict).
+
+    pipeline_depth ≥ 2 splits each chunk into tests + commit
+    (:func:`chunk_s_tests` / :func:`chunk_s_commit`) and keeps up to that
+    many chunks' tests in flight before the oldest commit is applied —
+    chunk t+1's gather/unrank no longer serialises behind chunk t's commit
+    in the XLA dependency graph (the tests read an alive snapshot that may
+    lag the commits by up to depth−1 chunks, which cannot change results —
+    see chunk_s_tests). Bit-identical to the sync path for any depth; only
+    the jnp "S" worklist pipelines (kernel-backed chunk functions are fused
+    tests+commit programs and run depth-1).
     """
+    from collections import deque
+
     from .compact import compact_rows
 
     n = c.shape[0]
@@ -558,17 +730,33 @@ def run_level(
         npr, ell, n, engine=engine, cell_budget=cell_budget, bucket=bucket, n_cols=n
     )
     compact, counts = compact_rows(adj, n_prime=npr_b)
-    fn = (chunk_fn_s or chunk_s) if engine.upper() == "S" else (chunk_fn_e or chunk_e)
+    depth = max(1, pipeline_depth)
+    pipelined = depth > 1 and engine.upper() == "S" and chunk_fn_s is None
 
     chunks = 0
-    for t0 in range(0, total, n_chunk):
-        adj, sep = fn(
-            c, adj, sep, compact, counts, jnp.asarray(t0, _rank_dtype()), tau,
-            ell=ell, n_chunk=n_chunk, n_max=npr_b,
-        )
-        chunks += 1
+    if pipelined:
+        pending: deque = deque()
+        for t0 in range(0, total, n_chunk):
+            pending.append(chunk_s_tests(
+                c, adj, compact, counts, jnp.asarray(t0, _rank_dtype()), tau,
+                ell=ell, n_chunk=n_chunk, n_max=npr_b,
+            ))
+            chunks += 1
+            if len(pending) >= depth:
+                adj, sep = chunk_s_commit(adj, sep, compact, *pending.popleft(), ell=ell)
+        while pending:
+            adj, sep = chunk_s_commit(adj, sep, compact, *pending.popleft(), ell=ell)
+    else:
+        fn = (chunk_fn_s or chunk_s) if engine.upper() == "S" else (chunk_fn_e or chunk_e)
+        for t0 in range(0, total, n_chunk):
+            adj, sep = fn(
+                c, adj, sep, compact, counts, jnp.asarray(t0, _rank_dtype()), tau,
+                ell=ell, n_chunk=n_chunk, n_max=npr_b,
+            )
+            chunks += 1
     return adj, sep, {
         "skipped": False, "chunks": chunks, "npr": npr, "npr_bucket": npr_b,
         "n_chunk": n_chunk, "total_sets": total, "engine": engine,
         "compile_key": (ell, n_chunk, npr_b),
+        "pipeline_depth": depth if pipelined else 1,
     }

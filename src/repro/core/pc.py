@@ -72,12 +72,15 @@ def pc_from_corr(
     chunk_fn_s=None,
     chunk_fn_e=None,
     bucket: bool = True,
+    pipeline_depth: int = 1,
 ) -> PCRun:
     """Run PC-stable given a correlation matrix c (n,n) and sample count m.
 
     engine: a name from engines.ENGINE_NAMES or callable(ell)->name;
     bucket=False disables n′/chunk bucketing (one jit compile per exact
-    max-degree — the legacy behaviour, kept for the compile-count probe).
+    max-degree — the legacy behaviour, kept for the compile-count probe);
+    pipeline_depth ≥ 2 keeps that many rank-chunks' tests in flight per
+    level on the jnp "S" worklist (bit-identical — see engines.run_level).
     """
     t_start = time.perf_counter()
     c = jnp.asarray(c, jnp.float32)
@@ -110,6 +113,7 @@ def pc_from_corr(
             c, adj, sep, ell, threshold(m, ell, alpha), engine=engine,
             cell_budget=cell_budget, bucket=bucket,
             chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e,
+            pipeline_depth=pipeline_depth,
         )
         jax.block_until_ready(adj)
         timings[f"level{ell}"] = time.perf_counter() - t0

@@ -3,8 +3,9 @@
 Both scaling axes of the repo shard over ONE flat 1-D mesh:
 
   * the **row axis** of a single huge graph — `core/distributed.py` shards
-    the compacted adjacency (and, with ``shard_c``, the correlation matrix
-    itself) over the mesh so one run scales past a single HBM;
+    the compacted adjacency (and, with ``shard_c`` / ``shard_sep``, the
+    correlation matrix and the sepset tensor) over the mesh so one run
+    scales past a single HBM;
   * the **batch axis** of a many-graph workload — `repro/batch` shards the
     leading B dimension of ``pc_scan_batch`` / ``scan_levels_batch`` /
     ``bootstrap_pc`` so ensembles scale past one chip.
@@ -66,8 +67,11 @@ def mesh_size(mesh: Mesh) -> int:
 # sharding specs
 # --------------------------------------------------------------------------
 def row_spec(mesh: Mesh) -> NamedSharding:
-    """Leading axis sharded over the mesh: rows of C / the compacted
-    adjacency in the distributed engine."""
+    """Leading axis sharded over the mesh, trailing dims replicated: rows of
+    C (n_pad, n), the compacted adjacency (n_pad, npr) and the sepset
+    tensor (n_pad, n, depth) in the distributed engine — ONE spec for every
+    per-row state so the layouts can never drift apart. Device d holds
+    global rows [d·n_pad/n_dev, (d+1)·n_pad/n_dev)."""
     return NamedSharding(mesh, P(AXIS))
 
 
@@ -90,6 +94,17 @@ def replicated_spec(mesh: Mesh) -> NamedSharding:
 def pad_amount(dim: int, mesh: Mesh) -> int:
     """Rows/graphs of padding needed to make `dim` a device-count multiple."""
     return (-dim) % mesh_size(mesh)
+
+
+def per_device_rows(dim: int, mesh: Mesh) -> int:
+    """Leading-axis length of ONE device's block after shard-aligned padding
+    — the single number behind every per-device memory formula in
+    docs/engines.md: a row-sharded (n, …) tensor stores
+    ``per_device_rows(n, mesh) · prod(trailing dims)`` elements per device
+    (e.g. the sharded sepset tensor: per_device_rows(n) · n · depth int32,
+    i.e. O(n²·depth / n_dev)). Asserted against the actual addressable
+    shard shapes by tests/test_sharding.py."""
+    return (dim + pad_amount(dim, mesh)) // mesh_size(mesh)
 
 
 def pad_leading(x, mesh: Mesh, fill=0):
@@ -117,7 +132,8 @@ def shard_rows(x, mesh: Mesh, fill=0):
     """Pad the leading axis to a shard multiple and place it row-sharded.
 
     Returns (sharded, pad). This is THE way per-row state (compacted
-    adjacency, counts, row-blocks of C) enters a shard_map body.
+    adjacency, counts, row-blocks of C, sepset rows) enters a shard_map
+    body; per-device block shape is (per_device_rows(n, mesh), *trailing).
     """
     x, pad = pad_leading(x, mesh, fill=fill)
     return jax.device_put(x, row_spec(mesh)), pad

@@ -13,7 +13,12 @@ matrix): jnp cuPC-S/-E ("S"/"E"), the Pallas cuPC-S kernel pipeline
 forced-host) devices; level barriers are one OR-all-reduce of the
 adjacency per level (DESIGN §4). ``--shard-c`` additionally row-shards
 the correlation matrix itself (per-device C memory O(n·k + n²/n_dev)
-instead of O(n²) — the >16k-variables regime).
+instead of O(n²) — the >16k-variables regime), with a per-run hot-column
+cache (``--no-cache-cols`` restores the per-chunk gather);
+``--shard-sep`` row-shards the sepset tensor and commits winners
+shard-locally (O(n²·depth/n_dev) per device); ``--pipeline-depth D``
+keeps D rank-chunks' CI tests in flight per level (dispatch-ahead,
+bit-identical at any depth — docs/ARCHITECTURE.md).
 
 Many-graph modes (repro/batch/):
 ``--batch B`` learns B independent synthetic datasets in ONE compiled
@@ -169,6 +174,20 @@ def main():
                     help="row-shard the correlation matrix in the "
                          "distributed engine (per-device C memory "
                          "O(n*k + n^2/n_dev) instead of O(n^2))")
+    ap.add_argument("--shard-sep", action="store_true",
+                    help="row-shard the sepset tensor in the distributed "
+                         "engine and commit winners shard-locally "
+                         "(per-device sepset memory O(n^2*depth/n_dev) "
+                         "instead of O(n^2*depth))")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help=">=2: keep that many rank-chunks' CI tests in "
+                         "flight per level (double-buffered dispatch at 2; "
+                         "tests overlap the trailing commits) -- "
+                         "bit-identical results at any depth")
+    ap.add_argument("--no-cache-cols", action="store_true",
+                    help="disable the per-level hot-column cache in "
+                         "--shard-c runs (re-gather C[:, cols] inside "
+                         "every chunk body -- the legacy traffic pattern)")
     ap.add_argument("--batch", type=int, default=0,
                     help=">0: learn B independent synthetic datasets in one "
                          "vmapped pc_scan dispatch and report graphs/sec")
@@ -203,7 +222,7 @@ def main():
         return
 
     t0 = time.perf_counter()
-    if args.devices or args.mesh or args.shard_c:
+    if args.devices or args.mesh or args.shard_c or args.shard_sep:
         from repro.core.distributed import pc_distributed
         from repro.launch.mesh import make_pc_mesh
 
@@ -213,14 +232,24 @@ def main():
         mesh = make_pc_mesh(args.devices or args.mesh or None)
         if args.shard_c:
             print(f"[pc_run] correlation matrix row-sharded over "
-                  f"{mesh.devices.size} devices")
+                  f"{mesh.devices.size} devices"
+                  + (" (hot-column cache off)" if args.no_cache_cols else ""))
+        if args.shard_sep:
+            print(f"[pc_run] sepset tensor row-sharded over "
+                  f"{mesh.devices.size} devices (shard-local commit)")
+        if args.pipeline_depth > 1:
+            print(f"[pc_run] chunk dispatch pipelined, depth {args.pipeline_depth}")
         run = pc_distributed(x, alpha=alpha, mesh=mesh, max_level=args.max_level,
-                             bucket=not args.no_bucket, shard_c=args.shard_c)
+                             bucket=not args.no_bucket, shard_c=args.shard_c,
+                             shard_sep=args.shard_sep,
+                             cache_cols=not args.no_cache_cols,
+                             pipeline_depth=args.pipeline_depth)
     else:
         from repro.core.pc import pc
 
         run = pc(x, alpha=alpha, engine=args.engine, max_level=args.max_level,
-                 corr=args.corr, bucket=not args.no_bucket)
+                 corr=args.corr, bucket=not args.no_bucket,
+                 pipeline_depth=args.pipeline_depth)
     dt = time.perf_counter() - t0
 
     n_edges = int(run.adj.sum()) // 2

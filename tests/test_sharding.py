@@ -157,6 +157,150 @@ def test_shard_c_memory_layout_specs():
     """)
 
 
+# --------------------------------------------- sharded sepset / cache / pipeline
+@pytest.mark.parametrize("ndev,n,dens,seed", [
+    (8, 30, 0.2, 4),      # 30 % 8 != 0 → row-pad path
+    (4, 24, 0.25, 1),     # even split
+])
+def test_shard_sep_cache_pipeline_bit_identical(ndev, n, dens, seed):
+    """ISSUE-4 acceptance: sharded-sepset + hot-column-cached + pipelined
+    pc_distributed is bit-identical (skeleton, sepsets, CPDAG) to the
+    replicated path and the single-device "S" engine, including
+    n % n_dev ≠ 0, for every flag combination."""
+    _run_script(f"""
+        import jax, numpy as np
+        assert len(jax.devices()) == {ndev}, jax.devices()
+        from repro.data.synthetic_dag import sample_gaussian_dag
+        from repro.core.pc import pc
+        from repro.core.distributed import pc_distributed
+
+        x, _ = sample_gaussian_dag(n={n}, m=2500, density={dens}, seed={seed})
+        base = pc(x, engine="S")
+        combos = [
+            dict(shard_sep=True),
+            dict(shard_c=True, shard_sep=True),
+            dict(shard_c=True, shard_sep=True, pipeline_depth=3),
+            dict(shard_c=True, cache_cols=False, pipeline_depth=2),
+            dict(shard_sep=True, pipeline_depth=4),
+        ]
+        for kw in combos:
+            run = pc_distributed(x=x, **kw)
+            assert np.array_equal(base.adj, run.adj), ("skeleton", kw)
+            assert np.array_equal(base.sepsets, run.sepsets), ("sepsets", kw)
+            assert np.array_equal(base.cpdag, run.cpdag), ("cpdag", kw)
+            for st in run.level_stats:
+                assert st["shard_sep"] == kw.get("shard_sep", False)
+                assert st["pipeline_depth"] == kw.get("pipeline_depth", 1)
+        print("OK")
+    """, ndev=ndev)
+
+
+def test_shard_sep_memory_layout_spec():
+    """ISSUE-4 acceptance: with shard_sep the persistent sepset tensor is
+    row-sharded in (n_pad/n_dev, n, depth) blocks — per-device sepset
+    memory O(n²·depth / n_dev), not O(n²·depth) — asserted on the actual
+    addressable shards mid-run; the adjacency symmetrization stays the sole
+    replicated commit (adj remains a full (n, n) per-device bool)."""
+    _run_script("""
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        assert len(jax.devices()) == 8
+        from repro.core import sharding as SH
+        from repro.core import levels as L
+        from repro.core.distributed import run_level_sharded
+        from repro.core.cit import correlation_from_samples, threshold
+        from repro.data.synthetic_dag import sample_gaussian_dag
+
+        n, ndev, depth, m = 33, 8, 8, 2500        # 33 % 8 != 0 → pad path
+        x, _ = sample_gaussian_dag(n=n, m=m, density=0.2, seed=7)
+        c = correlation_from_samples(jnp.asarray(x))
+        mesh = SH.make_mesh(ndev)
+        adj = L.level0(c, threshold(m, 0, 0.01))
+        sep = jnp.full((n, n, depth), -1, jnp.int32)
+        sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
+        sep_sh, pad = SH.shard_rows(sep, mesh, fill=-1)
+        n_pad = n + SH.pad_amount(n, mesh)
+        assert SH.per_device_rows(n, mesh) == n_pad // ndev
+
+        adj2, sep2, st = run_level_sharded(
+            c, adj, sep_sh, 1, threshold(m, 1, 0.01), mesh, shard_sep=True)
+        assert st["shard_sep"] and not st["skipped"]
+        assert sep2.sharding.spec == P(SH.AXIS)
+        for shard in sep2.addressable_shards:
+            # the O(n²·depth / n_dev) block — this device's ONLY persistent
+            # copy of the sepset tensor
+            assert shard.data.shape == (n_pad // ndev, n, depth), shard.data.shape
+        # parity of the single sharded-commit level vs the replicated commit
+        adj_r, sep_r, _ = run_level_sharded(
+            c, adj, sep, 1, threshold(m, 1, 0.01), mesh, shard_sep=False)
+        assert np.array_equal(np.asarray(adj2), np.asarray(adj_r))
+        assert np.array_equal(np.asarray(sep2)[:n], np.asarray(sep_r))
+        print("OK")
+    """)
+
+
+def test_hot_column_cache_parity_and_gather_counts():
+    """ISSUE-4 satellite: cached and uncached sharded-C runs produce
+    identical skeletons/sepsets, and the per-level column-gather collective
+    count strictly decreases under the cache (1 gather at the first level,
+    0 — pure local subsetting — afterwards, vs one per chunk uncached)."""
+    _run_script("""
+        import jax, numpy as np
+        assert len(jax.devices()) == 8
+        from repro.data.synthetic_dag import sample_gaussian_dag
+        from repro.core.distributed import pc_distributed
+
+        x, _ = sample_gaussian_dag(n=33, m=2500, density=0.2, seed=7)
+        # small cell budget → several chunks per level, so the uncached
+        # per-chunk gather count is visibly larger than the cache's
+        cached = pc_distributed(x=x, shard_c=True, cell_budget=2**9)
+        uncached = pc_distributed(x=x, shard_c=True, cache_cols=False,
+                                  cell_budget=2**9)
+        assert np.array_equal(cached.adj, uncached.adj)
+        assert np.array_equal(cached.sepsets, uncached.sepsets)
+        assert np.array_equal(cached.cpdag, uncached.cpdag)
+
+        assert len(cached.level_stats) >= 2, "need multiple levels"
+        for i, (sc, su) in enumerate(zip(cached.level_stats,
+                                         uncached.level_stats)):
+            assert su["col_gathers"] == su["chunks"] >= 1
+            # first level pays the one gather; later levels subset the cache
+            assert sc["col_gathers"] == (1 if i == 0 else 0)
+            assert sc["col_gathers"] < su["col_gathers"] or su["chunks"] == 1
+            assert sc["col_gather_bytes"] <= su["col_gather_bytes"]
+        total_c = sum(s["col_gathers"] for s in cached.level_stats)
+        total_u = sum(s["col_gathers"] for s in uncached.level_stats)
+        assert total_c == 1 < total_u, (total_c, total_u)
+        print("OK")
+    """)
+
+
+def test_run_level_pipelined_parity_single_device():
+    """Single-device split tests/commit dispatch-ahead (levels.chunk_s_tests
+    + chunk_s_commit): bit-identical to the fused sync path at any depth —
+    the stale alive snapshot only over-claims already-removed edges and the
+    chained commit discards those claims. In-process, no mesh needed."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.cit import correlation_from_samples
+    from repro.core.pc import pc_from_corr
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    x, _ = sample_gaussian_dag(n=26, m=2000, density=0.25, seed=9)
+    c = correlation_from_samples(jnp.asarray(x))
+    sync = pc_from_corr(c, 2000, engine="S", cell_budget=2**10)
+    assert any(st["chunks"] > 2 for st in sync.level_stats), "want multi-chunk"
+    for depth in (2, 5):
+        piped = pc_from_corr(c, 2000, engine="S", cell_budget=2**10,
+                             pipeline_depth=depth)
+        np.testing.assert_array_equal(sync.adj, piped.adj)
+        np.testing.assert_array_equal(sync.sepsets, piped.sepsets)
+        np.testing.assert_array_equal(sync.cpdag, piped.cpdag)
+        assert all(st["pipeline_depth"] == depth for st in piped.level_stats
+                   if not st["skipped"] and st["chunks"] > 0)
+
+
 # ------------------------------------------------- sharded batch axis
 def test_shard_batch_parity_including_indivisible_b():
     """ISSUE-3 acceptance: sharded-batch pc_scan_batch / scan_levels_batch /
