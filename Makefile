@@ -2,7 +2,7 @@
 PY ?= python
 
 .PHONY: test verify-kernels verify-batch verify-distributed lint docs-check \
-        bench-pc bench-pc-batch bench-pc-distributed bench-check ci
+        bench-pc bench-pc-batch bench-pc-distributed bench-pc-grid bench-check ci
 
 test:  ## tier-1 suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -31,6 +31,9 @@ bench-pc-batch:  ## many-graph throughput (vmapped scan vs loop) -> BENCH_pc.jso
 
 bench-pc-distributed:  ## pipelined-vs-sync dispatch + column-gather traffic -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_distributed
+
+bench-pc-grid:  ## grid-resident engine: dispatch collapse + wall time -> BENCH_pc.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_grid
 
 bench-check:  ## rerun the quick batch bench and diff it against the committed BENCH_pc.json baseline
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression --run

@@ -13,7 +13,12 @@ itself) and FAILS on structural regressions:
     payload (a bench stopped measuring something it used to);
   * a parity flag ("parity_ok", "levels_parity_ok", "shard_parity_ok", …)
     that was truthy in the baseline — or is new — but is falsy fresh: a
-    fast wrong answer is not a result.
+    fast wrong answer is not a result;
+  * a parity flag the committed baseline section lists that the fresh run
+    NO LONGER REPORTS at all (including a section whose fresh payload is
+    missing entirely): a bench that silently stops parity-checking itself
+    is a FAILURE, not a skip — and any baseline section that carries
+    parity flags is gated even when it isn't in ``--sections``.
 
 Raw timings are NOT gated (shared CI runners make them advisory); the
 fresh JSON is uploaded as a CI artifact instead. Wired as a non-blocking
@@ -35,6 +40,7 @@ ROOT = RESULTS.parent.parent
 _SECTION_BASE = {
     "pc_batch": lambda base: base.get("pc_batch"),
     "pc_distributed": lambda base: base.get("pc_distributed"),
+    "pc_grid": lambda base: base.get("pc_grid"),
     "pc_engines": lambda base: {
         k: base[k] for k in ("backend", "engines", "configs") if k in base
     } or None,
@@ -87,18 +93,48 @@ def parity_regressions(base, fresh, path="") -> list[str]:
     return out
 
 
+def parity_flags(obj, path="") -> list[str]:
+    """Paths of every parity flag anywhere in a (nested) payload."""
+    out = []
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            sub = f"{path}.{k}" if path else str(k)
+            if "parity" in str(k) and not isinstance(v, dict):
+                out.append(sub)
+            else:
+                out.extend(parity_flags(v, sub))
+    return out
+
+
+def dropped_parity_flags(base, fresh) -> list[str]:
+    """Parity flags the committed baseline lists that the fresh payload no
+    longer reports — a bench that stopped parity-checking itself. Reported
+    as an explicit failure (NOT folded into the generic missing-key diff)
+    so the message names what actually regressed: the self-check."""
+    fresh_flags = set(parity_flags(fresh))
+    return [p for p in parity_flags(base) if p not in fresh_flags]
+
+
 def check_section(name: str, baseline: dict) -> list[str]:
     problems = []
+    base = _SECTION_BASE.get(name, lambda b: b.get(name))(baseline)
     fresh_path = RESULTS / f"{name}.json"
     if not fresh_path.exists():
+        flags = parity_flags(base) if base else []
+        if flags:
+            return [f"{name}: no fresh payload at {fresh_path}, but the "
+                    f"committed baseline lists parity flag(s) {flags} — the "
+                    "bench must keep reporting them (run with --run?)"]
         return [f"{name}: no fresh payload at {fresh_path} (run with --run?)"]
     fresh = json.loads(fresh_path.read_text())
-    base = _SECTION_BASE.get(name, lambda b: b.get(name))(baseline)
     if base is None:
         print(f"[bench-check] {name}: no committed baseline section — "
               "structural diff skipped, parity flags still gated")
         base = {}
-    problems += [f"{name}: missing key {p}" for p in missing_keys(base, fresh)]
+    dropped = dropped_parity_flags(base, fresh)
+    problems += [f"{name}: parity flag {p} no longer reported" for p in dropped]
+    problems += [f"{name}: missing key {p}" for p in missing_keys(base, fresh)
+                 if p not in set(dropped)]
     problems += [f"{name}: parity regression at {p}"
                  for p in parity_regressions(base, fresh)]
     return problems
@@ -110,12 +146,25 @@ def main(argv=None) -> int:
                     help="regenerate the fresh payloads first "
                          "(benchmarks.run --only <section>)")
     ap.add_argument("--sections", nargs="*",
-                    default=["pc_batch", "pc_distributed"],
+                    default=["pc_batch", "pc_distributed", "pc_grid"],
                     help="BENCH sections to gate "
-                         "(default: pc_batch pc_distributed)")
+                         "(default: pc_batch pc_distributed pc_grid; any "
+                         "other baseline section carrying parity flags is "
+                         "added automatically — parity self-checks cannot "
+                         "be skipped by narrowing the section list)")
     args = ap.parse_args(argv)
 
     baseline = load_baseline()  # BEFORE --run rewrites the working tree
+    # a committed section with parity flags is ALWAYS gated: silently
+    # un-listing it must not turn the self-check into a skip
+    for name in _SECTION_BASE:
+        if name in args.sections:
+            continue
+        base = _SECTION_BASE[name](baseline)
+        if base and parity_flags(base):
+            print(f"[bench-check] {name}: baseline lists parity flags — "
+                  "gating it although it was not in --sections")
+            args.sections.append(name)
     if args.run:
         from . import run as bench_run
 

@@ -1,14 +1,17 @@
 """Distributed-dispatch benchmark: pipelined vs sync chunk dispatch, and
 hot-column-cache gather traffic (ISSUE 4).
 
-Times ``pc_distributed`` per level on one synthetic workload three ways —
-sync (pipeline_depth=1, cached), pipelined (depth 4, cached), and the
-legacy uncached column traffic — on a mesh over all visible devices (the
-harness runs on 1 CPU device in CI; on real hardware the same code times
-cross-chip collectives). Records per-level wall times, the column-gather
-collective counts/bytes from the level stats, and parity flags
-(``pipeline_parity_ok`` / ``cache_parity_ok``) gated by
-benchmarks/check_regression.py — a fast wrong answer is not a result.
+Times ``pc_distributed`` per level on one synthetic workload four ways —
+sync (pipeline_depth=1, cached), pipelined (depth 4, cached), the legacy
+uncached column traffic, and the grid-resident engine (engine="S-grid" +
+speculative next-level dispatch: the deque collapses to one fused launch
+per level) — on a mesh over all visible devices (the harness runs on 1
+CPU device in CI; on real hardware the same code times cross-chip
+collectives). Records per-level wall times AND host-dispatch counts, the
+column-gather collective counts/bytes from the level stats, and parity
+flags (``pipeline_parity_ok`` / ``cache_parity_ok`` / ``grid_parity_ok``)
+gated by benchmarks/check_regression.py — a fast wrong answer is not a
+result.
 Writes benchmarks/results/pc_distributed.json and merges the
 ``pc_distributed`` section into the repo-root BENCH_pc.json trajectory.
 
@@ -32,7 +35,8 @@ def _one(x, quick, **kw):
     from repro.core.distributed import pc_distributed
 
     kwargs = dict(shard_c=True, cell_budget=CONFIG["cell_budget"],
-                  max_level=2 if quick else None, **kw)
+                  max_level=2 if quick else None)
+    kwargs.update(kw)
     run, total = timed(lambda: pc_distributed(x=x, **kwargs),
                        repeat=1 if quick else 2)
     levels = {k: v for k, v in run.timings_s.items() if k.startswith("level")}
@@ -42,6 +46,8 @@ def _one(x, quick, **kw):
         "levels_run": run.levels_run,
         "edges": int(np.asarray(run.adj).sum()) // 2,
         "chunks": {st["level"]: st["chunks"] for st in run.level_stats},
+        "dispatches": {st["level"]: st.get("dispatches")
+                       for st in run.level_stats},
         "col_gathers": sum(st.get("col_gathers", 0) for st in run.level_stats),
         "col_gather_bytes": sum(st.get("col_gather_bytes", 0)
                                 for st in run.level_stats),
@@ -58,11 +64,19 @@ def run(full: bool = False, quick: bool = False) -> str:
     x, _ = sample_gaussian_dag(n=n, m=CONFIG["m"], density=CONFIG["density"],
                                seed=11)
 
+    from repro.core.levels import DEFAULT_CELL_BUDGET
+
     runs, records = {}, {}
     variants = {
         "sync": dict(pipeline_depth=1),
         "pipelined": dict(pipeline_depth=4),
         "uncached": dict(pipeline_depth=1, cache_cols=False),
+        # the grid-resident engine at its default launch budget: the deque
+        # collapses to one fused sharded launch (dispatches/level = 1), with
+        # level ℓ+1's first chunk dispatched speculatively under the
+        # max-degree sync — the dispatch-count row this bench tracks
+        "grid": dict(engine="S-grid", speculate=True,
+                     cell_budget=DEFAULT_CELL_BUDGET),
     }
     for label, kw in variants.items():
         runs[label], records[label] = _one(x, quick, **kw)
@@ -79,6 +93,10 @@ def run(full: bool = False, quick: bool = False) -> str:
         **records,
         "pipeline_parity_ok": _same(runs["sync"], runs["pipelined"]),
         "cache_parity_ok": _same(runs["sync"], runs["uncached"]),
+        "grid_parity_ok": _same(runs["sync"], runs["grid"]),
+        "grid_max_dispatches_per_level": max(
+            records["grid"]["dispatches"].values() or [0]
+        ),
         "col_gather_bytes_saved": (records["uncached"]["col_gather_bytes"]
                                    - records["sync"]["col_gather_bytes"]),
     }
@@ -96,4 +114,6 @@ def run(full: bool = False, quick: bool = False) -> str:
             + md_table(["variant", "total", "col gathers", "gathered", "per-level"],
                        rows)
             + f"\n\nparity: pipeline={payload['pipeline_parity_ok']} "
-              f"cache={payload['cache_parity_ok']}")
+              f"cache={payload['cache_parity_ok']} "
+              f"grid={payload['grid_parity_ok']} (grid dispatches/level ≤ "
+              f"{payload['grid_max_dispatches_per_level']})")

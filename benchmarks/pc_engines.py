@@ -35,6 +35,8 @@ def _one(x, engine_name, quick):
         "edges": int(run.adj.sum()) // 2,
         "engines_used": {st["level"]: st["engine"]
                          for st in run.level_stats if not st["skipped"]},
+        "dispatches": {st["level"]: st.get("dispatches")
+                       for st in run.level_stats if not st["skipped"]},
         "compile_keys": sorted(
             {str(st["compile_key"]) for st in run.level_stats
              if not st["skipped"] and "compile_key" in st}

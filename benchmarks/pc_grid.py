@@ -1,0 +1,94 @@
+"""Grid-resident engine benchmark: dispatch collapse + wall time (ISSUE 5).
+
+Times the chunked jnp cuPC-S engine against the grid-resident "S-grid"
+engine (kernels/sgrid.py: the combo-rank loop as a sequential Pallas grid
+axis, winners accumulated in VMEM, commit fused into the launch) on one
+synthetic workload. The chunked run uses a small cell budget so its
+per-level host-dispatch count is visibly > 1; the grid run uses its
+default launch budget, which covers each level in ONE dispatch — the
+tracked signal is the per-level ``dispatches`` collapse and the wall-time
+trend, parity-gated by ``grid_parity_ok`` (skeleton, sepsets AND CPDAG
+bit-equality — a fast wrong answer is not a result;
+benchmarks/check_regression.py fails on a flipped flag).
+
+NOTE on reading CPU numbers: off-TPU the grid kernel executes in Pallas
+interpret mode, so its absolute times measure the interpreter, not the
+kernel; the dispatch counts and the parity flag are the CPU-tracked
+signal. On TPU the same harness times the compiled Mosaic launch.
+Writes benchmarks/results/pc_grid.json and merges a "pc_grid" section
+into the repo-root BENCH_pc.json trajectory.
+"""
+from __future__ import annotations
+
+from .common import md_table, merge_bench_trajectory, save, timed
+
+# small chunked budget → several chunks/level for the dispatch comparison
+CONFIG = dict(n=40, m=3000, density=0.15, chunk_budget=2**11)
+QUICK = dict(n=24, m=1500, density=0.15, chunk_budget=2**10)
+
+
+def _one(x, engine, quick, **kw):
+    from repro.core.pc import pc
+
+    run, total = timed(
+        lambda: pc(x, alpha=0.01, engine=engine, orient=True,
+                   max_level=2 if quick else None, **kw),
+        repeat=1,
+    )
+    levels = {k: v for k, v in run.timings_s.items() if k.startswith("level")}
+    return run, {
+        "total_s": total,
+        "per_level_s": levels,
+        "levels_run": run.levels_run,
+        "edges": int(run.adj.sum()) // 2,
+        "dispatches": {st["level"]: st.get("dispatches")
+                       for st in run.level_stats if not st["skipped"]},
+        "chunks": {st["level"]: st["chunks"]
+                   for st in run.level_stats if not st["skipped"]},
+    }
+
+
+def run(full: bool = False, quick: bool = False) -> str:
+    import jax
+    import numpy as np
+
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    cfg = QUICK if quick else CONFIG
+    n = cfg["n"] * (2 if full else 1)
+    x, _ = sample_gaussian_dag(n=n, m=cfg["m"], density=cfg["density"], seed=17)
+
+    runs, records = {}, {}
+    variants = {
+        "chunked-S": ("S", dict(cell_budget=cfg["chunk_budget"])),
+        "S-grid": ("S-grid", {}),
+    }
+    for label, (engine, kw) in variants.items():
+        runs[label], records[label] = _one(x, engine, quick, **kw)
+
+    a, b = runs["chunked-S"], runs["S-grid"]
+    payload = {
+        "backend": jax.default_backend(),
+        "config": {**cfg, "n": n},
+        **records,
+        "grid_parity_ok": bool(
+            np.array_equal(a.adj, b.adj)
+            and np.array_equal(a.sepsets, b.sepsets)
+            and np.array_equal(a.cpdag, b.cpdag)
+        ),
+        "grid_max_dispatches_per_level": max(
+            records["S-grid"]["dispatches"].values() or [0]
+        ),
+    }
+    save("pc_grid", payload)
+    merge_bench_trajectory({"pc_grid": payload})
+
+    rows = []
+    for label in variants:
+        r = records[label]
+        disp = " ".join(f"{lv}:{d}" for lv, d in r["dispatches"].items())
+        lv = " ".join(f"{k[5:]}:{v * 1e3:.0f}ms" for k, v in r["per_level_s"].items())
+        rows.append([label, f"{r['total_s']:.2f}s", r["edges"], disp, lv])
+    return ("### Grid-resident engine (dispatches/level + wall time)\n\n"
+            + md_table(["variant", "total", "edges", "dispatches", "per-level"], rows)
+            + f"\n\nparity: grid={payload['grid_parity_ok']}")

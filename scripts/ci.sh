@@ -30,11 +30,14 @@ echo "[ci] tier-1 remainder (kernels/batch/distributed already ran above)"
 PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed"
 
 # non-blocking: perf numbers on shared machines are advisory; structural
-# regressions (missing BENCH keys, parity-flag flips) are still surfaced.
-# CI_SKIP_BENCH=1 skips the rerun (the workflow's dedicated bench-check
-# job owns it there, uploading the fresh JSON as an artifact).
+# regressions (missing BENCH keys, parity-flag flips, parity flags a bench
+# stopped reporting) are still surfaced. The gated sections include
+# pc_grid (make bench-pc-grid — the grid-resident engine's dispatch
+# collapse + parity flag). CI_SKIP_BENCH=1 skips the rerun (the
+# workflow's dedicated bench-check job owns it there, uploading the fresh
+# JSON as an artifact).
 if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
-  echo "[ci] bench-check (non-blocking)"
+  echo "[ci] bench-check (non-blocking: pc_batch pc_distributed pc_grid)"
   PYTHONPATH=src python -m benchmarks.check_regression --run \
     || echo "[ci] bench-check reported regressions (non-blocking)"
 fi

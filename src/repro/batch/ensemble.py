@@ -17,12 +17,19 @@ device-resident and compiled once:
      separating sets, and an aggregated CPDAG through the existing
      ``core/orient`` machinery (``cpdag_from_membership``).
 
-Memory note: aggregation materialises a (B, n, n, n) membership tensor —
-the same n³ scaling the single-run orientation already has, ×B. For n in
-the thousands, orient per replicate instead (follow-on in ROADMAP.md).
+Memory note: the sepset vote needs a (b, n, n, n) membership view per
+aggregation step. It is CHUNKED over the replicate axis with a byte cap
+(``AGG_MEMBERSHIP_BUDGET``): each step materialises at most
+``vote_chunk = budget // n³`` replicates' membership tensors and folds
+them into the running (n, n, n) vote counts — integer accumulation, so
+the result is bit-identical to the all-at-once vmap while peak memory
+stays flat in B (and bounded in n). ``bootstrap_pc`` at n≈1000 no longer
+OOMs on the aggregation. For n in the thousands-of-thousands, orient per
+replicate instead (follow-on in ROADMAP.md).
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 
@@ -95,23 +102,63 @@ def bootstrap_corr(x, keys, corr: str = "auto"):
     return fn(x, keys)
 
 
-@jax.jit
-def _aggregate(adj_b, sep_b, thresh):
+#: Byte cap on the sepset-vote membership tensor materialised per
+#: aggregation step (bool cells): 2²⁸ B = 256 MB → vote_chunk = 256 MB / n³,
+#: e.g. 256 replicates at n=100 but single-replicate steps from n≈645 up —
+#: which is what keeps ``bootstrap_pc`` from OOMing around n≈1000, where the
+#: unchunked (B, n, n, n) tensor was 32 GB at B=32.
+AGG_MEMBERSHIP_BUDGET = 2**28
+
+
+def _vote_chunk(n_boot: int, n: int, budget: int = AGG_MEMBERSHIP_BUDGET) -> int:
+    """Replicates whose (n, n, n) membership tensors fit the byte budget."""
+    return max(1, min(int(n_boot), budget // max(n * n * n, 1)))
+
+
+@functools.partial(jax.jit, static_argnames=("vote_chunk",))
+def _aggregate(adj_b, sep_b, thresh, *, vote_chunk: int | None = None):
     """Edge frequencies + stability skeleton + voted-sepset CPDAG.
 
     Sepset vote: k ∈ SepSet(i,j) for the aggregate iff a strict majority of
     the replicates that REMOVED (i,j) recorded k as a separator. Replicates
     keeping the edge abstain; level-0 removals vote "empty set" (their
     sentinel slots never match a variable id), which is their true sepset.
+
+    vote_chunk: replicates whose membership tensors are materialised per
+    vote step (None = all of B at once, the legacy layout). Integer vote
+    counts accumulate across chunks, so any chunking is bit-identical to
+    the unchunked vmap (tests/test_batch.py) while peak memory is
+    O(vote_chunk · n³) instead of O(B · n³).
     """
-    n = adj_b.shape[-1]
+    b_total, n = adj_b.shape[0], adj_b.shape[-1]
     eye = jnp.eye(n, dtype=bool)
     freq = jnp.mean(adj_b, axis=0, dtype=jnp.float32)
     skel = (freq >= thresh) & ~eye
 
     removed = ~adj_b & ~eye[None]  # (B,n,n)
-    member_b = jax.vmap(sepset_membership)(sep_b)  # (B,n,n,n)
-    votes = jnp.sum(removed[..., None] & member_b, axis=0)  # (n,n,n)
+    step = b_total if vote_chunk is None else min(vote_chunk, b_total)
+    # scan (not a Python loop) over replicate chunks: program size stays
+    # constant in B/step while the integer accumulation order — ascending
+    # replicate chunks — matches the all-at-once sum bit-for-bit. The tail
+    # chunk is padded with removed=False rows, which contribute zero votes.
+    n_steps = -(-b_total // step)
+    pad = n_steps * step - b_total
+    sep_c = jnp.pad(sep_b, ((0, pad),) + ((0, 0),) * (sep_b.ndim - 1))
+    rem_c = jnp.pad(removed, ((0, pad), (0, 0), (0, 0)))
+
+    def fold(votes, chunk):
+        sep_i, rem_i = chunk
+        member_i = jax.vmap(sepset_membership)(sep_i)
+        return votes + jnp.sum(
+            rem_i[..., None] & member_i, axis=0, dtype=jnp.int32
+        ), None
+
+    votes, _ = jax.lax.scan(
+        fold,
+        jnp.zeros((n, n, n), jnp.int32),
+        (sep_c.reshape((n_steps, step) + sep_c.shape[1:]),
+         rem_c.reshape((n_steps, step) + rem_c.shape[1:])),
+    )
     denom = jnp.sum(removed, axis=0)[..., None]
     member = votes * 2 > denom
     cpdag = cpdag_from_membership(skel, member)
@@ -192,7 +239,11 @@ def bootstrap_pc(
         )
 
     t0 = time.perf_counter()
-    freq, skel, cpdag = _aggregate(res.adj, res.sepsets, float(stability_threshold))
+    n = int(x.shape[1])
+    freq, skel, cpdag = _aggregate(
+        res.adj, res.sepsets, float(stability_threshold),
+        vote_chunk=_vote_chunk(n_boot, n),
+    )
     jax.block_until_ready(cpdag)
     timings["aggregate"] = time.perf_counter() - t0
     timings["total"] = time.perf_counter() - t_start

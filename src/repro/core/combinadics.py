@@ -31,6 +31,14 @@ def binom_table(n_max: int, l_max: int = MAX_LEVEL) -> np.ndarray:
     unranking code; sizes are tiny (n_max ≤ graph max-degree).
     Values are clipped into int64 range; PC levels with C(n', ℓ) overflowing
     int64 are far beyond any feasible compute budget anyway.
+
+    CAUTION: when jax_enable_x64 is off the device-side rank dtype is
+    int32 and the jitted consumers (levels._jtable) clip this table to the
+    int32 capacity — a clipped entry makes distinct ranks compare equal,
+    silently ALIASING conditioning sets instead of failing. The planner is
+    the guard: levels.plan_level raises (and caps n_chunk) whenever a
+    level's rank range could touch clipped territory, so the clipped
+    values below are never reachable from the engines.
     """
     t = np.zeros((n_max + 1, l_max + 2), dtype=np.int64)
     t[:, 0] = 1
@@ -55,6 +63,9 @@ def unrank_combination(t: jax.Array, n: int, ell: int) -> jax.Array:
 
     t may be any integer array; output has shape t.shape + (ell,).
     Out-of-range ranks (t ≥ C(n,ℓ)) produce clamped garbage — callers mask.
+    Ranks must be below the dtype capacity the table is clipped to
+    (int32//4 without x64) — levels.plan_level enforces this upstream; see
+    the :func:`binom_table` caution.
 
     Single forward pass (paper's Alg. 6 re-rolled): walking candidates
     k = 0..n-1, element k is included iff the count of combinations that

@@ -20,6 +20,15 @@ adjacency, and a snapshot that lags the commits produces extra claims only
 on already-removed edges, which the chained commit discards — results are
 bit-identical for any depth (tests/test_sharding.py).
 
+With ``engine="S-grid"`` the chunk cadence disappears entirely: the rank
+loop runs inside the Pallas grid (kernels/sgrid.py) and each launch is ONE
+fused tests+commit shard_map (:func:`_grid_fused_fn`) — the pipelined
+deque collapses to a single sharded launch, normally one per level. The
+level-end max-degree sync is then the only host round-trip, and
+``speculate=True`` hides it by dispatching level ℓ+1's first chunk under
+level ℓ's compaction bound while the sync resolves
+(:func:`_speculative_dispatch`).
+
 State layout — every combination is bit-identical (tests/test_sharding.py):
 
   * C replicated (default): every device holds the full (n,n) C. Fine to
@@ -258,6 +267,124 @@ def _tests_sharded_c_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int, k: int,
     return jax.jit(_tests)
 
 
+def _grid_commit(adj, sep, compact_full, t_win, rem, s_win, *, ell, shard_sep):
+    """Shared commit tail of the grid shard_map bodies: apply gathered
+    full-width winner arrays to the chained (adj, sep) — the replicated
+    commit, or the shard-local sepset commit when sep is row-sharded.
+    Mirrors :func:`_commit_fn`'s body exactly (same tie-break inputs)."""
+    n = adj.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    if not shard_sep:
+        return L._global_commit(
+            adj, sep, compact_full, rows, t_win[:n], rem[:n], s_win[:n], ell
+        )
+    row_ids = _shard_rows_ids(sep.shape[0])
+    _, key_mat = L._commit_key_mat(compact_full, rows, t_win[:n], rem[:n], n)
+    sep_new = L.commit_sep_rows(
+        sep, row_ids, adj, key_mat, compact_full, rem[:n], s_win[:n], ell
+    )
+    return L.commit_adj(adj, key_mat), sep_new
+
+
+@functools.lru_cache(maxsize=64)
+def _grid_tests_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int,
+                   shard_c: bool, k: int, cached: bool):
+    """Tests-only shard_map for the GRID-RESIDENT engine: one kernel launch
+    sweeps every rank of the chunk on this shard's rows (rank axis in the
+    Pallas grid — kernels/sgrid.py) and returns gathered full-width winner
+    arrays. Used by the speculative dispatch of level ℓ+1's first chunk;
+    the normal grid path fuses the commit too (:func:`_grid_fused_fn`)."""
+    from repro.kernels.ops import chunk_s_grid_tests, chunk_s_grid_tests_cols
+
+    if shard_c:
+        in_specs = (P(AXIS), P(), P(), P(AXIS), P(AXIS), P(), P(), P())
+
+        @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                           out_specs=(P(), P(), P()), check_rep=False)
+        def _tests(c_rows, c_cols, adj, compact_l, counts_l, col_pos, t0, tau):
+            rows_l = _shard_rows_ids(compact_l.shape[0])
+            return _gather_winners(*chunk_s_grid_tests_cols(
+                c_rows, c_cols, col_pos, adj, compact_l, counts_l, rows_l,
+                t0, tau, ell=ell, n_chunk=n_chunk, n_max=n_max,
+            ))
+
+    else:
+
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=(P(), P(), P(AXIS), P(AXIS), P(), P()),
+                           out_specs=(P(), P(), P()), check_rep=False)
+        def _tests(c, adj, compact_l, counts_l, t0, tau):
+            rows_l = _shard_rows_ids(compact_l.shape[0])
+            return _gather_winners(*chunk_s_grid_tests(
+                c, adj, compact_l, counts_l, rows_l, t0, tau,
+                ell=ell, n_chunk=n_chunk, n_max=n_max,
+            ))
+
+    return jax.jit(_tests)
+
+
+@functools.lru_cache(maxsize=64)
+def _grid_fused_fn(mesh: Mesh, ell: int, n_chunk: int, n_max: int,
+                   shard_sep: bool, shard_c: bool, k: int, cached: bool):
+    """The grid engine's whole chunk as ONE dispatch: grid-resident CI sweep
+    of every rank on this shard's rows → winner all_gather → commit, fused
+    in a single jitted shard_map. With the default launch budget one call
+    covers one whole level — the pipelined dispatcher's deque collapses to
+    this single sharded launch (host dispatches per level: 1)."""
+    from repro.kernels.ops import chunk_s_grid_tests, chunk_s_grid_tests_cols
+
+    sep_spec = P(AXIS) if shard_sep else P()
+
+    if shard_c and cached:
+        in_specs = (P(AXIS), P(), P(), sep_spec, P(AXIS), P(AXIS), P(), P(),
+                    P(), P())
+
+        @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                           out_specs=(P(), sep_spec), check_rep=False)
+        def _fused(c_rows, c_cols, adj, sep, compact_l, counts_l, col_pos,
+                   compact_full, t0, tau):
+            rows_l = _shard_rows_ids(compact_l.shape[0])
+            winners = _gather_winners(*chunk_s_grid_tests_cols(
+                c_rows, c_cols, col_pos, adj, compact_l, counts_l, rows_l,
+                t0, tau, ell=ell, n_chunk=n_chunk, n_max=n_max,
+            ))
+            return _grid_commit(adj, sep, compact_full, *winners,
+                                ell=ell, shard_sep=shard_sep)
+
+    elif shard_c:
+        in_specs = (P(AXIS), P(), sep_spec, P(AXIS), P(AXIS), P(), P(), P(),
+                    P(), P())
+
+        @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                           out_specs=(P(), sep_spec), check_rep=False)
+        def _fused(c_rows, adj, sep, compact_l, counts_l, cols, col_pos,
+                   compact_full, t0, tau):
+            rows_l = _shard_rows_ids(compact_l.shape[0])
+            c_cols = jax.lax.all_gather(c_rows[:, cols], AXIS, tiled=True)
+            winners = _gather_winners(*chunk_s_grid_tests_cols(
+                c_rows, c_cols, col_pos, adj, compact_l, counts_l, rows_l,
+                t0, tau, ell=ell, n_chunk=n_chunk, n_max=n_max,
+            ))
+            return _grid_commit(adj, sep, compact_full, *winners,
+                                ell=ell, shard_sep=shard_sep)
+
+    else:
+        in_specs = (P(), P(), sep_spec, P(AXIS), P(AXIS), P(), P(), P())
+
+        @functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                           out_specs=(P(), sep_spec), check_rep=False)
+        def _fused(c, adj, sep, compact_l, counts_l, compact_full, t0, tau):
+            rows_l = _shard_rows_ids(compact_l.shape[0])
+            winners = _gather_winners(*chunk_s_grid_tests(
+                c, adj, compact_l, counts_l, rows_l, t0, tau,
+                ell=ell, n_chunk=n_chunk, n_max=n_max,
+            ))
+            return _grid_commit(adj, sep, compact_full, *winners,
+                                ell=ell, shard_sep=shard_sep)
+
+    return jax.jit(_fused)
+
+
 @functools.lru_cache(maxsize=64)
 def _commit_fn(mesh: Mesh, ell: int, shard_sep: bool):
     """Commit one chunk's gathered winner arrays to the chained (adj, sep).
@@ -299,7 +426,8 @@ def _commit_fn(mesh: Mesh, ell: int, shard_sep: bool):
 def run_level_sharded(c, adj, sep, ell, tau, mesh,
                       cell_budget=L.DEFAULT_CELL_BUDGET, bucket=True,
                       shard_c: bool = False, shard_sep: bool = False,
-                      pipeline_depth: int = 1, col_cache: ColumnCache | None = None):
+                      pipeline_depth: int = 1, col_cache: ColumnCache | None = None,
+                      engine: str = "S", spec: dict | None = None):
     """Distributed analogue of levels.run_level (cuPC-S engine), on the same
     chunk planner: bucketed n′/chunk shapes keep one compiled shard_map
     program live across level boundaries per mesh too.
@@ -314,13 +442,27 @@ def run_level_sharded(c, adj, sep, ell, tau, mesh,
     results for any depth (see levels.chunk_s_tests).
     col_cache: the run's :class:`ColumnCache` (shard_c only); None gathers
     columns inside every chunk body (the pre-cache layout).
+    engine: "S" (chunked tests/commit shard_maps, pipelined via the deque)
+    or "S-grid" (the grid-resident kernel: every rank of a launch sweeps
+    inside ONE fused tests+commit shard_map — the deque collapses to a
+    single sharded launch, normally one per level).
+    spec: a speculative first chunk from :func:`_speculative_dispatch`
+    (grid engine only) — its winner arrays were computed under the
+    PREVIOUS level's compaction bound before the max-degree sync resolved;
+    consumed here by slicing them to this level's (narrower or equal)
+    width, which is exact because slots past a row's degree can never
+    hold claims. Stats report ``speculative=True`` on a hit.
     """
     n = adj.shape[0]
     n_dev = S.mesh_size(mesh)
+    grid = str(engine).upper() == "S-GRID"
+    if grid and cell_budget == L.DEFAULT_CELL_BUDGET:
+        cell_budget = L.GRID_CELL_BUDGET  # see levels.GRID_CELL_BUDGET
     counts_host = np.asarray(jax.device_get(jnp.sum(adj, axis=1)))
     npr = int(counts_host.max(initial=0))
     if npr - 1 < ell:
-        return adj, sep, {"skipped": True, "chunks": 0, "npr": npr}
+        return adj, sep, {"skipped": True, "chunks": 0, "dispatches": 0,
+                          "npr": npr}
 
     # pad rows to a device multiple; padded rows have counts=0 → fully masked
     pad = S.pad_amount(n, mesh)
@@ -336,7 +478,8 @@ def run_level_sharded(c, adj, sep, ell, tau, mesh,
     depth = max(1, int(pipeline_depth))
     stats = {"skipped": False, "npr": npr, "npr_bucket": npr_b,
              "n_chunk": n_chunk, "total_sets": total, "shard_c": shard_c,
-             "shard_sep": shard_sep, "pipeline_depth": depth,
+             "shard_sep": shard_sep, "pipeline_depth": 1 if grid else depth,
+             "engine": "S-grid" if grid else "S",
              "compile_key": (ell, n_chunk, npr_b)}
     if shard_c:
         if col_cache is not None:
@@ -359,31 +502,114 @@ def run_level_sharded(c, adj, sep, ell, tau, mesh,
         stats["k_cols"] = k
         stats["c_sharding"] = str(c.sharding)
     else:
+        k = 0
         tests = _tests_fn(mesh, ell, n_chunk, npr_b)
         pre_args = (c,)
         mid_args = ()
-    commit = _commit_fn(mesh, ell, shard_sep)
 
     chunks = 0
-    pending: deque = deque()
-    for t0 in range(0, total, n_chunk):
-        pending.append(tests(
-            *pre_args, adj, compact, counts, *mid_args,
-            jnp.asarray(t0, L._rank_dtype()), jnp.float32(tau),
-        ))
-        chunks += 1
-        if len(pending) >= depth:
+    dispatches = 0
+    if grid:
+        # the grid-resident engine: every launch is ONE fused tests+commit
+        # shard_map (the rank loop lives in the kernel grid) — no deque, no
+        # split dispatch; normally a single launch covers the whole level
+        cached = col_cache is not None
+        fused = _grid_fused_fn(mesh, ell, n_chunk, npr_b, shard_sep,
+                               shard_c, k, cached)
+        commit = _commit_fn(mesh, ell, shard_sep)
+        t_next = 0
+        if (spec is not None and spec.get("ell") == ell
+                and spec["npr_b"] >= npr_b):
+            # the speculative first chunk (dispatched under the previous
+            # compaction, overlapping the max-degree sync): slice its
+            # winner arrays to this level's width and commit — slots past
+            # a row's degree are alive-masked, so the slice drops nothing
+            t_win, rem, s_win = spec["winners"]
+            adj, sep = commit(adj, sep, compact_rep, t_win[:, :npr_b],
+                              rem[:, :npr_b], s_win[:, :npr_b])
+            chunks += 1
+            dispatches += 1  # the commit; the tests ran under the sync
+            t_next = spec["n_chunk"]
+            stats["speculative"] = True
+        for t0 in range(t_next, total, n_chunk):
+            adj, sep = fused(
+                *pre_args, adj, sep, compact, counts, *mid_args, compact_rep,
+                jnp.asarray(t0, L._rank_dtype()), jnp.float32(tau),
+            )
+            chunks += 1
+            dispatches += 1
+    else:
+        commit = _commit_fn(mesh, ell, shard_sep)
+        pending: deque = deque()
+        for t0 in range(0, total, n_chunk):
+            pending.append(tests(
+                *pre_args, adj, compact, counts, *mid_args,
+                jnp.asarray(t0, L._rank_dtype()), jnp.float32(tau),
+            ))
+            chunks += 1
+            if len(pending) >= depth:
+                adj, sep = commit(adj, sep, compact_rep, *pending.popleft())
+        while pending:
             adj, sep = commit(adj, sep, compact_rep, *pending.popleft())
-    while pending:
-        adj, sep = commit(adj, sep, compact_rep, *pending.popleft())
+        dispatches = 2 * chunks  # one tests + one commit program per chunk
 
     stats["chunks"] = chunks
+    stats["dispatches"] = dispatches
     if shard_c:
         if col_cache is None:
             stats["col_gathers"] = chunks  # one collective per chunk body
         # bytes the column collective(s) shipped this level (fp32)
         stats["col_gather_bytes"] = stats["col_gathers"] * (n + pad) * k * 4
     return adj, sep, stats
+
+
+def _speculative_dispatch(c, adj, ell, tau, mesh, prev_npr_b, n,
+                          shard_c, col_cache, cell_budget, bucket):
+    """Dispatch level ``ell``'s first grid chunk BEFORE the max-degree host
+    sync resolves, using the PREVIOUS level's compaction bound as the width
+    guess (degrees only shrink, so it always bounds the fresh width).
+
+    Everything here is host-async: the device-side re-compaction
+    (compact_rows is pure jnp), the shard placement, and the grid tests
+    shard_map are all enqueued without reading a device value — so the
+    subsequent ``device_get(max_deg)`` level barrier overlaps useful work
+    instead of idling the mesh. ``run_level_sharded`` consumes the result
+    when the level actually runs (slicing the winner arrays to the fresh
+    width — exact, see its docstring) or drops it when the run stops.
+
+    With ``shard_c`` the tests read the run's cached hot-column block
+    (whose values equal any fresh gather — C is constant and the candidate
+    set only shrinks); an unpopulated cache (or cache_cols=False) skips
+    speculation. Returns the spec dict or None.
+    """
+    n_dev = S.mesh_size(mesh)
+    pad = S.pad_amount(n, mesh)
+    if cell_budget == L.DEFAULT_CELL_BUDGET:
+        cell_budget = L.GRID_CELL_BUDGET  # mirror run_level_sharded's upgrade
+    try:
+        npr_b, n_chunk, _ = L.plan_level(
+            prev_npr_b, ell, max((n + pad) // n_dev, 1), engine="S",
+            cell_budget=cell_budget, bucket=bucket, n_cols=n,
+        )
+    except ValueError:  # rank capacity — let the real level raise (or stop)
+        return None
+    compact_full, counts_full = compact_rows(adj, n_prime=npr_b)
+    compact_sh, _ = S.shard_rows(compact_full, mesh, fill=-1)
+    counts_sh, _ = S.shard_rows(counts_full, mesh)
+    t0 = jnp.asarray(0, L._rank_dtype())
+    tau = jnp.float32(tau)
+    if shard_c:
+        if col_cache is None or col_cache.c_cols is None:
+            return None
+        k = int(col_cache.c_cols.shape[1])
+        tests = _grid_tests_fn(mesh, ell, n_chunk, npr_b, True, k, True)
+        winners = tests(c, col_cache.c_cols, adj, compact_sh, counts_sh,
+                        S.replicate(jnp.asarray(col_cache.col_pos), mesh),
+                        t0, tau)
+    else:
+        tests = _grid_tests_fn(mesh, ell, n_chunk, npr_b, False, 0, False)
+        winners = tests(c, adj, compact_sh, counts_sh, t0, tau)
+    return {"ell": ell, "npr_b": npr_b, "n_chunk": n_chunk, "winners": winners}
 
 
 def pc_distributed(
@@ -402,6 +628,8 @@ def pc_distributed(
     shard_sep: bool = False,
     cache_cols: bool = True,
     pipeline_depth: int = 1,
+    engine: str = "S",
+    speculate: bool = False,
 ):
     """Distributed PC-stable. Provide samples x (m,n) or corr matrix c + m.
 
@@ -422,6 +650,14 @@ def pc_distributed(
     pipeline_depth ≥ 2 keeps that many chunks' tests in flight per level —
     chunk t+1's gather/unrank overlaps chunk t's commit (double-buffered
     dispatch at depth 2); the level barrier is the only host sync.
+    engine="S-grid" runs every level's rank sweep grid-resident
+    (kernels/sgrid.py): one fused tests+commit shard_map per launch —
+    normally ONE host dispatch per level — instead of the chunked deque
+    (pipeline_depth is then moot and ignored).
+    speculate=True (grid engine only) dispatches level ℓ+1's first chunk
+    under level ℓ's compaction bound BEFORE the max-degree sync resolves,
+    so the one remaining host round-trip per level overlaps device work
+    (:func:`_speculative_dispatch`) — bit-identical results either way.
 
     checkpoint_cb(level, adj, sep): optional per-level snapshot hook — the
     fault-tolerance unit for multi-pod runs (levels are idempotent). With
@@ -470,24 +706,44 @@ def pc_distributed(
         sep = S.shard_rows(sep, mesh, fill=-1)[0]
     col_cache = ColumnCache() if (shard_c and cache_cols) else None
 
+    grid = str(engine).upper() == "S-GRID"
+    if str(engine).upper() not in ("S", "S-GRID"):
+        raise ValueError(
+            f"pc_distributed engine must be 'S' or 'S-grid', got {engine!r}"
+        )
+    if speculate and not grid:
+        raise ValueError("speculate=True requires engine='S-grid'")
+
     timings: dict[str, float] = {}
     stats = []
     ell = first_level
+    spec = None
+    prev_npr_b = None
     while ell <= lmax:
+        if speculate and prev_npr_b is not None:
+            # overlap the level barrier: level ℓ's first grid chunk goes out
+            # under level ℓ-1's compaction bound before max_deg resolves
+            spec = _speculative_dispatch(
+                c, adj, ell, threshold(m, ell, alpha), mesh, prev_npr_b, n,
+                shard_c, col_cache, cell_budget, bucket,
+            )
         max_deg = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
         if max_deg - 1 < ell:
-            break
+            break  # a pending spec chunk is simply dropped (never committed)
         t_lv = time.perf_counter()
         adj, sep, st = run_level_sharded(c, adj, sep, ell, threshold(m, ell, alpha),
                                          mesh, cell_budget=cell_budget,
                                          bucket=bucket, shard_c=shard_c,
                                          shard_sep=shard_sep,
                                          pipeline_depth=pipeline_depth,
-                                         col_cache=col_cache)
+                                         col_cache=col_cache,
+                                         engine=engine, spec=spec)
+        spec = None
         jax.block_until_ready(adj)
         jax.block_until_ready(sep)
         timings[f"level{ell}"] = time.perf_counter() - t_lv
         stats.append({"level": ell, **st})
+        prev_npr_b = st.get("npr_bucket") if not st.get("skipped") else None
         if checkpoint_cb is not None:
             checkpoint_cb(ell, adj, sep[:n] if shard_sep else sep)
         ell += 1

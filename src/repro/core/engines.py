@@ -11,6 +11,14 @@ Names (case-insensitive; ``pc()`` / ``pc_from_corr()`` accept a name or a
   "S-kernel"  cuPC-S with the per-set Cholesky inverse + CI sweep fused in
               the Pallas kernels (kernels/ops.chunk_s_kernel → cholinv +
               cisweep); gathers stay in XLA. Any level ℓ ≥ 1.
+  "S-grid"    grid-resident cuPC-S (kernels/ops.chunk_s_grid → sgrid): the
+              combo-rank loop is a sequential axis of the Pallas grid, the
+              winner arrays accumulate in the revisited VMEM output blocks
+              and the commit is fused into the same jitted launch — ONE
+              host dispatch per level (levels.plan_level_grid statics) on
+              every tracked workload, vs ceil(total/n_chunk) for the
+              chunked engines. Any level ℓ ≥ 1; bit-identical winners to
+              "S" (asserted by tests/test_engines.py).
   "L1-dense"  the fused dense ℓ=1 cube kernel (kernels/ops.level1_dense)
               plus levels.commit_dense_l1 — erases the level that is
               49–83 % of runtime (paper Fig. 6). ℓ=1 only; resolves to
@@ -47,7 +55,7 @@ import jax.numpy as jnp
 from . import levels as L
 from .levels import DEFAULT_CELL_BUDGET  # noqa: F401  (re-export; derivation there)
 
-ENGINE_NAMES = ("S", "E", "S-kernel", "L1-dense", "auto", "scan")
+ENGINE_NAMES = ("S", "E", "S-kernel", "S-grid", "L1-dense", "auto", "scan")
 #: Engines that take over the ENTIRE run (level loop included) instead of a
 #: single level; pc_from_corr dispatches them before its level loop.
 WHOLE_RUN_ENGINES = ("scan",)
@@ -119,6 +127,21 @@ def run_level(
         )
         st["engine"] = "S-kernel"
         return adj, sep, st
+    if name == "S-grid":
+        from repro.kernels.ops import chunk_s_grid
+
+        # the grid engine streams the rank axis through the kernel grid, so
+        # a launch's HBM cost is the gather alone — raise the default
+        # per-dispatch budget to the per-launch one (an explicit budget is
+        # respected, e.g. to force multi-launch levels in tests)
+        budget = (L.GRID_CELL_BUDGET if cell_budget == DEFAULT_CELL_BUDGET
+                  else cell_budget)
+        adj, sep, st = L.run_level(
+            c, adj, sep, ell, tau, engine="S", cell_budget=budget,
+            chunk_fn_s=chunk_fn_s or chunk_s_grid, bucket=bucket,
+        )
+        st["engine"] = "S-grid"
+        return adj, sep, st
     return L.run_level(
         c, adj, sep, ell, tau, engine=name, cell_budget=cell_budget,
         chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e, bucket=bucket,
@@ -161,10 +184,12 @@ def _run_level_dense_l1(c, adj, sep, tau):
 
     npr = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
     if npr - 1 < 1:
-        return adj, sep, {"skipped": True, "chunks": 0, "npr": npr, "engine": "L1-dense"}
+        return adj, sep, {"skipped": True, "chunks": 0, "dispatches": 0,
+                          "npr": npr, "engine": "L1-dense"}
     _removed, kwin = level1_dense(c, adj, tau)
     adj_new, sep_new = L.commit_dense_l1(adj, sep, kwin)
     return adj_new, sep_new, {
-        "skipped": False, "chunks": 1, "npr": npr, "npr_bucket": npr,
-        "total_sets": npr, "engine": "L1-dense", "dense": True,
+        "skipped": False, "chunks": 1, "dispatches": 1, "npr": npr,
+        "npr_bucket": npr, "total_sets": npr, "engine": "L1-dense",
+        "dense": True,
     }

@@ -35,6 +35,7 @@ module owns the jnp engines, the chunk planner and the commit layer):
   S          chunk_s                 chunk_s              any (XLA einsums)
   E          chunk_e                 chunk_e              any (XLA einsums)
   S-kernel   ops.chunk_s_kernel      ops.chunk_s_kernel   Pallas (interp off-TPU)
+  S-grid     ops.chunk_s_grid        ops.chunk_s_grid     Pallas (interp off-TPU)
   L1-dense   ops.level1_dense        (resolves to S)      Pallas (interp off-TPU)
   auto       L1-dense                S-kernel             Pallas (interp off-TPU)
 
@@ -128,9 +129,22 @@ def _inv_spd(m, jitter=1e-8):
     every PC run's ℓ≥2 work — is solved in closed form (adjugate / det):
     one fused elementwise op over the batch instead of 10⁵s of tiny LAPACK
     factorisations, which dominate batched sweeps on CPU. Larger blocks go
-    through LAPACK as before."""
+    through LAPACK as before.
+
+    The jitter is scaled by each block's mean diagonal magnitude, so the
+    regularisation is RELATIVE to the block rather than an absolute 1e-8:
+    a fixed jitter under- or over-regularises blocks whose scale differs
+    from 1 and biases the partial correlations of near-singular S-blocks.
+    For correlation inputs the diagonal is exactly 1, so the scale factor
+    is 1 and results are unchanged bit-for-bit; an ill-conditioned
+    correlation fixture is parity-tested against stable_ref in
+    tests/test_core_pc.py. The Pallas kernels (cholinv, sgrid) apply the
+    same diagonal-scaled rule."""
     eye = jnp.eye(m.shape[-1], dtype=m.dtype)
-    m = m + jitter * eye
+    diag_scale = jnp.mean(
+        jnp.abs(jnp.diagonal(m, axis1=-2, axis2=-1)), axis=-1
+    )[..., None, None]
+    m = m + (jitter * diag_scale) * eye
     if m.shape[-1] == 2:
         a, b = m[..., 0, 0], m[..., 0, 1]
         c, d = m[..., 1, 0], m[..., 1, 1]
@@ -626,6 +640,36 @@ def commit_dense_l1(adj, sep, kwin):
 #: for the jnp and kernel engines alike.
 DEFAULT_CELL_BUDGET = 2**24
 
+#: Per-LAUNCH cell budget of the grid-resident engine ("S-grid"): the rank
+#: axis streams through the kernel grid, so a launch materialises only the
+#: XLA gather (no (n·T, n′) sep_found tensor, no SoA copies, no per-chunk
+#: winner round-trips) — 4× the chunked per-dispatch budget covers a whole
+#: level in one host dispatch for every tracked workload while staying
+#: within the same HBM envelope the chunked engines used to spend on
+#: gather + intermediates.
+GRID_CELL_BUDGET = 2**26
+
+
+def _check_rank_capacity(total: int, n_chunk: int, ell: int):
+    """Satellite guard for the int32-rank regime: combo ranks are carried in
+    :func:`_rank_dtype` and committed as keys ``rank·2 + bit``, so every
+    rank a chunk can touch (≤ total + n_chunk) must stay below
+    :func:`_imax`. Without this guard, C(n′, ℓ) past the dtype capacity
+    silently ALIASES ranks through the clipped binomial table
+    (core/combinadics.py) instead of failing. Returns a (possibly reduced)
+    n_chunk; raises when the level itself is unrepresentable."""
+    imax = _imax()
+    if total > imax:
+        raise ValueError(
+            f"level with {total} conditioning sets (ell={ell}) exceeds the "
+            f"rank capacity {imax} of {_rank_dtype().dtype.name} ranks; "
+            "enable jax_enable_x64 (the pc_run launcher does) for int64 "
+            "ranks, or cap max_level"
+        )
+    while n_chunk > 1 and total + n_chunk > imax:
+        n_chunk //= 2
+    return n_chunk
+
 
 def _pow2_ceil(x: int) -> int:
     return 1 if x <= 1 else 1 << (x - 1).bit_length()
@@ -681,7 +725,7 @@ def plan_level(
         n_chunk = min(_pow2_ceil(total), _pow2_floor(budget_chunk))
     else:
         n_chunk = max(1, min(total, budget_chunk))
-    return npr_b, n_chunk, total
+    return npr_b, _check_rank_capacity(total, n_chunk, ell), total
 
 
 # --------------------------------------------------------------------------
@@ -705,7 +749,9 @@ def run_level(
 
     engine ∈ {"S", "E"} selects the jnp worklist shape; kernel-backed chunk
     functions slot in via chunk_fn_s/chunk_fn_e (see core/engines.py for the
-    public registry). Returns (adj, sep, stats-dict).
+    public registry). Returns (adj, sep, stats-dict); stats["dispatches"]
+    counts the host-dispatched device programs the level issued (fused
+    chunks count 1 each, split tests+commit pairs count 2).
 
     pipeline_depth ≥ 2 splits each chunk into tests + commit
     (:func:`chunk_s_tests` / :func:`chunk_s_commit`) and keeps up to that
@@ -725,7 +771,8 @@ def run_level(
     counts_host = np.asarray(jax.device_get(jnp.sum(adj, axis=1)))
     npr = int(counts_host.max(initial=0))
     if npr - 1 < ell:
-        return adj, sep, {"skipped": True, "chunks": 0, "npr": npr, "engine": engine}
+        return adj, sep, {"skipped": True, "chunks": 0, "dispatches": 0,
+                          "npr": npr, "engine": engine}
     npr_b, n_chunk, total = plan_level(
         npr, ell, n, engine=engine, cell_budget=cell_budget, bucket=bucket, n_cols=n
     )
@@ -759,4 +806,5 @@ def run_level(
         "n_chunk": n_chunk, "total_sets": total, "engine": engine,
         "compile_key": (ell, n_chunk, npr_b),
         "pipeline_depth": depth if pipelined else 1,
+        "dispatches": chunks * (2 if pipelined else 1),
     }

@@ -21,8 +21,14 @@ from .backend import resolve_interpret
 
 
 def _cholinv_kernel(m2_ref, ci_ref, g_ref, u_ref, var_ref, *, ell: int, jitter: float):
-    # load a[i][j] as (bs, 128) lane tiles
-    a = [[m2_ref[i, j] + (jitter if i == j else 0.0) for j in range(ell)] for i in range(ell)]
+    # load a[i][j] as (bs, 128) lane tiles; jitter scaled by the mean
+    # diagonal (relative Tikhonov — levels._inv_spd applies the same rule;
+    # exactly 1 for correlation blocks, so parity is untouched)
+    scale = m2_ref[0, 0]
+    for i in range(1, ell):
+        scale = scale + m2_ref[i, i]
+    jit_eff = jitter * (scale * (1.0 / ell))
+    a = [[m2_ref[i, j] + (jit_eff if i == j else 0.0) for j in range(ell)] for i in range(ell)]
     eps = 1e-20
 
     # Cholesky: a = L Lᵀ (unrolled; ℓ ≤ MAX_LEVEL)

@@ -14,6 +14,7 @@ core/engines.py, jnp engines in core/levels.py):
   S          levels.chunk_s               levels.chunk_s       XLA einsums
   E          levels.chunk_e               levels.chunk_e       XLA einsums
   S-kernel   ops.chunk_s_kernel           ops.chunk_s_kernel   cholinv+cisweep
+  S-grid     ops.chunk_s_grid             ops.chunk_s_grid     sgrid (rank grid)
   L1-dense   ops.level1_dense             (resolves to S)      level1 cube
   auto       L1-dense                     S-kernel             fused production
 
@@ -34,6 +35,7 @@ from . import cisweep as _cisweep
 from . import corr as _corr
 from . import level0 as _level0
 from . import level1 as _level1
+from . import sgrid as _sgrid
 from .backend import resolve_interpret as _interp
 
 LANE = 128
@@ -131,6 +133,109 @@ def ci_shared(
     )  # (P,Bs,L) uint8
     out = indep.reshape(p_pad, b_pad).T[:b, :p]
     return out.astype(bool)
+
+
+# ----------------------------- grid-resident cuPC-S (rank axis in the grid)
+def ci_shared_grid(
+    m2: jax.Array, ci_s: jax.Array, cj_s: jax.Array, cij: jax.Array,
+    mask: jax.Array, s_ids: jax.Array, tau, *, ell: int, interpret=None,
+):
+    """Grid-resident cuPC-S sweep over a gathered chunk in the natural
+    batch-first layout: m2 (n_l,T,ℓ,ℓ), ci_s (n_l,T,ℓ), cj_s (n_l,T,n′,ℓ),
+    cij/mask (n_l,T,n′), s_ids (n_l,T,ℓ).
+
+    One ``pallas_call`` covers ALL T ranks (the rank axis is a sequential
+    grid dim; winner arrays accumulate in the revisited output blocks — see
+    kernels/sgrid.py), so the caller needs no per-chunk host loop and no
+    (n_l,T,n′) ``sep_found`` tensor ever exists in HBM.
+
+    Returns (t_loc (n_l,n′) int32 — min separating launch-local rank,
+    ``sgrid.SENTINEL`` when none; s_win (n_l,n′,ℓ) int32 — the set at that
+    rank). Identical winners to ``levels._winners`` over the same chunk.
+    """
+    n_l, t_len, npr = mask.shape
+    interpret = _interp(interpret)
+    tb = 8
+    n_pad = _ceil_mult(max(n_l, LANE), LANE)
+    t_pad = _ceil_mult(max(t_len, tb), tb)
+
+    def lane_layout(x, dtype):
+        # (n_l, T, ...) → (..., T_pad, n_pad): rows on lanes, ranks on sublanes
+        widths = [(0, n_pad - n_l), (0, t_pad - t_len)] + [(0, 0)] * (x.ndim - 2)
+        x = jnp.pad(x.astype(dtype), widths)
+        return jnp.transpose(x, tuple(range(2, x.ndim)) + (1, 0))
+
+    twin, swin = _sgrid.sgrid_kernel(
+        lane_layout(m2, jnp.float32), lane_layout(ci_s, jnp.float32),
+        lane_layout(cj_s, jnp.float32), lane_layout(cij, jnp.float32),
+        lane_layout(mask, jnp.uint8), lane_layout(s_ids, jnp.int32),
+        tau, ell=ell, npr=npr, tb=tb, interpret=interpret,
+    )
+    t_loc = twin.T[:n_l]                                        # (n_l, n′)
+    s_win = swin.reshape(npr, ell, n_pad).transpose(2, 0, 1)[:n_l]
+    return t_loc, s_win
+
+
+def _grid_winners(t_loc, s_win, t0):
+    """Launch-local winners → the (t_win, removed_slot, s_win) triple in the
+    rank dtype that levels' commit layer consumes. The kernel tracks int32
+    launch-local offsets; the launch base t0 is added back here, so the
+    kernel stays int32-clean even under x64 ranks."""
+    from repro.core import levels as L
+
+    found = t_loc < _sgrid.SENTINEL
+    t_win = jnp.where(
+        found, t0 + t_loc.astype(L._rank_dtype()), jnp.asarray(L._imax(), L._rank_dtype())
+    )
+    return t_win, found, s_win
+
+
+def chunk_s_grid_tests(c, adj, compact, counts, rows, t0, tau, *, ell, n_chunk, n_max):
+    """Tests half of the grid engine for a (possibly sharded) row block:
+    gather ranks [t0, t0+n_chunk) (levels.gather_s — the SAME prologue every
+    engine uses) and sweep them in one grid-resident kernel launch.
+    Returns (t_win (n_l,n′), removed_slot (n_l,n′) bool, s_win (n_l,n′,ℓ))
+    — the chunk_s_tests contract. Traceable (jit'd by its callers)."""
+    from repro.core import levels as L
+
+    ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
+    m2, ci_s, cj_s, cij, mask, s_ids = L.gather_s(
+        c, adj, compact, counts, rows, ranks, ell=ell, n_max=n_max
+    )
+    t_loc, s_win = ci_shared_grid(m2, ci_s, cj_s, cij, mask, s_ids, tau, ell=ell)
+    return _grid_winners(t_loc, s_win, t0)
+
+
+def chunk_s_grid_tests_cols(c_rows, c_cols, col_pos, adj, compact, counts,
+                            rows, t0, tau, *, ell, n_chunk, n_max):
+    """chunk_s_grid_tests for the ROW-SHARDED C layout (levels.gather_s_cols
+    prologue — bit-identical gathered values, see tests/test_sharding.py)."""
+    from repro.core import levels as L
+
+    ranks = t0 + jnp.arange(n_chunk, dtype=L._rank_dtype())
+    m2, ci_s, cj_s, cij, mask, s_ids = L.gather_s_cols(
+        c_rows, c_cols, col_pos, adj, compact, counts, rows, ranks,
+        ell=ell, n_max=n_max,
+    )
+    t_loc, s_win = ci_shared_grid(m2, ci_s, cj_s, cij, mask, s_ids, tau, ell=ell)
+    return _grid_winners(t_loc, s_win, t0)
+
+
+@functools.partial(jax.jit, static_argnames=("ell", "n_chunk", "n_max"))
+def chunk_s_grid(c, adj, sep, compact, counts, t0, tau, *, ell, n_chunk, n_max):
+    """Same contract as core.levels.chunk_s, but the whole rank range
+    [t0, t0+n_chunk) runs as ONE grid-resident kernel launch with the
+    commit fused into the same jitted program — one host dispatch per
+    launch, usually one per level (engines "S-grid"; planned by
+    levels.plan_level_grid so n_chunk depends only on static shapes)."""
+    from repro.core import levels as L
+
+    n = compact.shape[0]
+    rows = jnp.arange(n, dtype=jnp.int32)
+    t_win, removed_slot, s_win = chunk_s_grid_tests(
+        c, adj, compact, counts, rows, t0, tau, ell=ell, n_chunk=n_chunk, n_max=n_max
+    )
+    return L._global_commit(adj, sep, compact, rows, t_win, removed_slot, s_win, ell)
 
 
 # ------------------------------------- kernel-backed drop-in for levels.chunk_s

@@ -6,8 +6,11 @@
 
 ``--engine`` selects the level engine (see repro/core/engines.py for the
 matrix): jnp cuPC-S/-E ("S"/"E"), the Pallas cuPC-S kernel pipeline
-("S-kernel"), the fused dense ℓ=1 kernel ("L1-dense"), or the production
-"auto" hybrid (L1-dense at ℓ=1, S-kernel at ℓ≥2; interpret mode off-TPU).
+("S-kernel"), the grid-resident cuPC-S ("S-grid": the rank loop inside
+the Pallas grid, one host dispatch per level — also usable with
+--devices, where ``--speculate`` additionally hides the level barrier),
+the fused dense ℓ=1 kernel ("L1-dense"), or the production "auto" hybrid
+(L1-dense at ℓ=1, S-kernel at ℓ≥2; interpret mode off-TPU).
 ``--corr`` picks the correlation path (tiled MXU kernel vs XLA einsum).
 ``--devices K`` runs the row-sharded distributed engine on K (real or
 forced-host) devices; level barriers are one OR-all-reduce of the
@@ -141,13 +144,15 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.01)
     ap.add_argument(
         "--engine", default="auto",
-        choices=["E", "S", "S-kernel", "L1-dense", "auto", "scan"],
+        choices=["E", "S", "S-kernel", "S-grid", "L1-dense", "auto", "scan"],
         help="level engine: jnp cuPC-E/-S, Pallas cuPC-S pipeline (S-kernel), "
-             "fused dense l=1 kernel (L1-dense), the auto hybrid "
-             "(L1-dense at l=1 + S-kernel at l>=2; interpret mode off-TPU), "
-             "or scan (whole run as one fixed-shape traced program; static "
-             "level cap = --max-level, defaulting to the scan path's "
-             "DEFAULT_MAX_LEVEL)",
+             "grid-resident cuPC-S (S-grid: the rank loop inside the Pallas "
+             "grid, one host dispatch per level; also selectable for "
+             "--devices runs), fused dense l=1 kernel (L1-dense), the auto "
+             "hybrid (L1-dense at l=1 + S-kernel at l>=2; interpret mode "
+             "off-TPU), or scan (whole run as one fixed-shape traced "
+             "program; static level cap = --max-level, defaulting to the "
+             "scan path's DEFAULT_MAX_LEVEL)",
     )
     ap.add_argument(
         "--corr", default="auto", choices=["auto", "kernel", "jnp"],
@@ -184,6 +189,12 @@ def main():
                          "flight per level (double-buffered dispatch at 2; "
                          "tests overlap the trailing commits) -- "
                          "bit-identical results at any depth")
+    ap.add_argument("--speculate", action="store_true",
+                    help="with --devices/--mesh and --engine S-grid: "
+                         "dispatch level l+1's first chunk under level l's "
+                         "compaction bound BEFORE the max-degree sync "
+                         "resolves, hiding the one remaining host "
+                         "round-trip per level (bit-identical results)")
     ap.add_argument("--no-cache-cols", action="store_true",
                     help="disable the per-level hot-column cache in "
                          "--shard-c runs (re-gather C[:, cols] inside "
@@ -226,10 +237,20 @@ def main():
         from repro.core.distributed import pc_distributed
         from repro.launch.mesh import make_pc_mesh
 
-        if args.engine != "auto" or args.corr != "auto":
-            print("[pc_run] note: --devices uses the sharded jnp cuPC-S engine; "
-                  "--engine/--corr selections apply to single-device runs only")
+        dist_engine = args.engine if args.engine in ("S", "S-grid") else "S"
+        if args.engine not in ("auto", "S", "S-grid") or args.corr != "auto":
+            print("[pc_run] note: --devices supports --engine S / S-grid "
+                  "(sharded cuPC-S); other --engine/--corr selections apply "
+                  "to single-device runs only")
+        if args.speculate and dist_engine != "S-grid":
+            print("[pc_run] warning: --speculate requires --engine S-grid; "
+                  "ignoring it for this run")
         mesh = make_pc_mesh(args.devices or args.mesh or None)
+        if dist_engine == "S-grid":
+            print("[pc_run] grid-resident engine: one fused tests+commit "
+                  "launch per level"
+                  + (" + speculative next-level dispatch" if args.speculate
+                     else ""))
         if args.shard_c:
             print(f"[pc_run] correlation matrix row-sharded over "
                   f"{mesh.devices.size} devices"
@@ -243,7 +264,9 @@ def main():
                              bucket=not args.no_bucket, shard_c=args.shard_c,
                              shard_sep=args.shard_sep,
                              cache_cols=not args.no_cache_cols,
-                             pipeline_depth=args.pipeline_depth)
+                             pipeline_depth=args.pipeline_depth,
+                             engine=dist_engine,
+                             speculate=args.speculate and dist_engine == "S-grid")
     else:
         from repro.core.pc import pc
 

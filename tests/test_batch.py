@@ -8,7 +8,12 @@ import pytest
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.batch.ensemble import bootstrap_corr, bootstrap_pc
+from repro.batch.ensemble import (
+    _aggregate,
+    _vote_chunk,
+    bootstrap_corr,
+    bootstrap_pc,
+)
 from repro.batch.scan_pc import (
     pc_scan,
     pc_scan_batch,
@@ -168,6 +173,36 @@ def test_bootstrap_ensemble_invariants_and_reproducibility():
     # a different seed resamples differently (probability ~1)
     run3 = bootstrap_pc(x, n_boot=8, alpha=0.01, max_level=2, seed=1)
     assert not np.array_equal(run.replicate_adj, run3.replicate_adj)
+
+
+def test_aggregate_vote_chunking_bit_identical():
+    """Satellite: the sepset-vote aggregation chunks its (b, n, n, n)
+    membership tensor over the replicate axis under a byte cap instead of
+    materialising all B at once — integer vote counts accumulate across
+    chunks, so every chunking (including the degenerate 1-replicate steps
+    used at large n) must reproduce the unchunked result bit-for-bit."""
+    import jax
+
+    x, _ = sample_gaussian_dag(n=13, m=900, density=0.2, seed=6)
+    keys = jax.random.split(jax.random.PRNGKey(3), 7)
+    cs = bootstrap_corr(x, keys, corr="jnp")
+    res, _ = scan_levels_batch(cs, x.shape[0], max_level=2, orient=False)
+
+    ref = [np.asarray(o) for o in
+           _aggregate(res.adj, res.sepsets, 0.5, vote_chunk=None)]
+    for chunk in (1, 2, 3, 7, 64):
+        got = _aggregate(res.adj, res.sepsets, 0.5, vote_chunk=chunk)
+        for r, g in zip(ref, got):
+            np.testing.assert_array_equal(r, np.asarray(g))
+
+    # the budget-derived chunk: n³ bool bytes per replicate under the cap
+    assert _vote_chunk(32, 100) == 32          # tiny graphs: all at once
+    assert _vote_chunk(32, 1000) == 1          # n≈1000: one replicate/step
+    assert 1 <= _vote_chunk(32, 500) < 32
+    # bootstrap_pc routes through the chunked path and stays reproducible
+    e1 = bootstrap_pc(x, n_boot=5, max_level=2, seed=0)
+    e2 = bootstrap_pc(x, n_boot=5, max_level=2, seed=0)
+    np.testing.assert_array_equal(e1.cpdag, e2.cpdag)
 
 
 def test_bootstrap_thresholds_nest():

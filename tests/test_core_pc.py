@@ -119,6 +119,40 @@ def test_correlation_from_samples():
     np.testing.assert_allclose(got, np.corrcoef(x.T), atol=2e-3)
 
 
+def test_inv_spd_jitter_scales_with_diagonal():
+    """Satellite: the Tikhonov jitter in levels._inv_spd is RELATIVE to the
+    block's diagonal magnitude, not an absolute 1e-8 — so inverting a
+    rescaled SPD block is scale-invariant (inv(s·M)·s == inv(M) up to fp),
+    which a fixed jitter breaks for blocks whose scale dwarfs it. For unit
+    diagonals (every correlation block) the scale factor is exactly 1, so
+    correlation results are untouched bit-for-bit."""
+    from repro.core.levels import _inv_spd
+
+    b = 1.0 - 1e-3
+    m2 = np.array([[1.0, b], [b, 1.0]], np.float32)  # ill-conditioned block
+    base = np.asarray(_inv_spd(jnp.asarray(m2)[None]))[0]
+    for scale in (1e-6, 1e-4, 1e4):
+        scaled = np.asarray(_inv_spd(jnp.asarray(m2 * scale)[None]))[0] * scale
+        np.testing.assert_allclose(scaled, base, rtol=2e-3)
+
+
+def test_ill_conditioned_fixture_matches_stable_ref():
+    """Satellite regression: near-duplicate variables make M2 blocks
+    near-singular — the regime where a biased inverse can flip CI decisions
+    away from the pseudo-inverse oracle. The jnp engine must still agree
+    with stable_ref's skeleton on this fixture."""
+    rng = np.random.default_rng(0)
+    m, n = 2000, 12
+    x, _ = sample_gaussian_dag(n=n, m=m, density=0.3, seed=3)
+    x = np.asarray(x).copy()
+    x[:, 5] = x[:, 4] + 1e-4 * rng.standard_normal(m)  # corr(4,5) ≈ 1 - 2e-7
+    c = correlation_from_samples(jnp.asarray(x))
+    assert float(np.asarray(c)[4, 5]) > 1.0 - 1e-6, "fixture not ill-conditioned"
+    ref = pc_stable_skeleton(np.asarray(c), m=m, alpha=0.01)
+    run = pc_from_corr(c, m, alpha=0.01, engine="S")
+    np.testing.assert_array_equal(run.adj, ref.adj)
+
+
 # --------------------------------------------------- engines vs serial oracle
 @pytest.mark.parametrize("engine", ["S", "E"])
 @pytest.mark.parametrize("n,density,seed", [(15, 0.2, 0), (20, 0.15, 1), (25, 0.1, 2), (12, 0.4, 3)])

@@ -22,6 +22,8 @@ def test_resolve_auto_hybrid():
     assert engines.resolve("L1-dense", 1) == "L1-dense"
     assert engines.resolve("L1-dense", 2) == "S"  # dense cube is ℓ=1 only
     assert engines.resolve("s-kernel", 3) == "S-kernel"  # case-insensitive
+    assert engines.resolve("s-grid", 1) == "S-grid"  # any level, grid-resident
+    assert engines.resolve("S-grid", 4) == "S-grid"
     assert engines.resolve(lambda ell: "E" if ell == 1 else "S", 1) == "E"
     with pytest.raises(ValueError):
         engines.resolve("warp", 1)
@@ -87,6 +89,79 @@ def test_pc_corr_kernel_path():
     np.testing.assert_array_equal(base.adj, kern.adj)
     with pytest.raises(ValueError):
         pc(x, corr="mxu")
+
+
+# ------------------------------------------------- grid-resident engine parity
+@pytest.mark.parametrize(
+    "n,density,alpha,seed",
+    [(15, 0.2, 0.01, 0), (18, 0.3, 0.05, 3)],  # the deep fixture runs ℓ=2..5
+)
+def test_grid_engine_bit_parity(n, density, alpha, seed):
+    """ISSUE-5 acceptance: engine="S-grid" (rank axis in the Pallas grid,
+    winners accumulated in VMEM across grid steps, commit fused per launch)
+    must produce bit-identical skeleton, sepsets AND CPDAG to the jnp "S"
+    engine across every level the fixture reaches — with host dispatches
+    per level reduced to 1 (asserted via the level-stats dispatch counter)."""
+    m = 3000
+    x, _ = sample_gaussian_dag(n=n, m=m, density=density, seed=seed)
+    c = correlation_from_samples(jnp.asarray(x))
+    s_run = pc_from_corr(c, m, alpha=alpha, engine="S")
+    g_run = pc_from_corr(c, m, alpha=alpha, engine="S-grid")
+
+    np.testing.assert_array_equal(g_run.adj, s_run.adj)
+    np.testing.assert_array_equal(g_run.sepsets, s_run.sepsets)
+    np.testing.assert_array_equal(g_run.cpdag, s_run.cpdag)
+
+    ran = [st for st in g_run.level_stats if not st["skipped"]]
+    assert ran and all(st["engine"] == "S-grid" for st in ran)
+    assert all(st["dispatches"] == 1 for st in ran), [
+        (st["level"], st["dispatches"]) for st in ran
+    ]
+    assert any(st["level"] >= 2 for st in ran), "no ℓ≥2 level exercised"
+    # the chunked S engine dispatched once per chunk — strictly more overall
+    s_disp = sum(st["dispatches"] for st in s_run.level_stats if not st["skipped"])
+    assert s_disp >= len(ran)
+
+
+def test_grid_engine_multi_launch_parity():
+    """A launch budget too small for one level forces several grid launches;
+    ranks ascend across launches and each launch fuses its own commit, so
+    results stay bit-identical to the chunked engine (the same argument as
+    chunked dispatch — first separating chunk wins)."""
+    m = 2000
+    x, _ = sample_gaussian_dag(n=22, m=m, density=0.25, seed=9)
+    c = correlation_from_samples(jnp.asarray(x))
+    s_run = pc_from_corr(c, m, engine="S", cell_budget=2**10)
+    g_run = pc_from_corr(c, m, engine="S-grid", cell_budget=2**10)
+    assert any(st["chunks"] > 1 for st in g_run.level_stats
+               if not st["skipped"]), "budget did not force multi-launch"
+    np.testing.assert_array_equal(g_run.adj, s_run.adj)
+    np.testing.assert_array_equal(g_run.sepsets, s_run.sepsets)
+    np.testing.assert_array_equal(g_run.cpdag, s_run.cpdag)
+
+
+def test_plan_level_caps_and_rejects_unrepresentable_ranks():
+    """Satellite: without x64, combo ranks live in int32 — plan_level must
+    FAIL loudly (not alias ranks through the clipped binomial table) when a
+    level's total rank count exceeds the dtype capacity, and cap n_chunk so
+    every rank a chunk touches stays representable."""
+    import math
+
+    # a level whose C(n', l) is astronomically past any integer dtype
+    with pytest.raises(ValueError, match="rank capacity"):
+        L.plan_level(3000, 8, 3000)
+
+    # near the capacity: totals fit, and the planned chunk keeps
+    # total + n_chunk inside the key range (ranks commit as rank*2 + bit)
+    imax = L._imax()
+    npr, ell = 4000, 3
+    total = math.comb(npr, ell)
+    if total <= imax:  # x64 ranks: plans, and the chunk respects the cap
+        _, n_chunk, _ = L.plan_level(npr, ell, 64)
+        assert total + n_chunk <= imax
+    else:  # int32 ranks: C(4000,3) ≈ 1.07e10 is unrepresentable → loud error
+        with pytest.raises(ValueError, match="rank capacity"):
+            L.plan_level(npr, ell, 64)
 
 
 # ------------------------------------------------------------- npr bucketing

@@ -275,6 +275,80 @@ def test_hot_column_cache_parity_and_gather_counts():
     """)
 
 
+# --------------------------------------------- grid-resident engine (S-grid)
+@pytest.mark.parametrize("ndev,n,dens,seed,combos", [
+    # 30 % 8 != 0 → row-pad path; layouts + speculation + pipelined args
+    (8, 30, 0.2, 4, [
+        "dict(engine='S-grid')",
+        "dict(engine='S-grid', shard_c=True, shard_sep=True, speculate=True)",
+        "dict(engine='S-grid', shard_sep=True, pipeline_depth=3)",
+    ]),
+    # even split; replicated-C speculation and sharded-C grid
+    (4, 24, 0.25, 1, [
+        "dict(engine='S-grid', speculate=True)",
+        "dict(engine='S-grid', shard_c=True)",
+    ]),
+])
+def test_grid_engine_sharded_bit_identical(ndev, n, dens, seed, combos):
+    """ISSUE-5 acceptance, distributed: the grid-resident engine (one fused
+    tests+commit shard_map per level — the pipelined deque collapses to a
+    single sharded launch) is bit-identical to the single-device "S" engine
+    across layout combos, n % n_dev ≠ 0, pipelined args (moot → reported
+    depth 1) and speculative dispatch, with host dispatches per level
+    reduced to 1 (the level-stats dispatch counter)."""
+    _run_script(f"""
+        import jax, numpy as np
+        assert len(jax.devices()) == {ndev}, jax.devices()
+        from repro.data.synthetic_dag import sample_gaussian_dag
+        from repro.core.pc import pc
+        from repro.core.distributed import pc_distributed
+
+        x, _ = sample_gaussian_dag(n={n}, m=2500, density={dens}, seed={seed})
+        base = pc(x, engine="S")
+        for kw in [{", ".join(combos)}]:
+            run = pc_distributed(x=x, **kw)
+            assert np.array_equal(base.adj, run.adj), ("skeleton", kw)
+            assert np.array_equal(base.sepsets, run.sepsets), ("sepsets", kw)
+            assert np.array_equal(base.cpdag, run.cpdag), ("cpdag", kw)
+            ran = [st for st in run.level_stats if not st["skipped"]]
+            assert ran and all(st["engine"] == "S-grid" for st in ran)
+            assert all(st["dispatches"] == 1 for st in ran), (
+                [(st["level"], st["dispatches"]) for st in ran], kw)
+            assert all(st["pipeline_depth"] == 1 for st in ran), kw
+            if kw.get("speculate"):
+                # every level after the first consumed its speculative chunk
+                assert all(st.get("speculative", False) for st in ran[1:]), (
+                    [(st["level"], st.get("speculative")) for st in ran], kw)
+        print("OK")
+    """, ndev=ndev)
+
+
+def test_grid_engine_sharded_multi_launch_and_spec_mismatch():
+    """Grid distributed with a launch budget too small for one level: several
+    fused launches per level (commits in ascending rank order) must still be
+    bit-identical, including under speculation — where the speculative first
+    chunk was planned with a DIFFERENT (previous-bucket) chunk length and the
+    level resumes from its rank offset."""
+    _run_script("""
+        import jax, numpy as np
+        assert len(jax.devices()) == 8
+        from repro.data.synthetic_dag import sample_gaussian_dag
+        from repro.core.pc import pc
+        from repro.core.distributed import pc_distributed
+
+        x, _ = sample_gaussian_dag(n=26, m=2000, density=0.25, seed=9)
+        base = pc(x, engine="S")
+        for kw in [dict(), dict(speculate=True)]:
+            run = pc_distributed(x=x, engine="S-grid", cell_budget=2**9, **kw)
+            assert np.array_equal(base.adj, run.adj), kw
+            assert np.array_equal(base.sepsets, run.sepsets), kw
+            assert np.array_equal(base.cpdag, run.cpdag), kw
+            assert any(st["chunks"] > 1 for st in run.level_stats
+                       if not st["skipped"]), "budget did not force multi-launch"
+        print("OK")
+    """)
+
+
 def test_run_level_pipelined_parity_single_device():
     """Single-device split tests/commit dispatch-ahead (levels.chunk_s_tests
     + chunk_s_commit): bit-identical to the fused sync path at any depth —
