@@ -1,8 +1,9 @@
 # Repo verification targets. PYTHONPATH=src everywhere (no install step).
 PY ?= python
 
-.PHONY: test verify-kernels verify-batch verify-distributed lint docs-check \
-        bench-pc bench-pc-batch bench-pc-distributed bench-pc-grid bench-check ci
+.PHONY: test verify-kernels verify-batch verify-distributed verify-serve \
+        lint docs-check bench-pc bench-pc-batch bench-pc-distributed \
+        bench-pc-grid bench-pc-serve bench-check ci
 
 test:  ## tier-1 suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -16,6 +17,10 @@ verify-batch:  ## batched-PC subsystem: traced-scan parity + ensemble + orientat
 verify-distributed:  ## sharding suite (row-sharded C + sharded batch axis) on a forced 8-device CPU mesh
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	  PYTHONPATH=src $(PY) -m pytest -q -m distributed tests/
+
+verify-serve:  ## serving layer: admission + fault-injection recovery paths (virtual clock, no sleeps)
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	  PYTHONPATH=src $(PY) -m pytest -q -m serve tests/test_serve.py
 
 lint:  ## ruff over the python tree (same invocation as CI)
 	ruff check src tests benchmarks scripts
@@ -34,6 +39,9 @@ bench-pc-distributed:  ## pipelined-vs-sync dispatch + column-gather traffic -> 
 
 bench-pc-grid:  ## grid-resident engine: dispatch collapse + wall time -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_grid
+
+bench-pc-serve:  ## serving throughput/latency under open-loop arrivals -> BENCH_pc.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_serve
 
 bench-check:  ## rerun the quick batch bench and diff it against the committed BENCH_pc.json baseline
 	PYTHONPATH=src $(PY) -m benchmarks.check_regression --run

@@ -41,6 +41,7 @@ _SECTION_BASE = {
     "pc_batch": lambda base: base.get("pc_batch"),
     "pc_distributed": lambda base: base.get("pc_distributed"),
     "pc_grid": lambda base: base.get("pc_grid"),
+    "pc_serve": lambda base: base.get("pc_serve"),
     "pc_engines": lambda base: {
         k: base[k] for k in ("backend", "engines", "configs") if k in base
     } or None,
@@ -146,9 +147,10 @@ def main(argv=None) -> int:
                     help="regenerate the fresh payloads first "
                          "(benchmarks.run --only <section>)")
     ap.add_argument("--sections", nargs="*",
-                    default=["pc_batch", "pc_distributed", "pc_grid"],
+                    default=["pc_batch", "pc_distributed", "pc_grid",
+                             "pc_serve"],
                     help="BENCH sections to gate "
-                         "(default: pc_batch pc_distributed pc_grid; any "
+                         "(default: pc_batch pc_distributed pc_grid pc_serve; any "
                          "other baseline section carrying parity flags is "
                          "added automatically — parity self-checks cannot "
                          "be skipped by narrowing the section list)")

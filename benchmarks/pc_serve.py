@@ -1,0 +1,179 @@
+"""Serving throughput/latency: open-loop arrivals against PCService.
+
+The serving question is not "how fast is one batch" (benchmarks/pc_batch)
+but "what does a caller experience at traffic": requests arrive on their
+own clock (open loop — arrivals do NOT wait for completions, so queueing
+delay is measured honestly), are validated, bucketed, and dispatched in
+slots, and each delivery stamps an end-to-end latency. This module drives
+a Poisson arrival process of mixed-shape requests (two graph sizes to
+force multiple buckets, an alpha-sweep request, plus invalid submissions
+that must be rejected at admission without costing the slots anything)
+and records sustained requests/sec, graphs/sec, and p50/p99 latency into
+benchmarks/results/pc_serve.json + the repo-root BENCH_pc.json
+("pc_serve" section, gated by check_regression.py).
+
+Parity gate: every delivered graph is re-run as a solo ``pc_scan`` and
+compared bit-for-bit ("serve_parity_ok") — slot co-tenancy, bucketing,
+and retries must never change an answer. A "NO" marks the timing rows
+untrustworthy, same contract as every other bench in this repo.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import md_table, merge_bench_trajectory, save
+
+# R requests at `rate`/s: small-graph shapes keep the CPU container in the
+# seconds range while still filling multi-request slots (slot_size=8).
+CONFIGS = {
+    "mixed": dict(R=24, rate=200.0, ns=(24, 32), m=1200, density=0.05,
+                  alpha=0.01, max_level=2, slot_size=8),
+}
+QUICK_CONFIGS = {
+    "mixed": dict(R=8, rate=200.0, ns=(16, 20), m=800, density=0.06,
+                  alpha=0.01, max_level=2, slot_size=4),
+}
+FULL_CONFIGS = {
+    "mixed": dict(R=96, rate=200.0, ns=(48, 64), m=3000, density=0.03,
+                  alpha=0.01, max_level=3, slot_size=16),
+}
+
+
+def _requests(cfg):
+    """Deterministic open-loop request schedule: (arrival_s, Request),
+    including an alpha sweep and two invalid payloads (NaN sample,
+    constant column) that admission must reject for free."""
+    from repro.data.synthetic_dag import sample_gaussian_dag
+    from repro.serve import Request
+
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.exponential(1.0 / cfg["rate"], size=cfg["R"]))
+    reqs = []
+    for i, t in enumerate(arrivals):
+        n = cfg["ns"][i % len(cfg["ns"])]
+        x, _ = sample_gaussian_dag(n=n, m=cfg["m"], density=cfg["density"],
+                                   seed=500 + i)
+        x = np.asarray(x, np.float32)
+        if i == 3:  # alpha sweep over one dataset: several lanes, one bucket
+            reqs.append((t, Request(rid=f"r{i}", x=x,
+                                    alphas=(0.005, cfg["alpha"], 0.05),
+                                    max_level=cfg["max_level"])))
+            continue
+        if i == 5:  # hostile: NaN sample — must die at admission
+            x = x.copy()
+            x[0, 0] = np.nan
+        elif i == 6:  # hostile: constant column
+            x = x.copy()
+            x[:, 1] = 2.5
+        reqs.append((t, Request(rid=f"r{i}", x=x, alpha=cfg["alpha"],
+                                max_level=cfg["max_level"])))
+    return reqs
+
+
+def _bench_config(name, cfg):
+    import jax
+
+    from repro.batch.scan_pc import pc_scan
+    from repro.core.cit import correlation_from_samples
+    from repro.serve import PCService, ServeConfig
+
+    mesh = None
+    if jax.device_count() > 1:
+        from repro.core import sharding as SH
+
+        mesh = SH.make_mesh()
+
+    reqs = _requests(cfg)
+    # warmup service: compile every bucket's program off the clock, on
+    # lookalike shapes (serving steady state = warm jit caches)
+    warm = PCService(ServeConfig(slot_size=cfg["slot_size"], mesh=mesh))
+    for t, r in reqs[: 2 * len(cfg["ns"])]:
+        if r.x is not None and np.isfinite(r.x).all():
+            warm.submit(r)
+    warm.drain()
+
+    svc = PCService(ServeConfig(slot_size=cfg["slot_size"], mesh=mesh))
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reqs) or svc.queue.pending():
+        now = time.perf_counter() - t0
+        while i < len(reqs) and reqs[i][0] <= now:
+            svc.submit(reqs[i][1])
+            i += 1
+        if svc.step():
+            continue
+        if i < len(reqs):  # idle until the next arrival
+            time.sleep(max(0.0, min(reqs[i][0] - now, 1e-3)))
+    total_s = time.perf_counter() - t0
+    rep = svc.report
+
+    # parity gate: each delivered lane vs a solo pc_scan on the same data
+    by_rid = {r.rid: r for _, r in reqs}
+    parity = True
+    for rid, lanes in rep.delivered.items():
+        req = by_rid[rid]
+        c = np.asarray(correlation_from_samples(np.asarray(req.x, np.float32)))
+        for g in lanes.values():
+            ref = pc_scan(c, req.x.shape[0], alpha=g.alpha,
+                          max_level=cfg["max_level"])
+            parity &= (np.array_equal(g.adj, np.asarray(ref.adj))
+                       and np.array_equal(g.sepsets, np.asarray(ref.sepsets))
+                       and np.array_equal(g.cpdag, np.asarray(ref.cpdag)))
+
+    lats = rep.latencies()
+    graphs = sum(len(v) for v in rep.delivered.values())
+    return {
+        "config": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in cfg.items()},
+        "serve_parity_ok": bool(parity),
+        "total_s": total_s,
+        "requests": len(reqs),
+        "delivered_requests": len(rep.delivered),
+        "delivered_graphs": graphs,
+        "rejected": len(rep.rejections),
+        "dead_letters": len(rep.dead_letters),
+        "dispatches": rep.steps,
+        "requests_per_s": len(rep.delivered) / total_s,
+        "graphs_per_s": graphs / total_s,
+        "p50_s": float(np.percentile(lats, 50)) if lats else None,
+        "p99_s": float(np.percentile(lats, 99)) if lats else None,
+        "devices": int(jax.device_count()),
+    }
+
+
+def run(full: bool = False, quick: bool = False) -> str:
+    import jax
+
+    configs = FULL_CONFIGS if full else (QUICK_CONFIGS if quick else CONFIGS)
+    records = {name: _bench_config(name, cfg) for name, cfg in configs.items()}
+    primary = records["mixed"]
+
+    payload = {
+        "backend": jax.default_backend(),
+        "requests_per_s": primary["requests_per_s"],
+        "p50_s": primary["p50_s"],
+        "p99_s": primary["p99_s"],
+        "serve_parity_ok": primary["serve_parity_ok"],
+        "configs": records,
+    }
+    save("pc_serve", payload)
+    merge_bench_trajectory({"pc_serve": payload})
+
+    rows = []
+    for name, r in records.items():
+        rows.append([
+            f"{name} R={r['requests']} slots={r['dispatches']}",
+            f"{r['requests_per_s']:.1f}",
+            f"{r['graphs_per_s']:.1f}",
+            f"{(r['p50_s'] or 0) * 1e3:.0f} ms",
+            f"{(r['p99_s'] or 0) * 1e3:.0f} ms",
+            f"{r['rejected']} rejected / {r['dead_letters']} dead",
+            "yes" if r["serve_parity_ok"] else "NO",
+        ])
+    return (
+        "### PC serving under open-loop arrivals (PCService)\n\n"
+        + md_table(["workload", "req/s", "graphs/s", "p50", "p99",
+                    "robustness", "parity"], rows)
+    )

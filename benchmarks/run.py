@@ -12,7 +12,8 @@ import argparse
 import time
 
 from . import (fig5, fig6, fig7_8, fig9, fig10, pc_batch, pc_distributed,
-               pc_engines, pc_grid, pc_hillclimb, roofline_table, table2)
+               pc_engines, pc_grid, pc_hillclimb, pc_serve, roofline_table,
+               table2)
 from .common import RESULTS
 
 MODULES = [
@@ -26,6 +27,7 @@ MODULES = [
     ("pc_batch", pc_batch),
     ("pc_distributed", pc_distributed),
     ("pc_grid", pc_grid),
+    ("pc_serve", pc_serve),
     ("pc_hillclimb", pc_hillclimb),
     ("roofline", roofline_table),
 ]

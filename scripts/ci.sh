@@ -23,11 +23,15 @@ echo "[ci] distributed/sharding suite (forced 8-device CPU mesh)"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   PYTHONPATH=src python -m pytest -q -m distributed tests/
 
+echo "[ci] serving layer: fault-injection suite (forced 8-device CPU mesh)"
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src python -m pytest -q -m serve tests/test_serve.py
+
 echo "[ci] docs-check (execute fenced snippets in README.md + docs/)"
 python scripts/check_docs.py
 
 echo "[ci] tier-1 remainder (kernels/batch/distributed already ran above)"
-PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed"
+PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed and not serve"
 
 # non-blocking: perf numbers on shared machines are advisory; structural
 # regressions (missing BENCH keys, parity-flag flips, parity flags a bench
@@ -37,7 +41,7 @@ PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not dist
 # workflow's dedicated bench-check job owns it there, uploading the fresh
 # JSON as an artifact).
 if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
-  echo "[ci] bench-check (non-blocking: pc_batch pc_distributed pc_grid)"
+  echo "[ci] bench-check (non-blocking: pc_batch pc_distributed pc_grid pc_serve)"
   PYTHONPATH=src python -m benchmarks.check_regression --run \
     || echo "[ci] bench-check reported regressions (non-blocking)"
 fi

@@ -43,6 +43,15 @@ XLA program learns B graphs per dispatch. ``scan_levels_batch`` is the
 plan-as-you-go variant (one sync per level, schedule discovered on the
 fly) used by the bootstrap ensemble.
 
+Alpha sweeps. The Fisher-z thresholds enter the trace as a DATA vector
+(one tau per level), not as compile-time constants: one compiled program
+serves every (m, alpha) combination of a given shape, and the batch entry
+points accept per-graph tau vectors. ``alpha_sweep`` exploits this for the
+ParallelPC-style workload — B significance levels over ONE correlation
+matrix, broadcast (not recomputed) across the batch lanes of a single
+dispatch. The serving layer (repro/serve) admits such sweeps through the
+same slot policy as ordinary requests.
+
 Multi-device: both batch entry points accept ``mesh`` (a flat 1-D mesh
 from ``core/sharding.py``). The leading B axis is then sharded over the
 mesh via ``jax.sharding`` — the SAME compiled program runs on every
@@ -83,12 +92,29 @@ class ScanResult(NamedTuple):
     cpdag:   (..., n, n) bool   CPDAG digraph (== adj when orient=False)
     sepsets: (..., n, n, Lmax) int32, -1 padded, -2 sentinel in slot 0 for
              level-0 removals — same convention as core/pc.PCRun.
-    ok:      (...,) bool        True iff the static width schedule bounded
-             this graph's live max degree at every level (result is exact);
-             False marks a degree-capped (approximate) run.
+    ok:      (...,) bool        PER-GRAPH exactness certificate: True iff
+             the static width schedule bounded this graph's live max degree
+             at every level (result is exact); False marks a degree-capped
+             (approximate) run.
     max_degs: (..., max_level) int32 — live max degree at each level's
              start; max_degs[ℓ-1] - 1 < ℓ means the host driver would have
              stopped before level ℓ (lets callers report true levels-run).
+    ok_levels: (..., max_level) bool — the per-LEVEL factorisation of
+             ``ok`` (``ok == ok_levels.all(-1)``): which level's width was
+             the one that capped the graph. Levels run through the dense
+             ℓ=1 cube are exact at any degree and always report True.
+
+    Retry contract (the serving layer's escalation policy relies on it):
+    an ``ok=False`` graph was NOT silently corrupted — rows wider than the
+    schedule had their sorted neighbour lists deterministically truncated
+    at compaction — and re-running THE SAME graph with a width schedule
+    that satisfies every level (e.g. the next-wider bucket per failing
+    ``ok_levels`` entry, or ``n_prime=None`` for the per-graph exact
+    level-0 bound) yields a run with ``ok=True`` whose adj/sepsets/cpdag
+    are bit-identical to the unconstrained single-graph ``pc_scan``.
+    Escalating the width can therefore be repeated until ``ok`` flips,
+    and the first ``ok=True`` result is THE exact answer — there is
+    nothing to reconcile across attempts.
     """
 
     adj: jax.Array
@@ -96,24 +122,31 @@ class ScanResult(NamedTuple):
     sepsets: jax.Array
     ok: jax.Array
     max_degs: jax.Array
+    ok_levels: jax.Array
 
 
 # --------------------------------------------------------------------------
 # static planning
 # --------------------------------------------------------------------------
-def plan_n_prime(cs, m: int, alpha: float = 0.01) -> int:
+def plan_n_prime(cs, m: int, alpha: float = 0.01, tau0=None) -> int:
     """Single static compact width valid for a whole batch of correlation
     matrices: the bucketed level-0 max degree over every graph.
 
     Levels only remove edges, so this bounds every row at every level —
     always exact (``ok`` True), but conservative; ``plan_schedule`` finds
     the tight per-level widths. One fused device pass + one host sync.
+
+    ``tau0`` optionally overrides the level-0 threshold derived from
+    (m, alpha): a scalar, or a (B,) vector of per-graph thresholds (the
+    per-graph tau path of :func:`pc_scan_batch` / :func:`alpha_sweep`).
     """
     cs = jnp.asarray(cs, jnp.float32)
     if cs.ndim == 2:
         cs = cs[None]
-    tau0 = threshold(m, 0, alpha)
-    deg = jax.vmap(lambda c: jnp.max(jnp.sum(L.level0(c, tau0), axis=1)))(cs)
+    if tau0 is None:
+        tau0 = threshold(m, 0, alpha)
+    tau0 = jnp.broadcast_to(jnp.asarray(tau0, jnp.float32), (cs.shape[0],))
+    deg = jax.vmap(lambda c, t: jnp.max(jnp.sum(L.level0(c, t), axis=1)))(cs, tau0)
     npr = int(jax.device_get(jnp.max(deg)))
     n = int(cs.shape[-1])
     return max(1, min(L.bucket_npr(npr), n))
@@ -193,13 +226,16 @@ def _as_schedule(n_prime, max_level: int, n: int) -> tuple:
 # --------------------------------------------------------------------------
 # traced level sweep (shared by the one-program scan and the level driver)
 # --------------------------------------------------------------------------
-def _level_sweep(c, adj, sep, tau, *, ell: int, w: int, n_chunk: int, steps: int):
+def _level_sweep(c, adj, sep, tau, *, ell: int, w: int, n_chunk: int, steps: int,
+                 jitter: float = L.DEFAULT_JITTER):
     """One level's masked dense rank sweep at static width w.
 
     Rows with more than w neighbours are degree-capped: compaction truncates
     their (sorted) neighbour list and counts are clamped to w, so every test
     is well-formed — the caller's ok flag records whether capping could have
-    happened at all.
+    happened at all. ``jitter`` feeds the per-set SPD inverse (escalated by
+    the serving layer's degradation ladder; default = every engine's
+    baseline).
     """
     n = c.shape[0]
     rd = L._rank_dtype()
@@ -211,7 +247,8 @@ def _level_sweep(c, adj, sep, tau, *, ell: int, w: int, n_chunk: int, steps: int
         adj, sep = carry
         ranks = jnp.asarray(step, rd) * n_chunk + jnp.arange(n_chunk, dtype=rd)
         sep_found, s_ids = L._tests_s(
-            c, adj, compact, counts, rows, ranks, tau, ell=ell, n_max=w
+            c, adj, compact, counts, rows, ranks, tau, ell=ell, n_max=w,
+            jitter=jitter,
         )
         return L._commit(
             c, adj, sep, compact, counts, sep_found, ranks, s_ids, None, ell
@@ -235,58 +272,72 @@ def _level_ok(max_deg, ell: int, w: int):
 # --------------------------------------------------------------------------
 def _scan_core(
     c,
+    taus,
     *,
-    taus: tuple,
     schedule: tuple,
     sepset_depth: int,
     cell_budget: int,
     orient: bool,
+    jitter: float,
 ) -> ScanResult:
-    """One graph's full skeleton phase as a single traced computation."""
+    """One graph's full skeleton phase as a single traced computation.
+
+    ``taus`` is a TRACED (max_level+1,) fp32 vector of per-level Fisher-z
+    thresholds — data, not a compile-time constant — so one compiled
+    program serves every (m, alpha) of a given shape, and the vmapped
+    caller can carry a different threshold vector per batch lane (the
+    alpha-sweep workload).
+    """
     n = c.shape[0]
     adj = L.level0(c, taus[0])
     sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
     sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
 
-    ok = jnp.asarray(True)
-    max_degs = []
+    max_degs, ok_levels = [], []
     for ell, w in enumerate(schedule, start=1):
         max_deg = jnp.max(jnp.sum(adj, axis=1)).astype(jnp.int32)
         max_degs.append(max_deg)
         if ell == 1 and _use_dense_l1(n, w, cell_budget):
             # exact at any degree — no width truncation, no ok contribution
+            ok_levels.append(jnp.asarray(True))
             adj, sep = _level1_dense(c, adj, sep, taus[1])
             continue
-        ok = ok & _level_ok(max_deg, ell, w)
+        ok_levels.append(_level_ok(max_deg, ell, w))
         n_chunk, steps = _plan_chunk(n, w, ell, cell_budget)
         if steps == 0:
             continue  # C(w, ell) == 0: statically no work (ok still checked)
         adj, sep = _level_sweep(
-            c, adj, sep, taus[ell], ell=ell, w=w, n_chunk=n_chunk, steps=steps
+            c, adj, sep, taus[ell], ell=ell, w=w, n_chunk=n_chunk, steps=steps,
+            jitter=jitter,
         )
 
     cpdag = cpdag_from_skeleton(adj, sep) if orient else adj
     max_degs = jnp.stack(max_degs) if max_degs else jnp.zeros((0,), jnp.int32)
-    return ScanResult(adj=adj, cpdag=cpdag, sepsets=sep, ok=ok, max_degs=max_degs)
+    ok_levels = (jnp.stack(ok_levels) if ok_levels
+                 else jnp.ones((0,), bool))
+    return ScanResult(adj=adj, cpdag=cpdag, sepsets=sep,
+                      ok=jnp.all(ok_levels), max_degs=max_degs,
+                      ok_levels=ok_levels)
 
 
 @functools.lru_cache(maxsize=None)
-def _build(taus, schedule, sepset_depth, cell_budget, orient, batched):
+def _build(schedule, sepset_depth, cell_budget, orient, jitter, batched):
     core = functools.partial(
         _scan_core,
-        taus=taus,
         schedule=schedule,
         sepset_depth=sepset_depth,
         cell_budget=cell_budget,
         orient=orient,
+        jitter=jitter,
     )
     return jax.jit(jax.vmap(core) if batched else core)
 
 
-def _pad_shard_batch(cs, mesh):
+def _pad_shard_batch(cs, taus, mesh):
     """Pad the batch to a device-count multiple with identity-correlation
     graphs (level 0 removes every edge → all levels are masked no-ops for
-    the pad lanes) and place it batch-sharded. Returns (cs, pad)."""
+    the pad lanes; their tau vector is an arbitrary positive constant) and
+    place both batch-sharded. Returns (cs, taus, pad)."""
     from repro.core import sharding as SH
 
     pad = SH.pad_amount(cs.shape[0], mesh)
@@ -294,7 +345,11 @@ def _pad_shard_batch(cs, mesh):
         n = cs.shape[-1]
         eye = jnp.broadcast_to(jnp.eye(n, dtype=cs.dtype), (pad, n, n))
         cs = jnp.concatenate([cs, eye], axis=0)
-    return SH.shard_batch(cs, mesh)[0], pad  # already a multiple: no 0-fill
+        taus = jnp.concatenate(
+            [taus, jnp.ones((pad, taus.shape[-1]), taus.dtype)], axis=0
+        )
+    # already a multiple: no 0-fill
+    return SH.shard_batch(cs, mesh)[0], SH.shard_batch(taus, mesh)[0], pad
 
 
 def _trim_result(res: ScanResult, pad: int) -> ScanResult:
@@ -306,7 +361,13 @@ def _trim_result(res: ScanResult, pad: int) -> ScanResult:
     return ScanResult(*(unpad_leading(a, pad) for a in res))
 
 
-def _prep(c, m, alpha, max_level, sepset_depth, n_prime):
+def taus_for(m: int, alpha: float, max_level: int) -> tuple:
+    """Per-level Fisher-z threshold vector for one (m, alpha): the host-side
+    companion of the traced tau input (tuple of max_level+1 floats)."""
+    return tuple(threshold(m, ell, alpha) for ell in range(max_level + 1))
+
+
+def _prep(c, m, alpha, max_level, sepset_depth, n_prime, taus=None):
     c = jnp.asarray(c, jnp.float32)
     n = int(c.shape[-1])
     if max_level is None:
@@ -316,10 +377,17 @@ def _prep(c, m, alpha, max_level, sepset_depth, n_prime):
             f"max_level={max_level} exceeds sepset_depth={sepset_depth}: "
             "sepsets of the deepest level would not fit"
         )
+    if taus is None:
+        taus = taus_for(m, alpha, max_level)
+    taus = jnp.asarray(taus, jnp.float32)
+    if taus.shape[-1] != max_level + 1:
+        raise ValueError(
+            f"taus must carry max_level+1={max_level + 1} per-level "
+            f"thresholds; got shape {taus.shape}"
+        )
     if n_prime is None:
-        n_prime = plan_n_prime(c, m, alpha)
+        n_prime = plan_n_prime(c, m, alpha, tau0=taus[..., 0])
     schedule = _as_schedule(n_prime, max_level, n)
-    taus = tuple(threshold(m, ell, alpha) for ell in range(max_level + 1))
     return c, taus, max_level, schedule
 
 
@@ -332,6 +400,8 @@ def pc_scan(
     n_prime=None,
     cell_budget: int = DEFAULT_CELL_BUDGET,
     orient: bool = True,
+    taus=None,
+    jitter: float = L.DEFAULT_JITTER,
 ) -> ScanResult:
     """Traced PC-stable on one correlation matrix c (n, n).
 
@@ -341,10 +411,20 @@ def pc_scan(
     degree bound from ``c``, one host sync). ``n_prime`` may be an int
     (one width for every level) or a per-level tuple from
     ``plan_schedule``. ``max_level=None`` uses DEFAULT_MAX_LEVEL.
+
+    ``taus`` overrides the (m, alpha)-derived per-level thresholds with an
+    explicit (max_level+1,) vector — thresholds are trace DATA, so varying
+    them reuses the compiled program. ``jitter`` escalates the Tikhonov
+    regularisation of the ℓ≥2 SPD inverses (the serving layer's
+    degradation ladder; the default is every engine's baseline and keeps
+    results bit-identical to engine="S").
     """
-    c, taus, max_level, schedule = _prep(c, m, alpha, max_level, sepset_depth, n_prime)
-    fn = _build(taus, schedule, sepset_depth, int(cell_budget), bool(orient), False)
-    return fn(c)
+    c, taus, max_level, schedule = _prep(
+        c, m, alpha, max_level, sepset_depth, n_prime, taus
+    )
+    fn = _build(schedule, sepset_depth, int(cell_budget), bool(orient),
+                float(jitter), False)
+    return fn(c, taus)
 
 
 def pc_scan_batch(
@@ -357,6 +437,8 @@ def pc_scan_batch(
     cell_budget: int = DEFAULT_CELL_BUDGET,
     orient: bool = True,
     mesh=None,
+    taus=None,
+    jitter: float = L.DEFAULT_JITTER,
 ) -> ScanResult:
     """Vmapped ``pc_scan`` over a leading batch axis: cs (B, n, n).
 
@@ -366,6 +448,12 @@ def pc_scan_batch(
     exactness), or leave ``None`` for the always-exact level-0 bound. The
     per-dispatch cell budget is divided by B so the batched worklists keep
     the same memory ceiling as the single-graph engines.
+
+    ``taus``: per-graph per-level threshold vectors, shape (B, max_level+1)
+    (or (max_level+1,) broadcast to every lane) — lanes may carry DIFFERENT
+    (m, alpha) combinations in one dispatch since thresholds are trace
+    data. This is what lets :func:`alpha_sweep` and the serving layer's
+    admission policy co-batch requests that share only (n, schedule).
 
     mesh (core/sharding.py): shard the batch axis over the mesh — each
     device runs the same program on its B/n_dev local graphs, the budget
@@ -378,18 +466,64 @@ def pc_scan_batch(
     if cs.ndim != 3:
         raise ValueError(f"pc_scan_batch expects (B, n, n); got shape {cs.shape}")
     b = int(cs.shape[0])
-    cs, taus, max_level, schedule = _prep(cs, m, alpha, max_level, sepset_depth, n_prime)
+    cs, taus, max_level, schedule = _prep(
+        cs, m, alpha, max_level, sepset_depth, n_prime, taus
+    )
+    taus = jnp.broadcast_to(taus, (b, max_level + 1))
     pad = 0
     if mesh is not None:
         from repro.core import sharding as SH
 
-        cs, pad = _pad_shard_batch(cs, mesh)
+        cs, taus, pad = _pad_shard_batch(cs, taus, mesh)
         b_local = (b + pad) // SH.mesh_size(mesh)
     else:
         b_local = b
     budget = max(int(cell_budget) // max(b_local, 1), 2**16)
-    fn = _build(taus, schedule, sepset_depth, budget, bool(orient), True)
-    return _trim_result(fn(cs), pad)
+    fn = _build(schedule, sepset_depth, budget, bool(orient), float(jitter), True)
+    return _trim_result(fn(cs, taus), pad)
+
+
+def alpha_sweep(
+    c,
+    m: int,
+    alphas,
+    max_level: int | None = None,
+    sepset_depth: int = 8,
+    n_prime=None,
+    cell_budget: int = DEFAULT_CELL_BUDGET,
+    orient: bool = True,
+    mesh=None,
+    jitter: float = L.DEFAULT_JITTER,
+) -> ScanResult:
+    """Significance-level sweep over ONE correlation matrix: lane k of the
+    returned batch is ``pc_scan(c, m, alpha=alphas[k])``, bit-identically
+    (tested) — but C is computed once and broadcast across the lanes of a
+    single vmapped dispatch instead of rebuilt per alpha, and the whole
+    sweep shares one compiled program (thresholds are trace data).
+
+    The default ``n_prime=None`` plans the level-0 degree bound at
+    ``max(alphas)``: the loosest test keeps a SUPERSET of every other
+    lane's level-0 edges, and levels only remove edges, so that single
+    width bounds every lane at every level — the sweep is exact
+    (``ok`` all True) with one planning sync. This is the ParallelPC
+    workload (PAPERS.md, arXiv 1510.03042) as pure admission policy.
+    """
+    c = jnp.asarray(c, jnp.float32)
+    if c.ndim != 2:
+        raise ValueError(f"alpha_sweep expects one (n, n) matrix; got {c.shape}")
+    alphas = [float(a) for a in alphas]
+    if not alphas:
+        raise ValueError("alpha_sweep needs at least one alpha")
+    lmax = DEFAULT_MAX_LEVEL if max_level is None else max_level
+    taus = jnp.asarray([taus_for(m, a, lmax) for a in alphas], jnp.float32)
+    if n_prime is None:
+        n_prime = plan_n_prime(c, m, alpha=max(alphas))
+    cs = jnp.broadcast_to(c, (len(alphas),) + c.shape)
+    return pc_scan_batch(
+        cs, m, max_level=lmax, sepset_depth=sepset_depth, n_prime=n_prime,
+        cell_budget=cell_budget, orient=orient, mesh=mesh, taus=taus,
+        jitter=jitter,
+    )
 
 
 # --------------------------------------------------------------------------
@@ -397,7 +531,7 @@ def pc_scan_batch(
 # --------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _build_dense_l1():
-    return jax.jit(jax.vmap(_level1_dense, in_axes=(0, 0, 0, None)))
+    return jax.jit(jax.vmap(_level1_dense, in_axes=(0, 0, 0, 0)))
 
 
 @functools.lru_cache(maxsize=None)
@@ -408,18 +542,19 @@ def _build_orient():
 @functools.lru_cache(maxsize=None)
 def _build_level(ell, w, n_chunk, steps):
     """Jitted vmapped one-level sweep, cached on its static shape key so the
-    same compiled program serves every level/batch with that shape."""
+    same compiled program serves every level/batch with that shape. The
+    per-graph tau is a batched input (alpha may differ across lanes)."""
 
     def step(c, adj, sep, tau):
         return _level_sweep(c, adj, sep, tau, ell=ell, w=w, n_chunk=n_chunk, steps=steps)
 
-    return jax.jit(jax.vmap(step, in_axes=(0, 0, 0, None)))
+    return jax.jit(jax.vmap(step, in_axes=(0, 0, 0, 0)))
 
 
 @functools.partial(jax.jit, static_argnames=("depth",))
 def _batch_init(cs, tau0, depth):
-    """Vmapped level 0 + sepset-tensor init for a whole batch."""
-    adj = jax.vmap(lambda c: L.level0(c, tau0))(cs)
+    """Vmapped level 0 + sepset-tensor init for a whole batch (tau0: (B,))."""
+    adj = jax.vmap(L.level0)(cs, tau0)
     b, n = cs.shape[0], cs.shape[-1]
     sep = jnp.full((b, n, n, depth), -1, jnp.int32)
     sep = sep.at[..., 0].set(jnp.where(adj, -1, -2))
@@ -436,6 +571,7 @@ def scan_levels_batch(
     orient: bool = True,
     bucket: bool = True,
     mesh=None,
+    taus=None,
 ):
     """Batch PC with per-level re-planning: ONE host sync per level for all
     B graphs (the sequential loop pays B syncs per level).
@@ -451,6 +587,11 @@ def scan_levels_batch(
     feed the schedule to ``pc_scan_batch`` to run the same workload as one
     fused program with zero level syncs.
 
+    ``taus``: per-graph (B, max_level+1) threshold vectors like
+    :func:`pc_scan_batch` — lanes with different (m, alpha) probe ONE
+    shared width per level (the batch max), so mixed-alpha slots and
+    alpha sweeps plan exactly like uniform batches.
+
     mesh (core/sharding.py): shard the batch axis — the per-level width
     probe stays ONE host sync per level for the whole sharded batch (the
     max-degree reduction becomes the only cross-device collective).
@@ -463,16 +604,19 @@ def scan_levels_batch(
         max_level = DEFAULT_MAX_LEVEL
     if max_level > sepset_depth:
         raise ValueError(f"max_level={max_level} exceeds sepset_depth={sepset_depth}")
+    if taus is None:
+        taus = taus_for(m, alpha, max_level)
+    taus = jnp.broadcast_to(jnp.asarray(taus, jnp.float32), (b, max_level + 1))
     pad = 0
     b_local = b
     if mesh is not None:
         from repro.core import sharding as SH
 
-        cs, pad = _pad_shard_batch(cs, mesh)
+        cs, taus, pad = _pad_shard_batch(cs, taus, mesh)
         b_local = (b + pad) // SH.mesh_size(mesh)
     budget = max(int(cell_budget) // max(b_local, 1), 2**16)
 
-    adj, sep = _batch_init(cs, threshold(m, 0, alpha), sepset_depth)
+    adj, sep = _batch_init(cs, taus[:, 0], sepset_depth)
 
     schedule, max_degs = [], []
     for ell in range(1, max_level + 1):
@@ -484,20 +628,22 @@ def scan_levels_batch(
         if max_deg - 1 < ell:
             continue  # no graph can run this level; keep probing widths
         if ell == 1 and _use_dense_l1(n, w, budget):
-            adj, sep = _build_dense_l1()(cs, adj, sep, threshold(m, 1, alpha))
+            adj, sep = _build_dense_l1()(cs, adj, sep, taus[:, 1])
             continue
         n_chunk, steps = _plan_chunk(n, w, ell, budget)
         if steps == 0:
             continue
         fn = _build_level(ell, w, n_chunk, steps)
-        adj, sep = fn(cs, adj, sep, threshold(m, ell, alpha))
+        adj, sep = fn(cs, adj, sep, taus[:, ell])
 
     cpdag = _build_orient()(adj, sep) if orient else adj
     ok = jnp.ones((b + pad,), bool)  # widths track the live bound by construction
+    ok_levels = jnp.ones((b + pad, len(schedule)), bool)
     max_degs = (jnp.stack(max_degs, axis=-1) if max_degs
                 else jnp.zeros((b + pad, 0), jnp.int32))
     res = _trim_result(
-        ScanResult(adj=adj, cpdag=cpdag, sepsets=sep, ok=ok, max_degs=max_degs),
+        ScanResult(adj=adj, cpdag=cpdag, sepsets=sep, ok=ok, max_degs=max_degs,
+                   ok_levels=ok_levels),
         pad,
     )
     return res, tuple(schedule)
@@ -512,6 +658,7 @@ def plan_schedule(
     cell_budget: int = DEFAULT_CELL_BUDGET,
     bucket: bool = True,
     mesh=None,
+    taus=None,
 ) -> tuple:
     """Tight per-level width schedule for a batched workload.
 
@@ -521,10 +668,12 @@ def plan_schedule(
     ``pc_scan_batch`` and re-run the rare ``ok=False`` stragglers with
     ``n_prime=None``. ``bucket=False`` plans exact max-degree widths
     (fewest masked cells; one compile per exact degree). ``mesh`` shards
-    the planning pass's batch axis like :func:`scan_levels_batch`.
+    the planning pass's batch axis like :func:`scan_levels_batch`;
+    ``taus`` plans under per-graph thresholds (mixed-alpha slots).
     """
     _, schedule = scan_levels_batch(
         cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
         cell_budget=cell_budget, orient=False, bucket=bucket, mesh=mesh,
+        taus=taus,
     )
     return schedule

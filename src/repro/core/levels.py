@@ -124,7 +124,14 @@ def _unrank_dyn(t, n_dyn, n_max: int, ell: int, table):
 # --------------------------------------------------------------------------
 # shared CI math
 # --------------------------------------------------------------------------
-def _inv_spd(m, jitter=1e-8):
+#: Baseline Tikhonov jitter of every engine's SPD inverse. The serving
+#: layer's degradation ladder (repro/serve) re-runs ill-conditioned graphs
+#: with escalated multiples of this value before falling back to the
+#: stable_ref oracle — see ci_sweep's ``jitter`` parameter.
+DEFAULT_JITTER = 1e-8
+
+
+def _inv_spd(m, jitter=DEFAULT_JITTER):
     """Batched SPD inverse with Tikhonov jitter. The ℓ=2 case — the bulk of
     every PC run's ℓ≥2 work — is solved in closed form (adjugate / det):
     one fused elementwise op over the batch instead of 10⁵s of tiny LAPACK
@@ -278,15 +285,21 @@ def gather_s_cols(c_rows, c_cols, col_pos, adj, compact, counts, rows, ranks,
     return m2, ci_s, cj_s, cij, mask, s_ids
 
 
-def ci_sweep(m2, ci_s, cj_s, cij, mask, tau, *, ell: int):
+def ci_sweep(m2, ci_s, cj_s, cij, mask, tau, *, ell: int,
+             jitter: float = DEFAULT_JITTER):
     """The cuPC-S CI math on a gathered chunk: per-set inverse + shared
     vectors, then the neighbour sweep as MXU einsums. Layout-independent —
     both gather prologues feed it the same fp32 values, so its output is
-    bit-identical across the dense and row-sharded C layouts."""
+    bit-identical across the dense and row-sharded C layouts.
+
+    ``jitter`` scales the Tikhonov regularisation of the per-set inverse
+    (see :func:`_inv_spd`); the default reproduces every engine's baseline
+    behaviour bit-for-bit. The serving layer escalates it for
+    ill-conditioned graphs (repro/serve degradation ladder)."""
     if ell == 1:
         g = 1.0 / jnp.maximum(m2, 1e-8)  # scalar "inverse"
     else:
-        g = _inv_spd(m2)
+        g = _inv_spd(m2, jitter)
     u_i = jnp.einsum("ntab,ntb->nta", g, ci_s)
     var_i = 1.0 - jnp.einsum("nta,nta->nt", ci_s, u_i)
     num = cij - jnp.einsum("ntpl,ntl->ntp", cj_s, u_i)
@@ -297,7 +310,8 @@ def ci_sweep(m2, ci_s, cj_s, cij, mask, tau, *, ell: int):
     return indep & mask
 
 
-def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int):
+def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int,
+             jitter: float = DEFAULT_JITTER):
     """cuPC-S CI tests for the given (possibly sharded) row block.
 
     Returns (sep_found (n_l,T,npr) bool, s_ids (n_l,T,ell)).
@@ -305,7 +319,7 @@ def _tests_s(c, adj, compact, counts, rows, ranks, tau, *, ell: int, n_max: int)
     m2, ci_s, cj_s, cij, mask, s_ids = gather_s(
         c, adj, compact, counts, rows, ranks, ell=ell, n_max=n_max
     )
-    return ci_sweep(m2, ci_s, cj_s, cij, mask, tau, ell=ell), s_ids
+    return ci_sweep(m2, ci_s, cj_s, cij, mask, tau, ell=ell, jitter=jitter), s_ids
 
 
 def _tests_s_cols(c_rows, c_cols, col_pos, adj, compact, counts, rows, ranks,

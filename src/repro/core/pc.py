@@ -27,6 +27,7 @@ import numpy as np
 
 from . import engines as E
 from . import levels as L
+from . import validate as V
 from .cit import correlation_from_samples, threshold
 from .combinadics import MAX_LEVEL
 from .orient import cpdag_from_skeleton
@@ -73,6 +74,7 @@ def pc_from_corr(
     chunk_fn_e=None,
     bucket: bool = True,
     pipeline_depth: int = 1,
+    validate: bool = True,
 ) -> PCRun:
     """Run PC-stable given a correlation matrix c (n,n) and sample count m.
 
@@ -81,8 +83,17 @@ def pc_from_corr(
     max-degree — the legacy behaviour, kept for the compile-count probe);
     pipeline_depth ≥ 2 keeps that many rank-chunks' tests in flight per
     level on the jnp "S" worklist (bit-identical — see engines.run_level).
+
+    validate=True (default) runs core/validate.py admission checks on
+    (c, m) and raises a typed ValidationError on NaN/Inf, a non-correlation
+    matrix, or an m too small for the requested test depth — a NaN in C
+    otherwise propagates silently (NaN comparisons keep every affected
+    edge). m < n warns but runs: the paper's gene-expression datasets live
+    in that regime.
     """
     t_start = time.perf_counter()
+    if validate:
+        V.validate_corr(c, m, max_level=max_level)
     c = jnp.asarray(c, jnp.float32)
     n = c.shape[0]
     lmax = min(max_level if max_level is not None else MAX_LEVEL, sepset_depth)
@@ -193,6 +204,7 @@ def pc(
     engine="auto",
     max_level: int | None = None,
     corr: str = "auto",
+    validate: bool = True,
     **kw,
 ) -> PCRun:
     """Run PC-stable from raw samples x: (m, n).
@@ -200,8 +212,16 @@ def pc(
     corr: "kernel" computes C on the tiled MXU kernel (kernels/corr.py),
     "jnp" uses the XLA reference; "auto" picks the kernel on TPU and jnp
     elsewhere (the interpreted kernel is exact but CPU-slow for large m·n²).
+
+    validate=True (default) rejects NaN/Inf samples and constant columns
+    with typed errors (core/validate.py) — both previously flowed through
+    correlation_from_samples silently (a constant column becomes a row of
+    fabricated zero correlations, i.e. universal independence). m < n warns
+    but runs. validate=False restores the old trust-the-caller behaviour.
     """
     x = jnp.asarray(x)
+    if validate:
+        V.validate_samples(x, max_level=max_level)
     if corr not in ("auto", "kernel", "jnp"):
         raise ValueError(f"corr must be auto|kernel|jnp, got {corr!r}")
     use_kernel = corr == "kernel" or (corr == "auto" and jax.default_backend() == "tpu")
@@ -211,4 +231,6 @@ def pc(
         c = corr_kernel(x)
     else:
         c = correlation_from_samples(x)
-    return pc_from_corr(c, int(x.shape[0]), alpha=alpha, engine=engine, max_level=max_level, **kw)
+    # samples already validated and C built in-house — skip the re-check
+    return pc_from_corr(c, int(x.shape[0]), alpha=alpha, engine=engine,
+                        max_level=max_level, validate=False, **kw)

@@ -1,0 +1,184 @@
+"""Dataset / correlation-matrix admission validation — the hostile-input
+front door shared by the public entry points and the serving layer.
+
+The engine stack assumes a clean Gaussian dataset: finite samples,
+non-constant columns, enough samples for the Fisher-z thresholds to mean
+anything. Violations don't crash the traced programs — they silently
+poison them (a NaN anywhere in C makes every partial correlation of the
+affected rows NaN, `fisher_z(NaN) <= tau` is False, and the edge is
+silently KEPT; a constant column zeroes its correlations and fabricates
+independence). This module turns each failure mode into a TYPED error
+with an actionable message, raised BEFORE any device dispatch:
+
+  * :class:`NonFiniteDataError`     — NaN/Inf in samples or C
+  * :class:`ConstantColumnError`    — zero-variance column (corr undefined)
+  * :class:`RankDeficientError`     — too few samples for the requested
+                                      test depth (m ≤ max_level + 3), or
+                                      m < n in strict mode (sample
+                                      correlation necessarily singular)
+  * :class:`BadCorrelationError`    — a "correlation" matrix that isn't
+                                      (shape, symmetry, diagonal, range)
+
+`pc()` / `pc_from_corr` (core/pc.py) call these with ``strict_rank=False``
+— the paper's own gene-expression datasets have m < n by design, so that
+regime only warns. The serving layer (repro/serve) validates with
+``strict_rank=True`` at admission: a multi-tenant endpoint rejects or
+quarantines rank-deficient panels instead of serving silently biased
+graphs, and a rejected request never reaches a batch slot (its slot-mates
+are unaffected — tests/test_serve.py).
+
+All checks are host-side numpy on data the entry points are about to ship
+to the device anyway; cost is one O(m·n + n²) pass.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+
+class ValidationError(ValueError):
+    """Base class of every admission failure. ``code`` is a stable
+    machine-readable tag (the serving layer's rejection records carry it)."""
+
+    code = "invalid"
+
+
+class NonFiniteDataError(ValidationError):
+    code = "non_finite"
+
+
+class ConstantColumnError(ValidationError):
+    code = "constant_column"
+
+
+class RankDeficientError(ValidationError):
+    code = "rank_deficient"
+
+
+class BadCorrelationError(ValidationError):
+    code = "bad_correlation"
+
+
+def _as_host(x) -> np.ndarray:
+    """Materialise on host without importing jax at module import time."""
+    return np.asarray(x)
+
+
+def _check_m(m: int, n: int, max_level: int | None, strict_rank: bool):
+    """Shared sample-count guards for both entry shapes."""
+    lmax = 3 if max_level is None else int(max_level)
+    if m <= lmax + 3:
+        raise RankDeficientError(
+            f"m={m} samples cannot support conditional-independence tests up "
+            f"to level {lmax}: the Fisher-z threshold needs m - level - 3 > 0 "
+            f"(got {m - lmax - 3}). Collect more samples or lower max_level "
+            f"to at most {max(m - 4, 0)}."
+        )
+    if m < n:
+        msg = (
+            f"m={m} samples < n={n} variables: the sample correlation matrix "
+            "is rank-deficient, so conditioning sets larger than the true "
+            "rank are tested against a singular block (regularised, but "
+            "biased). Prefer more samples, a lower max_level, or the "
+            "bootstrap ensemble for stability."
+        )
+        if strict_rank:
+            raise RankDeficientError(msg)
+        warnings.warn(msg, stacklevel=3)
+
+
+def validate_samples(x, max_level: int | None = None,
+                     strict_rank: bool = False) -> tuple[int, int]:
+    """Validate a raw sample matrix x: (m, n). Returns (m, n).
+
+    Raises :class:`NonFiniteDataError` / :class:`ConstantColumnError` /
+    :class:`RankDeficientError` with actionable messages; ``strict_rank``
+    escalates the m < n warning to an error (serving admission policy).
+    """
+    x = _as_host(x)
+    if x.ndim != 2:
+        raise ValidationError(
+            f"expected a (m, n) sample matrix; got shape {x.shape}"
+        )
+    m, n = int(x.shape[0]), int(x.shape[1])
+    finite = np.isfinite(x)
+    if not finite.all():
+        bad = np.argwhere(~finite)
+        r, c = int(bad[0][0]), int(bad[0][1])
+        raise NonFiniteDataError(
+            f"samples contain {len(bad)} non-finite value(s) (first at row "
+            f"{r}, column {c}: {x[r, c]!r}). Impute or drop the affected "
+            "rows/columns before calling pc() — NaN propagates into every "
+            "partial correlation of that column and silently keeps edges."
+        )
+    span = x.max(axis=0) - x.min(axis=0)
+    const = np.flatnonzero(span == 0)
+    if const.size:
+        cols = ", ".join(str(int(k)) for k in const[:8])
+        more = "" if const.size <= 8 else f" (+{const.size - 8} more)"
+        raise ConstantColumnError(
+            f"column(s) [{cols}]{more} are constant: correlation with a "
+            "zero-variance variable is undefined, and the previous behaviour "
+            "silently reported it as 0 (fabricating independence). Drop the "
+            "constant columns (np.delete(x, cols, axis=1)) or add measurement "
+            "noise before calling pc()."
+        )
+    _check_m(m, n, max_level, strict_rank)
+    return m, n
+
+
+def validate_corr(c, m: int, max_level: int | None = None,
+                  strict_rank: bool = False,
+                  sym_tol: float = 1e-4) -> int:
+    """Validate a correlation matrix c: (n, n) plus its sample count m.
+    Returns n.
+
+    Checks shape/symmetry/unit-diagonal/[-1, 1]-range (within fp gemm
+    tolerance — everything ``cit.correlation_from_samples`` and the MXU
+    kernel produce passes bit-exactly), finiteness, and the same sample-
+    count guards as :func:`validate_samples`. Ill-CONDITIONED (but valid)
+    matrices pass — conditioning is a degradation-ladder concern
+    (repro/serve), not an admission one.
+    """
+    c = _as_host(c)
+    if c.ndim != 2 or c.shape[0] != c.shape[1]:
+        raise BadCorrelationError(
+            f"expected a square (n, n) correlation matrix; got shape {c.shape}"
+        )
+    n = int(c.shape[0])
+    finite = np.isfinite(c)
+    if not finite.all():
+        bad = np.argwhere(~finite)
+        i, j = int(bad[0][0]), int(bad[0][1])
+        raise NonFiniteDataError(
+            f"correlation matrix contains {len(bad)} non-finite value(s) "
+            f"(first at C[{i}, {j}] = {c[i, j]!r}) — typically a constant "
+            "column fed through np.corrcoef. Rebuild C with "
+            "repro.core.cit.correlation_from_samples (which validates via "
+            "pc()) or clean the offending columns."
+        )
+    if not np.allclose(c, c.T, atol=sym_tol, rtol=0.0):
+        ij = np.unravel_index(np.abs(c - c.T).argmax(), c.shape)
+        raise BadCorrelationError(
+            f"correlation matrix is not symmetric (max |C - Cᵀ| at "
+            f"{tuple(int(v) for v in ij)}: {abs(c - c.T).max():.3g}). "
+            "Symmetrise with (C + C.T) / 2 if this is fp noise from an "
+            "external pipeline."
+        )
+    diag = np.diagonal(c)
+    if np.abs(diag - 1.0).max() > 1e-3:
+        k = int(np.abs(diag - 1.0).argmax())
+        raise BadCorrelationError(
+            f"correlation diagonal must be 1 (C[{k}, {k}] = {diag[k]:.6g}). "
+            "A covariance matrix? Normalise: C = cov / sqrt(outer(d, d)) "
+            "with d = diag(cov)."
+        )
+    if np.abs(c).max() > 1.0 + 1e-5:
+        ij = np.unravel_index(np.abs(c).argmax(), c.shape)
+        raise BadCorrelationError(
+            f"correlation entries must lie in [-1, 1]; C{tuple(int(v) for v in ij)} "
+            f"= {c[ij]:.6g}. Clip or rebuild C."
+        )
+    _check_m(int(m), n, max_level, strict_rank)
+    return n

@@ -1,0 +1,142 @@
+"""Online PC serving driver: stream synthetic requests through PCService.
+
+    PYTHONPATH=src python -m repro.launch.pc_serve --requests 16 --rate 50
+    PYTHONPATH=src python -m repro.launch.pc_serve --faults   # recovery demo
+    PYTHONPATH=src python -m repro.launch.pc_serve --shard    # mesh slots
+
+The serving analogue of the prefill/decode batcher (launch/serve.py):
+build the service, feed an open-loop arrival schedule, print sustained
+requests/sec + latency percentiles and the robustness ledger (rejections,
+retries, dead letters). ``--faults`` runs the same stream under an
+injected fault plan — a forced validation failure, a certificate miss
+that must escalate, an in-flight NaN, and a slot overrun — and shows
+every request still ends as a typed outcome. See docs/serving.md.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _stream(args):
+    from repro.data.synthetic_dag import sample_gaussian_dag
+    from repro.serve import Request
+
+    rng = np.random.default_rng(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
+    out = []
+    for i, t in enumerate(arrivals):
+        n = args.n if i % 2 else max(8, args.n // 2)  # two bucket shapes
+        x, _ = sample_gaussian_dag(n=n, m=args.m, density=args.density,
+                                   seed=args.seed + 1 + i)
+        alphas = (0.005, args.alpha, 0.05) if (args.sweep and i == 1) else None
+        out.append((float(t), Request(
+            rid=f"req-{i}", x=np.asarray(x, np.float32), alpha=args.alpha,
+            alphas=alphas, max_level=args.max_level,
+            timeout_s=args.timeout_s,
+        )))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--n", type=int, default=32)
+    ap.add_argument("--m", type=int, default=1200)
+    ap.add_argument("--density", type=float, default=0.05)
+    ap.add_argument("--alpha", type=float, default=0.01)
+    ap.add_argument("--max-level", type=int, default=2)
+    ap.add_argument("--slot-size", type=int, default=8)
+    ap.add_argument("--timeout-s", type=float, default=60.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sweep", action="store_true", default=True,
+                    help="include one alpha-sweep request (default on)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard slots over all visible devices")
+    ap.add_argument("--faults", action="store_true",
+                    help="inject the demo fault plan (ManualClock)")
+    args = ap.parse_args()
+
+    from repro.serve import FaultPlan, ManualClock, PCService, ServeConfig
+
+    mesh = None
+    if args.shard:
+        import jax
+
+        from repro.core import sharding as SH
+
+        mesh = SH.make_mesh()
+        print(f"[pc_serve] sharding slots over {jax.device_count()} devices")
+
+    faults, clock = None, None
+    if args.faults:
+        faults = FaultPlan(
+            reject={"req-2"},
+            cert_miss={"req-4": 1},
+            corrupt_nan={"req-6": 1},
+            slot_delay={"req-8": 3.0},
+        )
+        clock = ManualClock()
+        print("[pc_serve] fault plan: reject req-2, cert-miss req-4, "
+              "NaN-corrupt req-6, 3s overrun on req-8's slot (2s deadline)")
+
+    kw = {"clock": clock} if clock is not None else {}
+    if faults is not None:
+        kw["faults"] = faults
+    svc = PCService(ServeConfig(slot_size=args.slot_size, mesh=mesh), **kw)
+
+    reqs = _stream(args)
+    if args.faults:  # only the overrun victim runs a tight deadline
+        for _, r in reqs:
+            if r.rid == "req-8":
+                r.timeout_s = 2.0
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(reqs) or svc.queue.pending():
+        now = time.perf_counter() - t0
+        while i < len(reqs) and (reqs[i][0] <= now or args.faults):
+            svc.submit(reqs[i][1])
+            i += 1
+        if svc.step():
+            continue
+        if svc.queue.pending():
+            rep_clock = svc.clock
+            if hasattr(rep_clock, "advance"):
+                wake = svc.queue.next_ready_at() or rep_clock.now()
+                rep_clock.advance(max(0.0, wake - rep_clock.now()) + 1e-9)
+            else:
+                time.sleep(1e-3)
+        elif i < len(reqs):
+            time.sleep(max(0.0, min(reqs[i][0] - now, 1e-3)))
+    total = time.perf_counter() - t0
+    rep = svc.report
+
+    lats = rep.latencies()
+    graphs = sum(len(v) for v in rep.delivered.values())
+    tiers = {}
+    for by in rep.delivered.values():
+        for g in by.values():
+            tiers[g.tier] = tiers.get(g.tier, 0) + 1
+    print(f"[pc_serve] {len(reqs)} requests in {total:.2f}s "
+          f"({len(rep.delivered) / total:.1f} req/s, {graphs} graphs)")
+    if lats:
+        print(f"  latency p50={np.percentile(lats, 50) * 1e3:.0f}ms "
+              f"p99={np.percentile(lats, 99) * 1e3:.0f}ms "
+              f"(service clock)")
+    print(f"  dispatches={rep.steps} tiers={tiers}")
+    print(f"  rejected={len(rep.rejections)} "
+          f"{[(r.rid, r.code) for r in rep.rejections.values()]}")
+    print(f"  dead_letters={len(rep.dead_letters)} "
+          f"{[(d.rid, d.code, d.stage) for d in rep.dead_letters]}")
+    retries = [e for e in rep.events if e["event"] == "retry"]
+    if retries:
+        print(f"  retries={len(retries)} "
+              f"{[(e['rid'], e['reason'], e['attempt']) for e in retries]}")
+
+
+if __name__ == "__main__":
+    main()

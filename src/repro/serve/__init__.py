@@ -1,0 +1,50 @@
+"""PC-as-a-service: fault-tolerant online endpoint over the batch subsystem.
+
+    svc = PCService()
+    svc.submit(Request(rid="r1", x=samples, alpha=0.01))
+    report = svc.drain()
+    graph = report.result("r1")        # GraphResult: adj/cpdag/sepsets, exact
+
+Layer map: admission (validate + bucket) → service (slots, deadlines,
+escalation ladder, degrade) → batch/scan_pc (the vmapped engine).
+serve/faults.py provides the deterministic fault-injection harness and
+virtual clock used by tests/test_serve.py. See docs/serving.md.
+"""
+from .admission import AdmissionPolicy, AdmissionQueue
+from .faults import NO_FAULTS, FaultPlan, ManualClock, MonotonicClock
+from .service import PCService, ServeConfig
+from .types import (
+    TIER_SLOT,
+    TIER_SOLO,
+    TIER_STABLE,
+    TIER_WIDER,
+    BucketKey,
+    DeadLetter,
+    GraphResult,
+    Lane,
+    Rejection,
+    Request,
+    ServiceReport,
+)
+
+__all__ = [
+    "AdmissionPolicy",
+    "AdmissionQueue",
+    "BucketKey",
+    "DeadLetter",
+    "FaultPlan",
+    "GraphResult",
+    "Lane",
+    "ManualClock",
+    "MonotonicClock",
+    "NO_FAULTS",
+    "PCService",
+    "Rejection",
+    "Request",
+    "ServeConfig",
+    "ServiceReport",
+    "TIER_SLOT",
+    "TIER_SOLO",
+    "TIER_STABLE",
+    "TIER_WIDER",
+]

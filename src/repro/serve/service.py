@@ -1,0 +1,347 @@
+"""PCService — the dispatch loop: slots, deadlines, escalation, degrade.
+
+One service instance owns an :class:`~repro.serve.admission.AdmissionQueue`
+and drains it slot by slot. Each step pops the ready lanes of ONE
+(bucket, attempt) group — same static shapes, same escalation tier — and
+runs them as a single vmapped ``pc_scan_batch`` dispatch. What comes back
+is never trusted blindly: every lane carries the in-trace ``ok``
+exactness certificate, and a lane whose certificate fails is *retried at
+a wider width schedule* instead of being delivered approximately or
+failed. The ScanResult retry contract (batch/scan_pc.py) is what makes
+this sound: the first ``ok=True`` attempt IS the exact answer, so
+escalation never reconciles anything across attempts.
+
+The escalation ladder, per lane (attempt number == rung):
+
+  rung 0            batched slot at the bucket's planned schedule
+  rungs 1..W        batched retry, widths doubled per rung and the
+                    Tikhonov jitter ladder escalated in step (W =
+                    ``ServeConfig.widen_attempts``), after exponential
+                    backoff
+  rung W+1          solo ``pc_scan`` with ``n_prime=None`` — the
+                    per-graph exact level-0 bound (certificate holds by
+                    construction on honest hardware)
+  rung W+2          ``stable_ref`` host oracle — degraded (slow) service,
+                    marked ``tier="stable-ref"``, still a real graph
+  beyond            dead letter ("retries_exhausted")
+
+Deadlines are enforced at the two places they can trip: lanes whose
+deadline passed while QUEUED are dead-lettered without burning a slot
+seat, and lanes whose slot COMPLETED after their deadline are
+dead-lettered at delivery — in both cases slot-mates are untouched.
+Assembly re-checks each lane's slot copy for finiteness (admission
+validated the pristine copy; this catches post-admission corruption —
+exactly the seam serve/faults.py injects NaNs into) and corrupt lanes
+are re-queued from their pristine source rather than dispatched.
+
+All timing flows through an injectable clock; with a ManualClock the
+whole loop is deterministic (tests/test_serve.py runs every path above
+without a single sleep).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.batch.scan_pc import pc_scan, pc_scan_batch, plan_schedule
+from repro.core import levels as L
+from repro.core.stable_ref import pc_stable_skeleton
+
+from .admission import AdmissionPolicy, AdmissionQueue
+from .faults import NO_FAULTS, MonotonicClock
+from .types import (
+    TIER_SLOT,
+    TIER_SOLO,
+    TIER_STABLE,
+    TIER_WIDER,
+    DeadLetter,
+    GraphResult,
+    Lane,
+    Rejection,
+    Request,
+    ServiceReport,
+)
+
+
+@dataclass
+class ServeConfig:
+    """Dispatch-loop knobs. ``jitter_ladder[k]`` is the regularisation of
+    widening rung k (rung 0 = every engine's baseline, so fault-free
+    slots stay bit-identical to the offline path); ``backoff_s`` seeds
+    the exponential retry backoff; ``mesh`` shards every slot's batch
+    axis over a device mesh (core/sharding.py)."""
+
+    slot_size: int = 8
+    widen_attempts: int = 2
+    jitter_ladder: tuple = (L.DEFAULT_JITTER, 1e-6, 1e-4)
+    backoff_s: float = 0.05
+    cell_budget: int = L.DEFAULT_CELL_BUDGET
+    orient: bool = True
+    mesh: object = None
+
+
+class PCService:
+    """Fault-tolerant online PC endpoint over the batch subsystem."""
+
+    def __init__(self, config: ServeConfig | None = None,
+                 policy: AdmissionPolicy | None = None, *,
+                 clock=None, faults=NO_FAULTS):
+        self.config = config or ServeConfig()
+        self.clock = clock or MonotonicClock()
+        self.faults = faults
+        self.queue = AdmissionQueue(policy, clock=self.clock, faults=faults)
+        self.report = ServiceReport()
+        self._schedules: dict = {}  # BucketKey -> planned base width tuple
+
+    # ladder geometry -------------------------------------------------------
+    @property
+    def _solo_rung(self) -> int:
+        return self.config.widen_attempts + 1
+
+    @property
+    def _stable_rung(self) -> int:
+        return self.config.widen_attempts + 2
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, req: Request):
+        out = self.queue.submit(req)
+        if isinstance(out, Rejection):
+            self.report.rejections[req.rid] = out
+            self._log("reject", rid=req.rid, code=out.code)
+        else:
+            self._log("admit", rid=req.rid, lanes=len(out), key=out[0].key)
+        return out
+
+    # -- the loop -----------------------------------------------------------
+    def step(self) -> bool:
+        """Dispatch one slot (or reap one batch of expired/backing-off
+        lanes). Returns False when nothing was ready to do."""
+        now = self.clock.now()
+        slot = self.queue.next_slot(now, self.config.slot_size)
+        if slot is None:
+            return False
+        key, attempt, lanes = slot
+        self.report.steps += 1
+
+        lanes = self._reap_expired(lanes, now, stage="queued")
+        lanes = self._screen_corruption(lanes, attempt, now)
+        if not lanes:
+            return True
+
+        if attempt >= self._stable_rung:
+            self._run_stable(lanes)
+            return True
+        if attempt >= self._solo_rung:
+            self._run_solo(lanes)
+            return True
+        self._run_slot(key, attempt, lanes)
+        return True
+
+    def drain(self, max_steps: int = 10_000) -> ServiceReport:
+        """Run until every admitted lane is delivered or dead-lettered.
+        Waits out retry backoffs (virtually on a ManualClock, by sleeping
+        on the real one); ``max_steps`` bounds pathological fault plans."""
+        for _ in range(max_steps):
+            if self.step():
+                continue
+            if self.queue.pending() == 0:
+                break
+            wake = self.queue.next_ready_at()
+            wait = max(0.0, (wake or 0.0) - self.clock.now()) + 1e-9
+            if hasattr(self.clock, "advance"):
+                self.clock.advance(wait)
+            else:
+                time.sleep(min(wait, 1.0))
+        return self.report
+
+    # -- slot guards --------------------------------------------------------
+    def _reap_expired(self, lanes, now, stage):
+        live = []
+        for ln in lanes:
+            if now > ln.deadline:
+                self._dead(ln, "deadline",
+                           f"deadline exceeded while {stage} "
+                           f"({now - ln.deadline:.3f}s past)", stage=stage)
+            else:
+                live.append(ln)
+        return live
+
+    def _screen_corruption(self, lanes, attempt, now):
+        """Finite-check the SLOT copies; corrupt lanes re-queue from their
+        pristine admission copy (bounded by the same attempt ladder)."""
+        clean = []
+        for ln in lanes:
+            c = self.faults.corrupt(ln.rid, attempt, ln.c)
+            if np.isfinite(c).all():
+                ln._slot_c = c  # the copy this dispatch will consume
+                clean.append(ln)
+                continue
+            self._log("corruption_detected", rid=ln.rid, lane=ln.lane,
+                      attempt=attempt)
+            self._retry(ln, now, reason="corruption")
+        return clean
+
+    # -- escalation tiers ---------------------------------------------------
+    def _base_schedule(self, key, lanes) -> tuple:
+        """Per-bucket tight width schedule, planned once on the bucket's
+        first slot (one pilot pass) and reused by every later slot."""
+        sched = self._schedules.get(key)
+        if sched is None:
+            cs = np.stack([ln._slot_c for ln in lanes])
+            taus = np.asarray([ln.taus for ln in lanes], np.float32)
+            sched = plan_schedule(
+                cs, lanes[0].m, max_level=key.max_level,
+                sepset_depth=self.queue.policy.sepset_depth,
+                cell_budget=self.config.cell_budget, taus=taus,
+                mesh=self.config.mesh,
+            )
+            self._schedules[key] = sched
+            self._log("plan", key=key, schedule=sched)
+        return sched
+
+    def _run_slot(self, key, attempt, lanes):
+        """Batched tier: one vmapped dispatch for the whole slot at the
+        (possibly widened) bucket schedule."""
+        cfg = self.config
+        base = self._base_schedule(key, lanes)
+        widened = tuple(min(key.n, w << attempt) for w in base) or None
+        jitter = cfg.jitter_ladder[min(attempt, len(cfg.jitter_ladder) - 1)]
+        self._log("slot_dispatch", key=key, attempt=attempt, size=len(lanes),
+                  schedule=widened, jitter=jitter,
+                  rids=[ln.rid for ln in lanes])
+        res = pc_scan_batch(
+            np.stack([ln._slot_c for ln in lanes]), lanes[0].m,
+            max_level=key.max_level,
+            sepset_depth=self.queue.policy.sepset_depth,
+            n_prime=widened if widened is not None else 1,
+            cell_budget=cfg.cell_budget, orient=cfg.orient, mesh=cfg.mesh,
+            taus=np.asarray([ln.taus for ln in lanes], np.float32),
+            jitter=jitter,
+        )
+        ok = np.asarray(res.ok).reshape(len(lanes))
+        now = self._after_dispatch(lanes)
+        for i, ln in enumerate(lanes):
+            ok_i = bool(ok[i]) and not self.faults.force_cert_miss(ln.rid, attempt)
+            if not ok_i:
+                self._log("cert_miss", rid=ln.rid, lane=ln.lane, attempt=attempt)
+                self._retry(ln, now, reason="cert_miss")
+                continue
+            self._deliver(ln, now, attempt,
+                          tier=TIER_SLOT if attempt == 0 else TIER_WIDER,
+                          adj=np.asarray(res.adj[i]),
+                          cpdag=np.asarray(res.cpdag[i]),
+                          sepsets=np.asarray(res.sepsets[i]), exact=True)
+
+    def _run_solo(self, lanes):
+        """Second-to-last rung: per-graph exact run (``n_prime=None`` plans
+        this graph's own level-0 bound — the certificate holds by the
+        retry contract unless the fault plan says otherwise)."""
+        attempt = self._solo_rung
+        for ln in lanes:
+            self._log("solo_dispatch", rid=ln.rid, lane=ln.lane)
+            res = pc_scan(
+                ln._slot_c, ln.m, max_level=ln.key.max_level,
+                sepset_depth=self.queue.policy.sepset_depth, n_prime=None,
+                cell_budget=self.config.cell_budget, orient=self.config.orient,
+                taus=np.asarray(ln.taus, np.float32),
+            )
+            now = self._after_dispatch([ln])
+            ok = bool(np.asarray(res.ok)) and not self.faults.force_cert_miss(
+                ln.rid, attempt)
+            if not ok:
+                self._log("cert_miss", rid=ln.rid, lane=ln.lane, attempt=attempt)
+                self._retry(ln, now, reason="cert_miss")
+                continue
+            self._deliver(ln, now, attempt, tier=TIER_SOLO,
+                          adj=np.asarray(res.adj), cpdag=np.asarray(res.cpdag),
+                          sepsets=np.asarray(res.sepsets), exact=True)
+
+    def _run_stable(self, lanes):
+        """Last rung before the dead-letter box: the serial host oracle.
+        Slow and certificate-free, but structurally incapable of the
+        width-capping failure mode — degraded service beats none."""
+        attempt = self._stable_rung
+        depth = self.queue.policy.sepset_depth
+        for ln in lanes:
+            if self.faults.force_cert_miss(ln.rid, attempt):
+                self._dead(ln, "retries_exhausted",
+                           "every escalation tier (incl. stable-ref) failed",
+                           stage="exhausted")
+                continue
+            self._log("stable_dispatch", rid=ln.rid, lane=ln.lane)
+            ref = pc_stable_skeleton(np.asarray(ln._slot_c, np.float64), ln.m,
+                                     alpha=ln.alpha, max_level=ln.key.max_level)
+            adj = np.asarray(ref.adj, bool)
+            sep = _sepsets_to_tensor(ref.sepsets, adj, depth)
+            cpdag = _orient_host(adj, sep) if self.config.orient else adj
+            now = self._after_dispatch([ln])
+            self._log("degraded", rid=ln.rid, lane=ln.lane)
+            self._deliver(ln, now, attempt, tier=TIER_STABLE,
+                          adj=adj, cpdag=cpdag, sepsets=sep, exact=False)
+
+    # -- outcomes -----------------------------------------------------------
+    def _after_dispatch(self, lanes) -> float:
+        """Advance virtual time by any injected slot delay; return now."""
+        delay = self.faults.delay_for([ln.rid for ln in lanes])
+        if delay > 0 and hasattr(self.clock, "advance"):
+            self.clock.advance(delay)
+        return self.clock.now()
+
+    def _retry(self, ln: Lane, now: float, reason: str):
+        nxt = ln.attempt + 1
+        if nxt > self._stable_rung:
+            self._dead(ln, "retries_exhausted",
+                       f"ladder exhausted after {nxt} attempts ({reason})",
+                       stage="exhausted")
+            return
+        ln.attempt = nxt
+        ln.not_before = now + self.config.backoff_s * (2 ** (nxt - 1))
+        self._log("retry", rid=ln.rid, lane=ln.lane, attempt=nxt,
+                  not_before=ln.not_before, reason=reason)
+        self.queue.requeue(ln)
+
+    def _deliver(self, ln: Lane, now: float, attempt: int, *, tier, adj,
+                 cpdag, sepsets, exact):
+        expired = self._reap_expired([ln], now, stage="completed")
+        if not expired:  # deadline tripped at delivery; result discarded
+            return
+        self.report.delivered.setdefault(ln.rid, {})[ln.lane] = GraphResult(
+            rid=ln.rid, lane=ln.lane, alpha=ln.alpha, adj=adj, cpdag=cpdag,
+            sepsets=sepsets, exact=exact, tier=tier, attempts=attempt + 1,
+            latency_s=now - ln.submitted_at,
+        )
+        self._log("delivered", rid=ln.rid, lane=ln.lane, tier=tier,
+                  attempts=attempt + 1)
+
+    def _dead(self, ln: Lane, code: str, message: str, stage: str):
+        self.report.dead_letters.append(DeadLetter(
+            rid=ln.rid, lane=ln.lane, code=code, message=message,
+            stage=stage, attempts=ln.attempt,
+        ))
+        self._log("dead_letter", rid=ln.rid, lane=ln.lane, code=code,
+                  stage=stage)
+
+    def _log(self, event: str, **info):
+        self.report.events.append({"event": event, **info})
+
+
+def _sepsets_to_tensor(sepsets: dict, adj: np.ndarray, depth: int) -> np.ndarray:
+    """stable_ref's {(i, j) -> tuple} sepsets in the engines' tensor
+    convention: -1 padded, -2 sentinel in slot 0 for empty (level-0)
+    sepsets of removed edges."""
+    n = adj.shape[0]
+    sep = np.full((n, n, depth), -1, np.int32)
+    sep[..., 0] = np.where(adj, -1, -2)
+    for (i, j), s in sepsets.items():
+        row = [-2] if not s else list(s[:depth])
+        sep[i, j, : len(row)] = row
+        sep[j, i, : len(row)] = row
+    return sep
+
+
+def _orient_host(adj: np.ndarray, sep: np.ndarray) -> np.ndarray:
+    from repro.core.orient import cpdag_from_skeleton
+
+    return np.asarray(cpdag_from_skeleton(adj, sep))

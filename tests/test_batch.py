@@ -133,6 +133,82 @@ def test_scan_ok_flags_degree_capped_runs():
     assert not bool(capped.ok)
 
 
+def test_ok_levels_factorise_ok_and_back_the_retry_contract():
+    """ScanResult.ok_levels is the per-level factorisation of ok, names the
+    capped level, and re-running the flagged graph unconstrained yields the
+    exact answer bit-identically (the serving layer's escalation relies on
+    exactly this contract — see the ScanResult docstring)."""
+    m = 2500
+    c = _corr(20, m, 0.3, 7)
+    capped = pc_scan(c, m, max_level=2, n_prime=2)
+    ok_levels = np.asarray(capped.ok_levels)
+    assert ok_levels.shape == (2,)
+    assert bool(capped.ok) == bool(ok_levels.all()) is False
+    retried = pc_scan(c, m, max_level=2, n_prime=None)
+    exact = pc_scan(c, m, max_level=2)
+    assert bool(retried.ok)
+    np.testing.assert_array_equal(np.asarray(retried.adj), np.asarray(exact.adj))
+    np.testing.assert_array_equal(np.asarray(retried.sepsets),
+                                  np.asarray(exact.sepsets))
+
+
+def test_taus_as_data_bit_identical_to_alpha():
+    """Explicit per-level tau vectors (trace data) reproduce the
+    (m, alpha)-derived run bit-for-bit — the contract that lets one
+    compiled program serve every (m, alpha) of a shape."""
+    from repro.batch.scan_pc import taus_for
+
+    m = 2000
+    c = _corr(16, m, 0.2, 5)
+    base = pc_scan(c, m, alpha=0.03, max_level=2)
+    via_taus = pc_scan(c, m, max_level=2, taus=taus_for(m, 0.03, 2))
+    np.testing.assert_array_equal(np.asarray(base.adj), np.asarray(via_taus.adj))
+    np.testing.assert_array_equal(np.asarray(base.sepsets),
+                                  np.asarray(via_taus.sepsets))
+
+
+def test_mixed_alpha_batch_lanes_match_solo_runs():
+    """One pc_scan_batch dispatch with per-lane tau vectors = the solo runs
+    at each lane's alpha, bit-identically (mixed-alpha serving slots)."""
+    from repro.batch.scan_pc import taus_for
+
+    m = 2000
+    c = _corr(16, m, 0.2, 6)
+    alphas = (0.005, 0.05)
+    taus = np.asarray([taus_for(m, a, 2) for a in alphas], np.float32)
+    res = pc_scan_batch(jnp.stack([c, c]), m, max_level=2,
+                        n_prime=plan_n_prime(c, m, alpha=max(alphas)),
+                        taus=taus)
+    assert bool(np.asarray(res.ok).all())
+    for k, a in enumerate(alphas):
+        solo = pc_scan(c, m, alpha=a, max_level=2)
+        np.testing.assert_array_equal(np.asarray(res.adj[k]),
+                                      np.asarray(solo.adj))
+        np.testing.assert_array_equal(np.asarray(res.sepsets[k]),
+                                      np.asarray(solo.sepsets))
+
+
+def test_alpha_sweep_reuses_one_corr_lane_parity():
+    """ISSUE-6 satellite (ROADMAP alpha-sweep follow-on): alpha_sweep over
+    ONE correlation matrix is exact (ok all True via planning at the
+    loosest alpha) and every lane is bit-identical to its solo pc_scan."""
+    from repro.batch.scan_pc import alpha_sweep
+
+    m = 2500
+    c = _corr(18, m, 0.25, 8)
+    alphas = (0.001, 0.01, 0.1)
+    res = alpha_sweep(c, m, alphas, max_level=2)
+    assert bool(np.asarray(res.ok).all())
+    for k, a in enumerate(alphas):
+        solo = pc_scan(c, m, alpha=a, max_level=2)
+        np.testing.assert_array_equal(np.asarray(res.adj[k]),
+                                      np.asarray(solo.adj))
+        np.testing.assert_array_equal(np.asarray(res.sepsets[k]),
+                                      np.asarray(solo.sepsets))
+        np.testing.assert_array_equal(np.asarray(res.cpdag[k]),
+                                      np.asarray(solo.cpdag))
+
+
 def test_plan_n_prime_bounds_level0_degree():
     m = 2000
     cs = jnp.stack([_corr(16, m, 0.25, seed) for seed in range(3)])

@@ -290,3 +290,75 @@ def test_property_skeleton_subset_of_moral_structure(seed):
     # symmetry + no self loops
     np.testing.assert_array_equal(run.adj, run.adj.T)
     assert not run.adj.diagonal().any()
+
+
+# ------------------------------------------------------ entry-point validation
+def test_constant_column_rejected_not_silent():
+    """Regression (ISSUE-6): a constant column used to flow through
+    correlation_from_samples as a row of fabricated zero correlations —
+    universal "independence" with silent-NaN risk downstream. It must now
+    die at the door as a typed, actionable error naming the column."""
+    from repro.core.validate import ConstantColumnError
+
+    x, _ = sample_gaussian_dag(n=10, m=500, density=0.2, seed=0)
+    x = np.asarray(x).copy()
+    x[:, 4] = 3.25
+    with pytest.raises(ConstantColumnError, match=r"\[4\]"):
+        pc(x, alpha=0.01, engine="S")
+
+
+def test_nonfinite_inputs_rejected_with_typed_errors():
+    from repro.core.validate import NonFiniteDataError
+
+    x, _ = sample_gaussian_dag(n=10, m=500, density=0.2, seed=1)
+    x = np.asarray(x).copy()
+    x[7, 2] = np.nan
+    with pytest.raises(NonFiniteDataError):
+        pc(x)
+    c = np.asarray(correlation_from_samples(
+        jnp.asarray(sample_gaussian_dag(n=10, m=500, density=0.2, seed=1)[0])))
+    c_bad = c.copy()
+    c_bad[1, 2] = c_bad[2, 1] = np.inf
+    with pytest.raises(NonFiniteDataError):
+        pc_from_corr(c_bad, 500)
+
+
+def test_bad_correlation_matrix_rejected():
+    from repro.core.validate import BadCorrelationError
+
+    c = np.asarray(correlation_from_samples(
+        jnp.asarray(sample_gaussian_dag(n=8, m=400, density=0.2, seed=2)[0])))
+    asym = c.copy()
+    asym[0, 1] += 0.05
+    with pytest.raises(BadCorrelationError):
+        pc_from_corr(asym, 400)
+    cov = c * 4.0  # a covariance is not a correlation
+    with pytest.raises(BadCorrelationError):
+        pc_from_corr(cov, 400)
+
+
+def test_m_guards_warn_or_reject():
+    """m < n (the paper's gene-expression regime) warns but RUNS; too few
+    samples for the requested depth is a hard typed error; strict mode
+    (the serving admission policy) escalates m < n to an error."""
+    from repro.core.validate import RankDeficientError, validate_corr
+
+    x, _ = sample_gaussian_dag(n=12, m=500, density=0.2, seed=3)
+    c = np.asarray(correlation_from_samples(jnp.asarray(x)))
+    with pytest.warns(UserWarning, match="rank-deficient"):
+        run = pc_from_corr(c, 10, max_level=1)
+    assert run.adj.shape == (12, 12)
+    with pytest.raises(RankDeficientError):
+        pc_from_corr(c, 10, max_level=7)  # m - level - 3 = 0: no valid test
+    with pytest.raises(RankDeficientError):
+        validate_corr(c, 10, max_level=1, strict_rank=True)
+
+
+def test_validate_false_restores_trusting_entry():
+    """validate=False is the explicit opt-out for callers that already
+    validated upstream (pc() itself uses it when delegating)."""
+    x, _ = sample_gaussian_dag(n=10, m=500, density=0.2, seed=4)
+    x = np.asarray(x).copy()
+    x[:, 0] = 1.0  # constant column: allowed through when opted out
+    run = pc(x, engine="S", validate=False)
+    assert run.adj.shape == (10, 10)

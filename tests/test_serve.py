@@ -1,0 +1,321 @@
+"""Serving layer (repro/serve/): admission validation + bucketing,
+slot dispatch, certificate-driven retry escalation, deadline handling,
+degradation ladder, and the deterministic fault-injection harness.
+
+Every test runs on a ManualClock — no sleeps, no flaky timing: injected
+slot delays and deadline expiries are exact arithmetic on virtual time.
+The core contract under test: co-tenancy in a slot NEVER changes an
+answer (every delivered graph is bit-identical to a solo ``pc_scan`` of
+the same data), and every admitted lane ends as exactly one typed
+outcome (GraphResult, Rejection, or DeadLetter)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.batch.scan_pc import pc_scan
+from repro.core.cit import correlation_from_samples
+from repro.serve import (
+    TIER_SOLO,
+    TIER_STABLE,
+    TIER_WIDER,
+    AdmissionPolicy,
+    FaultPlan,
+    ManualClock,
+    PCService,
+    Rejection,
+    Request,
+    ServeConfig,
+)
+
+pytestmark = pytest.mark.serve
+
+M = 400
+
+
+def _x(n, seed, m=M):
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    x, _ = sample_gaussian_dag(n=n, m=m, density=0.12, seed=seed)
+    return np.asarray(x, np.float32)
+
+
+def _solo(x, alpha=0.01, max_level=2):
+    c = np.asarray(correlation_from_samples(x))
+    return pc_scan(c, x.shape[0], alpha=alpha, max_level=max_level)
+
+
+def _svc(faults=None, **cfg):
+    cfg.setdefault("backoff_s", 0.01)
+    kw = {"clock": ManualClock()}
+    if faults is not None:
+        kw["faults"] = faults
+    return PCService(ServeConfig(**cfg), **kw)
+
+
+def _assert_parity(g, x):
+    ref = _solo(x, alpha=g.alpha)
+    np.testing.assert_array_equal(g.adj, np.asarray(ref.adj))
+    np.testing.assert_array_equal(g.sepsets, np.asarray(ref.sepsets))
+    np.testing.assert_array_equal(g.cpdag, np.asarray(ref.cpdag))
+
+
+# ------------------------------------------------------------- admission
+def test_invalid_requests_rejected_without_poisoning_slot():
+    """ISSUE-6 acceptance: hostile payloads die at the door with typed
+    codes; the valid slot-mate they would have shared a batch with is
+    delivered bit-identical to its solo run."""
+    svc = _svc()
+    good = _x(12, 1)
+    nan = good.copy()
+    nan[3, 4] = np.nan
+    const = good.copy()
+    const[:, 2] = 1.0
+    svc.submit(Request(rid="good", x=good))
+    assert isinstance(svc.submit(Request(rid="nan", x=nan)), Rejection)
+    assert isinstance(svc.submit(Request(rid="const", x=const)), Rejection)
+    # rank-deficient: strict at the serving door (m < n)
+    assert isinstance(
+        svc.submit(Request(rid="thin", x=_x(12, 2, m=10), max_level=1)),
+        Rejection)
+    # malformed correlation payloads
+    bad_c = np.asarray(correlation_from_samples(good)).copy()
+    bad_c[0, 1] += 0.1
+    assert isinstance(svc.submit(Request(rid="asym", c=bad_c, m=M)), Rejection)
+    assert isinstance(
+        svc.submit(Request(rid="no_m", c=np.eye(12, dtype=np.float32))),
+        Rejection)
+
+    rep = svc.drain()
+    assert {r.code for r in rep.rejections.values()} == {
+        "non_finite", "constant_column", "rank_deficient",
+        "bad_correlation", "invalid"}
+    assert not rep.dead_letters
+    assert set(rep.delivered) == {"good"}
+    _assert_parity(rep.result("good"), good)
+
+
+def test_duplicate_rid_rejected():
+    svc = _svc()
+    svc.submit(Request(rid="r", x=_x(10, 1)))
+    rej = svc.submit(Request(rid="r", x=_x(10, 2)))
+    assert isinstance(rej, Rejection) and rej.code == "duplicate"
+
+
+def test_quarantine_keeps_rejected_payloads():
+    svc = PCService(policy=AdmissionPolicy(quarantine=True),
+                    clock=ManualClock())
+    bad = _x(10, 1)
+    bad[0, 0] = np.inf
+    svc.submit(Request(rid="q", x=bad))
+    assert [r.rid for r in svc.queue.quarantined] == ["q"]
+
+
+def test_bucketing_stratifies_by_shape():
+    """Different n → different buckets; same data+alpha → shared bucket."""
+    svc = _svc()
+    svc.submit(Request(rid="a", x=_x(10, 1)))
+    svc.submit(Request(rid="b", x=_x(10, 1)))
+    svc.submit(Request(rid="c", x=_x(14, 2)))
+    keys = set(svc.queue.buckets)
+    assert len(keys) == 2
+    assert {k.n for k in keys} == {10, 14}
+
+
+# ------------------------------------------- certificate retry escalation
+def test_forced_cert_miss_retries_wider_and_converges():
+    """ISSUE-6 acceptance: an ok=False graph is retried in a wider bucket
+    and converges bit-identical to a solo pc_scan; its slot-mate is
+    delivered on the first attempt, unaffected."""
+    x = _x(12, 3)
+    svc = _svc(faults=FaultPlan(cert_miss={"miss": 1}))
+    svc.submit(Request(rid="miss", x=x))
+    svc.submit(Request(rid="mate", x=x))
+    rep = svc.drain()
+    g = rep.result("miss")
+    assert g.tier == TIER_WIDER and g.attempts == 2
+    _assert_parity(g, x)
+    assert rep.result("mate").attempts == 1
+    retries = [e for e in rep.events if e["event"] == "retry"]
+    assert [(e["rid"], e["reason"]) for e in retries] == [("miss", "cert_miss")]
+
+
+def test_natural_cert_miss_from_narrow_schedule():
+    """No faults: plant a deliberately undersized base schedule in the
+    bucket cache so attempt 0 genuinely degree-caps, and verify the REAL
+    in-trace certificate drives escalation to the exact answer."""
+    x = _x(14, 4)
+    svc = _svc()
+    lanes = svc.submit(Request(rid="n", x=x))
+    svc._schedules[lanes[0].key] = (1, 1)  # width 1 cannot bound level 1
+    rep = svc.drain()
+    g = rep.result("n")
+    assert g.attempts > 1 and g.tier in (TIER_WIDER, TIER_SOLO)
+    _assert_parity(g, x)
+    assert any(e["event"] == "cert_miss" for e in rep.events)
+
+
+def test_exhausted_ladder_dead_letters():
+    svc = _svc(faults=FaultPlan(cert_miss={"x": 99}), widen_attempts=1)
+    svc.submit(Request(rid="x", x=_x(10, 5)))
+    rep = svc.drain()
+    assert not rep.delivered
+    (dl,) = rep.dead_letters
+    assert dl.code == "retries_exhausted" and dl.rid == "x"
+
+
+def test_degradation_ladder_falls_back_to_stable_ref():
+    """Certificate forced to miss through every batched rung AND the solo
+    exact rung → the stable_ref host oracle serves a degraded (exact=False
+    flagged) result whose skeleton still matches the solo run."""
+    x = _x(10, 6)
+    svc = _svc(faults=FaultPlan(cert_miss={"d": 3}), widen_attempts=1)
+    svc.submit(Request(rid="d", x=x))
+    rep = svc.drain()
+    g = rep.result("d")
+    assert g.tier == TIER_STABLE and not g.exact
+    np.testing.assert_array_equal(g.adj, np.asarray(_solo(x).adj))
+    assert any(e["event"] == "degraded" for e in rep.events)
+
+
+def test_jitter_ladder_escalates_with_attempts():
+    """Widened retries escalate the Tikhonov rung: the dispatch log carries
+    the configured ladder values in attempt order."""
+    svc = _svc(faults=FaultPlan(cert_miss={"j": 2}),
+               jitter_ladder=(1e-8, 1e-6, 1e-4), widen_attempts=2)
+    svc.submit(Request(rid="j", x=_x(10, 7)))
+    rep = svc.drain()
+    jits = [e["jitter"] for e in rep.events if e["event"] == "slot_dispatch"]
+    assert jits == [1e-8, 1e-6, 1e-4]
+    _assert_parity(rep.result("j"), _x(10, 7))
+
+
+# ------------------------------------------------------------- deadlines
+def test_deadline_expired_in_queue_dead_letters_without_dispatch():
+    svc = _svc()
+    svc.submit(Request(rid="late", x=_x(10, 8), timeout_s=5.0))
+    svc.clock.advance(10.0)
+    rep = svc.drain()
+    (dl,) = rep.dead_letters
+    assert dl.rid == "late" and dl.code == "deadline" and dl.stage == "queued"
+    assert not any(e["event"] == "slot_dispatch" for e in rep.events)
+
+
+def test_deadline_during_slot_dead_letters_while_mates_complete():
+    """ISSUE-6 acceptance: a slot overrun past one lane's deadline produces
+    a dead-letter for that lane while the rest of the slot delivers."""
+    x = _x(12, 9)
+    svc = _svc(faults=FaultPlan(slot_delay={"late": 10.0}))
+    svc.submit(Request(rid="late", x=x, timeout_s=5.0))
+    svc.submit(Request(rid="mate", x=x, timeout_s=60.0))
+    rep = svc.drain()
+    (dl,) = rep.dead_letters
+    assert (dl.rid, dl.code, dl.stage) == ("late", "deadline", "completed")
+    assert set(rep.delivered) == {"mate"}
+    _assert_parity(rep.result("mate"), x)
+
+
+# ------------------------------------------------------------ corruption
+def test_injected_nan_corruption_is_screened_and_retried():
+    """Post-admission corruption of the SLOT copy is caught by the
+    assembly finite-check; the retry re-assembles from the pristine
+    admission copy and delivers the exact graph."""
+    x = _x(10, 10)
+    svc = _svc(faults=FaultPlan(corrupt_nan={"p": 1}))
+    svc.submit(Request(rid="p", x=x))
+    rep = svc.drain()
+    assert any(e["event"] == "corruption_detected" for e in rep.events)
+    _assert_parity(rep.result("p"), x)
+
+
+def test_persistent_corruption_dead_letters():
+    svc = _svc(faults=FaultPlan(corrupt_nan={"p": 99}), widen_attempts=0)
+    svc.submit(Request(rid="p", x=_x(10, 10)))
+    rep = svc.drain()
+    assert not rep.delivered
+    assert rep.dead_letters[0].code == "retries_exhausted"
+
+
+# ------------------------------------------------------------ alpha sweep
+def test_alpha_sweep_request_one_bucket_per_lane_parity():
+    """A sweep fans into sibling lanes of ONE bucket (one dispatch) and
+    each lane is bit-identical to its solo run at that alpha."""
+    x = _x(12, 11)
+    alphas = (0.001, 0.01, 0.05)
+    svc = _svc()
+    svc.submit(Request(rid="sw", x=x, alphas=alphas))
+    assert len(svc.queue.buckets) == 1
+    rep = svc.drain()
+    assert rep.steps == 1
+    for k, a in enumerate(alphas):
+        g = rep.result("sw", k)
+        assert g.alpha == a
+        _assert_parity(g, x)
+
+
+# --------------------------------------------------- sharded slot dispatch
+def test_sharded_slots_bit_identical():
+    """With >1 visible devices (CI forces 8 host devices) the service
+    shards every slot's batch axis; results must not change."""
+    import jax
+
+    if jax.device_count() < 2:
+        pytest.skip("needs a multi-device mesh (XLA_FLAGS forced host count)")
+    from repro.core import sharding as SH
+
+    x = _x(12, 12)
+    svc = PCService(ServeConfig(mesh=SH.make_mesh()), clock=ManualClock())
+    svc.submit(Request(rid="a", x=x))
+    svc.submit(Request(rid="b", x=_x(12, 13)))
+    rep = svc.drain()
+    _assert_parity(rep.result("a"), x)
+    _assert_parity(rep.result("b"), _x(12, 13))
+
+
+# ----------------------------------------------------- admission property
+@settings(max_examples=5, deadline=None)
+@given(st.data())
+def test_property_bucketed_slots_preserve_solo_parity(data):
+    """Property (ISSUE-6 satellite): for a random mix of requests —
+    shapes, alphas, a fault-injected certificate miss, and a deadline
+    expiry — bucketed slot execution preserves bit-parity with a
+    sequential solo pc_scan per request, and every lane ends as exactly
+    one typed outcome."""
+    n_req = data.draw(st.integers(2, 4), label="n_req")
+    ns = [10, 12, 14]
+    reqs = []
+    for i in range(n_req):
+        n = ns[data.draw(st.integers(0, 2), label=f"n{i}")]
+        alpha = (0.005, 0.01, 0.05)[data.draw(st.integers(0, 2), label=f"a{i}")]
+        reqs.append((f"r{i}", _x(n, 40 + i), alpha))
+    miss_rid = f"r{data.draw(st.integers(0, n_req - 1), label='miss')}"
+    expire = data.draw(st.integers(0, 1), label="expire") == 1
+
+    faults = FaultPlan(cert_miss={miss_rid: 1})
+    expired_rid = None
+    if expire and n_req > 1:
+        expired_rid = next(r for r, _, _ in reqs if r != miss_rid)
+        faults.slot_delay[expired_rid] = 10.0
+    svc = _svc(faults=faults)
+    for rid, x, alpha in reqs:
+        svc.submit(Request(
+            rid=rid, x=x, alpha=alpha,
+            timeout_s=5.0 if rid == expired_rid else 1e6))
+    rep = svc.drain()
+
+    outcomes = {rid: ("delivered" if rid in rep.delivered else None)
+                for rid, _, _ in reqs}
+    for dl in rep.dead_letters:
+        assert outcomes[dl.rid] is None, "lane delivered AND dead-lettered"
+        outcomes[dl.rid] = "dead"
+    assert all(outcomes.values()), f"unaccounted lanes: {outcomes}"
+    if expired_rid is not None:
+        assert outcomes[expired_rid] == "dead"
+    for rid, x, alpha in reqs:
+        if rid not in rep.delivered:
+            continue
+        g = rep.result(rid)
+        ref = pc_scan(np.asarray(correlation_from_samples(x)), x.shape[0],
+                      alpha=alpha, max_level=2)
+        np.testing.assert_array_equal(g.adj, np.asarray(ref.adj))
+        np.testing.assert_array_equal(g.sepsets, np.asarray(ref.sepsets))
+        np.testing.assert_array_equal(g.cpdag, np.asarray(ref.cpdag))
