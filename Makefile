@@ -2,8 +2,8 @@
 PY ?= python
 
 .PHONY: test verify-kernels verify-batch verify-distributed verify-serve \
-        lint docs-check bench-pc bench-pc-batch bench-pc-distributed \
-        bench-pc-grid bench-pc-serve bench-check ci
+        verify-obs lint docs-check bench-pc bench-pc-batch \
+        bench-pc-distributed bench-pc-grid bench-pc-serve bench-check ci
 
 test:  ## tier-1 suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -21,6 +21,10 @@ verify-distributed:  ## sharding suite (row-sharded C + sharded batch axis) on a
 verify-serve:  ## serving layer: admission + fault-injection recovery paths (virtual clock, no sleeps)
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	  PYTHONPATH=src $(PY) -m pytest -q -m serve tests/test_serve.py
+
+verify-obs:  ## observability layer: spans/metrics/journals + zero-overhead contract
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	  PYTHONPATH=src $(PY) -m pytest -q -m obs tests/test_obs.py
 
 lint:  ## ruff over the python tree (same invocation as CI)
 	ruff check src tests benchmarks scripts

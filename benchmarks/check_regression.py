@@ -23,6 +23,13 @@ itself) and FAILS on structural regressions:
 Raw timings are NOT gated (shared CI runners make them advisory); the
 fresh JSON is uploaded as a CI artifact instead. Wired as a non-blocking
 step in .github/workflows/ci.yml and as ``make bench-check``.
+
+Phase localization (advisory, never gating): benches that emit an obs
+journal (results/<section>.journal.jsonl — pc_grid and pc_serve do)
+get a per-phase timing summary printed next to the verdict, with the
+baseline ``phase_breakdown`` totals diffed against the fresh ones where
+the payload carries them — so a wall-time regression points at the
+guilty phase (gather vs grid-sweep vs commit), not just the total.
 """
 from __future__ import annotations
 
@@ -116,6 +123,53 @@ def dropped_parity_flags(base, fresh) -> list[str]:
     return [p for p in parity_flags(base) if p not in fresh_flags]
 
 
+def phase_report(name: str, baseline: dict) -> None:
+    """Advisory per-phase timing summary from a bench's obs journal
+    (results/<name>.journal.jsonl), printed so a regression in the gated
+    totals can be localized to a phase. Never gates: journals are wall
+    time on shared runners. When both the committed baseline and the
+    fresh payload carry ``phase_breakdown.totals_s``, the largest
+    relative growth is named explicitly."""
+    path = RESULTS / f"{name}.journal.jsonl"
+    if not path.exists():
+        return
+    try:
+        from repro.obs.journal import phase_summary, read_journal
+    except ImportError:  # run without PYTHONPATH=src — skip the advisory
+        return
+    try:
+        recs = read_journal(str(path))
+    except (OSError, json.JSONDecodeError):
+        return
+    phases = phase_summary(recs, depth=1)
+    if phases:
+        top = sorted(phases.items(), key=lambda kv: -kv[1])
+        print(f"[bench-check] {name} phases (journal, advisory): "
+              + ", ".join(f"{k}={v:.3f}s" for k, v in top))
+    leaves = phase_summary(recs, depth=2)
+    if leaves:
+        hot = max(leaves, key=leaves.get)
+        print(f"[bench-check] {name} hottest leaf phase: "
+              f"{hot}={leaves[hot]:.3f}s")
+
+    # baseline-vs-fresh phase totals, when the payload records them
+    base = _SECTION_BASE.get(name, lambda b: b.get(name))(baseline) or {}
+    fresh_path = RESULTS / f"{name}.json"
+    try:
+        fresh = json.loads(fresh_path.read_text()) if fresh_path.exists() else {}
+    except (OSError, json.JSONDecodeError):
+        fresh = {}
+    b_tot = (base.get("phase_breakdown") or {}).get("totals_s") or {}
+    f_tot = (fresh.get("phase_breakdown") or {}).get("totals_s") or {}
+    shared = [k for k in b_tot if k in f_tot and b_tot[k]]
+    if shared:
+        growth = {k: f_tot[k] / b_tot[k] for k in shared}
+        worst = max(growth, key=growth.get)
+        print(f"[bench-check] {name} phase drift vs baseline (advisory): "
+              + ", ".join(f"{k} x{growth[k]:.2f}" for k in shared)
+              + f" — largest: {worst}")
+
+
 def check_section(name: str, baseline: dict) -> list[str]:
     problems = []
     base = _SECTION_BASE.get(name, lambda b: b.get(name))(baseline)
@@ -180,6 +234,7 @@ def main(argv=None) -> int:
     problems = []
     for name in args.sections:
         problems += check_section(name, baseline)
+        phase_report(name, baseline)
 
     if problems:
         for p in problems:

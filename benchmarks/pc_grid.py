@@ -1,4 +1,5 @@
-"""Grid-resident engine benchmark: dispatch collapse + wall time (ISSUE 5).
+"""Grid-resident engine benchmark: dispatch collapse + wall time (ISSUE 5)
+plus the obs-layer phase breakdown (ISSUE 7).
 
 Times the chunked jnp cuPC-S engine against the grid-resident "S-grid"
 engine (kernels/sgrid.py: the combo-rank loop as a sequential Pallas grid
@@ -11,6 +12,19 @@ trend, parity-gated by ``grid_parity_ok`` (skeleton, sepsets AND CPDAG
 bit-equality — a fast wrong answer is not a result;
 benchmarks/check_regression.py fails on a flipped flag).
 
+Phase profiling (the ROADMAP's "make S-grid win wall-clock" item needs to
+know WHERE a launch's time goes): the fused engine runs gather, grid
+sweep and commit inside one jitted program, so its journal can only show
+per-level totals. ``_phase_profile`` reconstructs the same level loop
+with the three stages as SEPARATE jitted dispatches — ``levels.gather_s``
+→ ``kernels.ops.ci_shared_grid`` (+ winners) → ``levels._global_commit``
+— each wrapped in an obs span that blocks at exit, and asserts the
+reconstruction stays bit-identical to the fused run ("phase_parity_ok").
+The whole bench runs under an obs journal
+(benchmarks/results/pc_grid.journal.jsonl): every driver's per-level
+spans land there, and the payload records how the level-span sums
+reconcile against total wall time.
+
 NOTE on reading CPU numbers: off-TPU the grid kernel executes in Pallas
 interpret mode, so its absolute times measure the interpreter, not the
 kernel; the dispatch counts and the parity flag are the CPU-tracked
@@ -20,11 +34,16 @@ into the repo-root BENCH_pc.json trajectory.
 """
 from __future__ import annotations
 
-from .common import md_table, merge_bench_trajectory, save, timed
+import functools
+
+from .common import RESULTS, md_table, merge_bench_trajectory, save, timed
 
 # small chunked budget → several chunks/level for the dispatch comparison
 CONFIG = dict(n=40, m=3000, density=0.15, chunk_budget=2**11)
 QUICK = dict(n=24, m=1500, density=0.15, chunk_budget=2**10)
+
+#: the three dispatches of one split-phase S-grid launch, in issue order
+PHASES = ("gather", "grid_sweep", "commit")
 
 
 def _one(x, engine, quick, **kw):
@@ -48,25 +67,139 @@ def _one(x, engine, quick, **kw):
     }
 
 
+def _phase_profile(x, *, alpha, lmax, sepset_depth=8):
+    """The S-grid level loop with gather / grid-sweep / commit as separate
+    jitted dispatches, span-per-phase. Extra host syncs make its total a
+    little slower than the fused run — the price of attribution; results
+    must stay bit-identical (the caller gates on it)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import obs
+    from repro.core import levels as L
+    from repro.core.cit import correlation_from_samples, threshold
+    from repro.core.compact import compact_rows
+    from repro.core.orient import cpdag_from_skeleton
+    from repro.kernels.ops import _grid_winners, ci_shared_grid
+
+    @functools.partial(jax.jit, static_argnames=("ell", "n_chunk", "n_max"))
+    def gather_jit(c, adj, compact, counts, rows, t0, *, ell, n_chunk, n_max):
+        ranks = t0 + jnp.arange(n_chunk, dtype=t0.dtype)
+        return L.gather_s(c, adj, compact, counts, rows, ranks,
+                          ell=ell, n_max=n_max)
+
+    @functools.partial(jax.jit, static_argnames=("ell",))
+    def sweep_jit(m2, ci_s, cj_s, cij, mask, s_ids, tau, t0, *, ell):
+        t_loc, s_win = ci_shared_grid(m2, ci_s, cj_s, cij, mask, s_ids, tau,
+                                      ell=ell)
+        return _grid_winners(t_loc, s_win, t0)
+
+    @functools.partial(jax.jit, static_argnames=("ell",))
+    def commit_jit(adj, sep, compact, rows, t_win, removed_slot, s_win, *, ell):
+        return L._global_commit(adj, sep, compact, rows, t_win, removed_slot,
+                                s_win, ell)
+
+    m = int(x.shape[0])
+    c = jnp.asarray(correlation_from_samples(jnp.asarray(x)), jnp.float32)
+    n = c.shape[0]
+    tracer = obs.run_tracer("pc_grid_phases")
+    with tracer.span("total"):
+        with tracer.span("level0") as sp:
+            adj = L.level0(c, threshold(m, 0, alpha))
+            sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
+            sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
+            sp.sync(adj)
+        ell = 1
+        while ell <= lmax:
+            npr = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
+            if npr - 1 < ell:
+                break
+            npr_b, n_chunk, total = L.plan_level(
+                npr, ell, n, engine="S", cell_budget=L.GRID_CELL_BUDGET,
+                bucket=True, n_cols=n,
+            )
+            compact, counts = compact_rows(adj, n_prime=npr_b)
+            rows = jnp.arange(n, dtype=jnp.int32)
+            tau = threshold(m, ell, alpha)
+            launches = -(-total // n_chunk)
+            with tracer.span(f"level{ell}", level=ell, launches=launches):
+                for t0 in range(0, total, n_chunk):
+                    t0a = jnp.asarray(t0, L._rank_dtype())
+                    with tracer.span("gather", level=ell) as sp:
+                        g = gather_jit(c, adj, compact, counts, rows, t0a,
+                                       ell=ell, n_chunk=n_chunk, n_max=npr_b)
+                        sp.sync(*g)
+                    with tracer.span("grid_sweep", level=ell) as sp:
+                        w = sweep_jit(*g, tau, t0a, ell=ell)
+                        sp.sync(*w)
+                    with tracer.span("commit", level=ell) as sp:
+                        adj, sep = commit_jit(adj, sep, compact, rows, *w,
+                                              ell=ell)
+                        sp.sync(adj, sep)
+            ell += 1
+        with tracer.span("orient") as sp:
+            cpdag = cpdag_from_skeleton(adj, sep)
+            sp.sync(cpdag)
+    timings = tracer.timings()
+    tracer.finish(driver="pc_grid_phases", n=n, levels_run=ell - 1)
+
+    # per-level phase attribution straight off the span paths
+    # ("total/level{ell}/{phase}"); repeated launches within a level sum
+    per_level: dict[str, dict[str, float]] = {}
+    for sp in tracer.spans:
+        parts = sp.path.split("/")
+        if sp.name in PHASES and len(parts) == 3:
+            lvl = per_level.setdefault(parts[1], dict.fromkeys(PHASES, 0.0))
+            lvl[sp.name] += sp.dur_s
+    return {
+        "adj": np.asarray(jax.device_get(adj)),
+        "sepsets": np.asarray(jax.device_get(sep)),
+        "cpdag": np.asarray(jax.device_get(cpdag)),
+        "per_level": per_level,
+        "totals": {ph: timings.get(ph, 0.0) for ph in PHASES},
+        "total_s": timings["total"],
+    }
+
+
 def run(full: bool = False, quick: bool = False) -> str:
     import jax
     import numpy as np
 
+    from repro import obs
+    from repro.core.combinadics import MAX_LEVEL
     from repro.data.synthetic_dag import sample_gaussian_dag
 
     cfg = QUICK if quick else CONFIG
     n = cfg["n"] * (2 if full else 1)
     x, _ = sample_gaussian_dag(n=n, m=cfg["m"], density=cfg["density"], seed=17)
 
+    # every driver in this bench journals into one JSONL file; stale
+    # journals must not survive into a fresh measurement
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    journal_path = RESULTS / "pc_grid.journal.jsonl"
+    journal_path.unlink(missing_ok=True)
+
     runs, records = {}, {}
     variants = {
         "chunked-S": ("S", dict(cell_budget=cfg["chunk_budget"])),
         "S-grid": ("S-grid", {}),
     }
-    for label, (engine, kw) in variants.items():
-        runs[label], records[label] = _one(x, engine, quick, **kw)
+    with obs.scoped(enabled=True, journal_path=str(journal_path)):
+        for label, (engine, kw) in variants.items():
+            runs[label], records[label] = _one(x, engine, quick, **kw)
+        phases = _phase_profile(
+            x, alpha=0.01, lmax=min(2 if quick else MAX_LEVEL, 8),
+        )
 
     a, b = runs["chunked-S"], runs["S-grid"]
+
+    # journal reconciliation: depth-1 level/phase spans must account for
+    # (most of) the depth-0 totals — the ISSUE-7 acceptance check
+    recs = obs.read_journal(str(journal_path))
+    level_sum = sum(obs.phase_summary(recs, depth=1).values())
+    total_sum = sum(obs.phase_summary(recs, depth=0).values())
+
     payload = {
         "backend": jax.default_backend(),
         "config": {**cfg, "n": n},
@@ -79,6 +212,21 @@ def run(full: bool = False, quick: bool = False) -> str:
         "grid_max_dispatches_per_level": max(
             records["S-grid"]["dispatches"].values() or [0]
         ),
+        "phase_parity_ok": bool(
+            np.array_equal(b.adj, phases["adj"])
+            and np.array_equal(b.sepsets, phases["sepsets"])
+            and np.array_equal(b.cpdag, phases["cpdag"])
+        ),
+        "phase_breakdown": {
+            "totals_s": phases["totals"],
+            "per_level_s": phases["per_level"],
+            "split_total_s": phases["total_s"],
+        },
+        "journal": {
+            "path": f"results/{journal_path.name}",
+            "records": len(recs),
+            "level_sum_over_total": (level_sum / total_sum) if total_sum else None,
+        },
     }
     save("pc_grid", payload)
     merge_bench_trajectory({"pc_grid": payload})
@@ -89,6 +237,21 @@ def run(full: bool = False, quick: bool = False) -> str:
         disp = " ".join(f"{lv}:{d}" for lv, d in r["dispatches"].items())
         lv = " ".join(f"{k[5:]}:{v * 1e3:.0f}ms" for k, v in r["per_level_s"].items())
         rows.append([label, f"{r['total_s']:.2f}s", r["edges"], disp, lv])
+
+    ph_rows = [
+        [lvl] + [f"{d[ph] * 1e3:.0f}ms" for ph in PHASES]
+        + [f"{sum(d.values()) * 1e3:.0f}ms"]
+        for lvl, d in phases["per_level"].items()
+    ]
+    tot = sum(phases["totals"].values()) or 1.0
+    shares = " / ".join(f"{ph}={phases['totals'][ph] / tot:.0%}" for ph in PHASES)
     return ("### Grid-resident engine (dispatches/level + wall time)\n\n"
             + md_table(["variant", "total", "edges", "dispatches", "per-level"], rows)
-            + f"\n\nparity: grid={payload['grid_parity_ok']}")
+            + f"\n\nparity: grid={payload['grid_parity_ok']} "
+              f"phases={payload['phase_parity_ok']}\n\n"
+            + "#### S-grid phase breakdown (split dispatches, journal-derived)\n\n"
+            + md_table(["level", *PHASES, "sum"], ph_rows)
+            + f"\n\nphase shares: {shares} — the wall-clock gap vs chunked-S "
+              "lives in the grid sweep (the kernel itself: off-TPU that is "
+              "the Pallas interpreter), not in gather or commit; the "
+              "profiling baseline for the ROADMAP's S-grid wall-clock item.")

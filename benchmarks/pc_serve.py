@@ -16,6 +16,13 @@ Parity gate: every delivered graph is re-run as a solo ``pc_scan`` and
 compared bit-for-bit ("serve_parity_ok") — slot co-tenancy, bucketing,
 and retries must never change an answer. A "NO" marks the timing rows
 untrustworthy, same contract as every other bench in this repo.
+
+Telemetry (ISSUE 7): the measured service runs under an obs journal
+(benchmarks/results/pc_serve.journal.jsonl — one ``serve`` record per
+admission/dispatch/delivery event), and the payload carries the
+per-request latency breakdown the service now stamps on every
+``GraphResult`` (queue-wait / dispatch / assembly means) plus the
+deadline-miss and retry counters from the service registry.
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ import time
 
 import numpy as np
 
-from .common import md_table, merge_bench_trajectory, save
+from .common import RESULTS, md_table, merge_bench_trajectory, save
 
 # R requests at `rate`/s: small-graph shapes keep the CPU container in the
 # seconds range while still filling multi-request slots (slot_size=8).
@@ -124,6 +131,12 @@ def _bench_config(name, cfg):
 
     lats = rep.latencies()
     graphs = sum(len(v) for v in rep.delivered.values())
+    g_all = [g for lanes in rep.delivered.values() for g in lanes.values()]
+
+    def _mean(field):
+        vals = [getattr(g, field) for g in g_all]
+        return float(np.mean(vals)) if vals else None
+
     return {
         "config": {k: (list(v) if isinstance(v, tuple) else v)
                    for k, v in cfg.items()},
@@ -140,22 +153,46 @@ def _bench_config(name, cfg):
         "p50_s": float(np.percentile(lats, 50)) if lats else None,
         "p99_s": float(np.percentile(lats, 99)) if lats else None,
         "devices": int(jax.device_count()),
+        # per-request breakdown stamped on every GraphResult by the service
+        "latency_breakdown": {
+            "queue_wait_mean_s": _mean("queue_wait_s"),
+            "dispatch_mean_s": _mean("dispatch_s"),
+            "assembly_mean_s": _mean("assembly_s"),
+        },
+        "deadline_misses": svc.metrics.total("pc_serve_deadline_miss_total"),
+        "retries": svc.metrics.total("pc_serve_retries_total"),
     }
 
 
 def run(full: bool = False, quick: bool = False) -> str:
     import jax
 
+    from repro import obs
+
     configs = FULL_CONFIGS if full else (QUICK_CONFIGS if quick else CONFIGS)
-    records = {name: _bench_config(name, cfg) for name, cfg in configs.items()}
+
+    # every serving event (admission, dispatch, delivery, retry, dead
+    # letter) journals into one JSONL file; drop stale journals first
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    journal_path = RESULTS / "pc_serve.journal.jsonl"
+    journal_path.unlink(missing_ok=True)
+    with obs.scoped(enabled=True, journal_path=str(journal_path)):
+        records = {name: _bench_config(name, cfg) for name, cfg in configs.items()}
     primary = records["mixed"]
 
+    recs = obs.read_journal(str(journal_path))
     payload = {
         "backend": jax.default_backend(),
         "requests_per_s": primary["requests_per_s"],
         "p50_s": primary["p50_s"],
         "p99_s": primary["p99_s"],
         "serve_parity_ok": primary["serve_parity_ok"],
+        "latency_breakdown": primary["latency_breakdown"],
+        "deadline_misses": primary["deadline_misses"],
+        "journal": {
+            "path": f"results/{journal_path.name}",
+            "serve_records": sum(1 for r in recs if r.get("kind") == "serve"),
+        },
         "configs": records,
     }
     save("pc_serve", payload)
@@ -172,8 +209,16 @@ def run(full: bool = False, quick: bool = False) -> str:
             f"{r['rejected']} rejected / {r['dead_letters']} dead",
             "yes" if r["serve_parity_ok"] else "NO",
         ])
+    bd = primary["latency_breakdown"]
+    parts = " / ".join(
+        f"{k.split('_')[0]}={(v or 0) * 1e3:.0f}ms"
+        for k, v in bd.items()
+    )
     return (
         "### PC serving under open-loop arrivals (PCService)\n\n"
         + md_table(["workload", "req/s", "graphs/s", "p50", "p99",
                     "robustness", "parity"], rows)
+        + f"\n\nmean latency breakdown: {parts}; deadline misses: "
+          f"{primary['deadline_misses']:.0f}; journal: "
+          f"{payload['journal']['serve_records']} serve records"
     )

@@ -27,11 +27,15 @@ echo "[ci] serving layer: fault-injection suite (forced 8-device CPU mesh)"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   PYTHONPATH=src python -m pytest -q -m serve tests/test_serve.py
 
+echo "[ci] observability layer: spans/metrics/journals + zero-overhead contract"
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src python -m pytest -q -m obs tests/test_obs.py
+
 echo "[ci] docs-check (execute fenced snippets in README.md + docs/)"
 python scripts/check_docs.py
 
 echo "[ci] tier-1 remainder (kernels/batch/distributed already ran above)"
-PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed and not serve"
+PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed and not serve and not obs"
 
 # non-blocking: perf numbers on shared machines are advisory; structural
 # regressions (missing BENCH keys, parity-flag flips, parity flags a bench

@@ -30,13 +30,13 @@ replicate instead (follow-on in ROADMAP.md).
 from __future__ import annotations
 
 import functools
-import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.cit import correlation_from_samples
 from repro.core.levels import DEFAULT_CELL_BUDGET
 from repro.core.orient import cpdag_from_membership, sepset_membership
@@ -194,61 +194,59 @@ def bootstrap_pc(
     aggregation is built shard-local along B before its reduction.
     Bit-identical to mesh=None (same resampling keys, same commit math).
     """
-    t_start = time.perf_counter()
-    x = jnp.asarray(x, jnp.float32)
-    m = int(x.shape[0])
-    if max_level is None:
-        max_level = DEFAULT_MAX_LEVEL
-    if key is None:
-        key = jax.random.PRNGKey(seed)
-    keys = jax.random.split(key, n_boot)
+    tracer = obs.run_tracer("bootstrap_pc")
+    with tracer.span("total", n_boot=int(n_boot)):
+        x = jnp.asarray(x, jnp.float32)
+        m = int(x.shape[0])
+        if max_level is None:
+            max_level = DEFAULT_MAX_LEVEL
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        keys = jax.random.split(key, n_boot)
 
-    timings: dict[str, float] = {}
-    t0 = time.perf_counter()
-    cs = bootstrap_corr(x, keys, corr=corr)
-    cs.block_until_ready()
-    timings["bootstrap_corr"] = time.perf_counter() - t0
+        with tracer.span("bootstrap_corr") as sp:
+            cs = bootstrap_corr(x, keys, corr=corr)
+            sp.sync(cs)
 
-    t0 = time.perf_counter()
-    if n_prime is None:
-        res, schedule = scan_levels_batch(
-            cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
-            cell_budget=cell_budget, orient=False, mesh=mesh,
-        )
-        scan_phase = "scan_levels_batch"
-    else:
-        res = pc_scan_batch(
-            cs, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
-            n_prime=n_prime, cell_budget=cell_budget, orient=False, mesh=mesh,
-        )
-        schedule = tuple(n_prime) if isinstance(n_prime, (tuple, list)) \
-            else (int(n_prime),) * max_level
-        scan_phase = "pc_scan_batch"
-    jax.block_until_ready(res.adj)
-    timings[scan_phase] = time.perf_counter() - t0
+        scan_phase = "scan_levels_batch" if n_prime is None else "pc_scan_batch"
+        with tracer.span(scan_phase) as sp:
+            if n_prime is None:
+                res, schedule = scan_levels_batch(
+                    cs, m, alpha=alpha, max_level=max_level,
+                    sepset_depth=sepset_depth, cell_budget=cell_budget,
+                    orient=False, mesh=mesh,
+                )
+            else:
+                res = pc_scan_batch(
+                    cs, m, alpha=alpha, max_level=max_level,
+                    sepset_depth=sepset_depth, n_prime=n_prime,
+                    cell_budget=cell_budget, orient=False, mesh=mesh,
+                )
+                schedule = tuple(n_prime) if isinstance(n_prime, (tuple, list)) \
+                    else (int(n_prime),) * max_level
+            sp.sync(res.adj).set(schedule=list(schedule))
 
-    replicate_ok = np.asarray(jax.device_get(res.ok))
-    if not replicate_ok.all():
-        import warnings
+        replicate_ok = np.asarray(jax.device_get(res.ok))
+        if not replicate_ok.all():
+            import warnings
 
-        warnings.warn(
-            f"{int((~replicate_ok).sum())}/{n_boot} bootstrap replicates were "
-            f"degree-capped by n_prime={n_prime!r} (scan ok=False) — their "
-            "skeletons are approximate; pass n_prime=None for exact widths",
-            stacklevel=2,
-        )
+            warnings.warn(
+                f"{int((~replicate_ok).sum())}/{n_boot} bootstrap replicates "
+                f"were degree-capped by n_prime={n_prime!r} (scan ok=False) — "
+                "their skeletons are approximate; pass n_prime=None for exact "
+                "widths",
+                stacklevel=2,
+            )
 
-    t0 = time.perf_counter()
-    n = int(x.shape[1])
-    freq, skel, cpdag = _aggregate(
-        res.adj, res.sepsets, float(stability_threshold),
-        vote_chunk=_vote_chunk(n_boot, n),
-    )
-    jax.block_until_ready(cpdag)
-    timings["aggregate"] = time.perf_counter() - t0
-    timings["total"] = time.perf_counter() - t_start
+        with tracer.span("aggregate") as sp:
+            n = int(x.shape[1])
+            freq, skel, cpdag = _aggregate(
+                res.adj, res.sepsets, float(stability_threshold),
+                vote_chunk=_vote_chunk(n_boot, n),
+            )
+            sp.sync(cpdag)
 
-    return EnsembleRun(
+    run = EnsembleRun(
         edge_freq=np.asarray(jax.device_get(freq)),
         adj=np.asarray(jax.device_get(skel)),
         cpdag=np.asarray(jax.device_get(cpdag)),
@@ -257,5 +255,7 @@ def bootstrap_pc(
         n_boot=int(n_boot),
         stability_threshold=float(stability_threshold),
         schedule=schedule,
-        timings_s=timings,
+        timings_s=tracer.timings(),
     )
+    tracer.finish(driver="bootstrap_pc", n_boot=int(n_boot))
+    return run

@@ -73,6 +73,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import levels as L
 from repro.core.cit import threshold
 from repro.core.compact import compact_rows
@@ -466,21 +467,26 @@ def pc_scan_batch(
     if cs.ndim != 3:
         raise ValueError(f"pc_scan_batch expects (B, n, n); got shape {cs.shape}")
     b = int(cs.shape[0])
-    cs, taus, max_level, schedule = _prep(
-        cs, m, alpha, max_level, sepset_depth, n_prime, taus
-    )
-    taus = jnp.broadcast_to(taus, (b, max_level + 1))
-    pad = 0
-    if mesh is not None:
-        from repro.core import sharding as SH
+    with obs.span("pc_scan_batch", batch=b, n=int(cs.shape[1]),
+                  sharded=mesh is not None) as sp:
+        cs, taus, max_level, schedule = _prep(
+            cs, m, alpha, max_level, sepset_depth, n_prime, taus
+        )
+        taus = jnp.broadcast_to(taus, (b, max_level + 1))
+        pad = 0
+        if mesh is not None:
+            from repro.core import sharding as SH
 
-        cs, taus, pad = _pad_shard_batch(cs, taus, mesh)
-        b_local = (b + pad) // SH.mesh_size(mesh)
-    else:
-        b_local = b
-    budget = max(int(cell_budget) // max(b_local, 1), 2**16)
-    fn = _build(schedule, sepset_depth, budget, bool(orient), float(jitter), True)
-    return _trim_result(fn(cs, taus), pad)
+            cs, taus, pad = _pad_shard_batch(cs, taus, mesh)
+            b_local = (b + pad) // SH.mesh_size(mesh)
+        else:
+            b_local = b
+        budget = max(int(cell_budget) // max(b_local, 1), 2**16)
+        fn = _build(schedule, sepset_depth, budget, bool(orient),
+                    float(jitter), True)
+        res = _trim_result(fn(cs, taus), pad)
+        sp.set(schedule=list(schedule)).sync(res.adj)
+    return res
 
 
 def alpha_sweep(

@@ -68,6 +68,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro import obs
+
 from . import levels as L
 from . import sharding as S
 from .compact import compact_rows
@@ -560,6 +562,7 @@ def run_level_sharded(c, adj, sep, ell, tau, mesh,
             stats["col_gathers"] = chunks  # one collective per chunk body
         # bytes the column collective(s) shipped this level (fp32)
         stats["col_gather_bytes"] = stats["col_gathers"] * (n + pad) * k * 4
+    obs.record_level_stats(stats, level=ell, layout="sharded")
     return adj, sep, stats
 
 
@@ -674,89 +677,96 @@ def pc_distributed(
     from .orient import cpdag_from_skeleton
     from .pc import PCRun
 
-    import time
+    tracer = obs.run_tracer("pc_distributed")
+    with tracer.span("total", engine=str(engine), shard_c=shard_c,
+                     shard_sep=shard_sep, pipeline_depth=pipeline_depth,
+                     speculate=speculate):
+        mesh = mesh or pc_mesh()
+        if c is None:
+            assert x is not None
+            m = int(x.shape[0])
+            c = correlation_from_samples(jnp.asarray(x))
+        c = jnp.asarray(c, jnp.float32)
+        n = c.shape[0]
+        lmax = min(max_level if max_level is not None else MAX_LEVEL,
+                   sepset_depth)
 
-    t_start = time.perf_counter()
-    mesh = mesh or pc_mesh()
-    if c is None:
-        assert x is not None
-        m = int(x.shape[0])
-        c = correlation_from_samples(jnp.asarray(x))
-    c = jnp.asarray(c, jnp.float32)
-    n = c.shape[0]
-    lmax = min(max_level if max_level is not None else MAX_LEVEL, sepset_depth)
+        if resume is not None:
+            start_level, adj0, sep0 = resume
+            adj = jnp.asarray(adj0)
+            sep = jnp.asarray(sep0, jnp.int32)
+            first_level = start_level + 1
+        else:
+            adj = L.level0(c, threshold(m, 0, alpha))
+            sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
+            sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
+            first_level = 1
 
-    if resume is not None:
-        start_level, adj0, sep0 = resume
-        adj = jnp.asarray(adj0)
-        sep = jnp.asarray(sep0, jnp.int32)
-        first_level = start_level + 1
-    else:
-        adj = L.level0(c, threshold(m, 0, alpha))
-        sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
-        sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
-        first_level = 1
+        if shard_c:
+            # one placement for the whole run: the padded row blocks live on
+            # their shard from here on (level 0 above still used the host copy)
+            c = shard_correlation(c, mesh)
+        if shard_sep:
+            # same row layout as C/compacted adjacency: (n_pad, n, depth)
+            sep = S.shard_rows(sep, mesh, fill=-1)[0]
+        col_cache = ColumnCache() if (shard_c and cache_cols) else None
 
-    if shard_c:
-        # one placement for the whole run: the padded row blocks live on
-        # their shard from here on (level 0 above still used the host copy)
-        c = shard_correlation(c, mesh)
-    if shard_sep:
-        # same row layout as C/compacted adjacency: (n_pad, n, depth) blocks
-        sep = S.shard_rows(sep, mesh, fill=-1)[0]
-    col_cache = ColumnCache() if (shard_c and cache_cols) else None
-
-    grid = str(engine).upper() == "S-GRID"
-    if str(engine).upper() not in ("S", "S-GRID"):
-        raise ValueError(
-            f"pc_distributed engine must be 'S' or 'S-grid', got {engine!r}"
-        )
-    if speculate and not grid:
-        raise ValueError("speculate=True requires engine='S-grid'")
-
-    timings: dict[str, float] = {}
-    stats = []
-    ell = first_level
-    spec = None
-    prev_npr_b = None
-    while ell <= lmax:
-        if speculate and prev_npr_b is not None:
-            # overlap the level barrier: level ℓ's first grid chunk goes out
-            # under level ℓ-1's compaction bound before max_deg resolves
-            spec = _speculative_dispatch(
-                c, adj, ell, threshold(m, ell, alpha), mesh, prev_npr_b, n,
-                shard_c, col_cache, cell_budget, bucket,
+        grid = str(engine).upper() == "S-GRID"
+        if str(engine).upper() not in ("S", "S-GRID"):
+            raise ValueError(
+                f"pc_distributed engine must be 'S' or 'S-grid', got {engine!r}"
             )
-        max_deg = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
-        if max_deg - 1 < ell:
-            break  # a pending spec chunk is simply dropped (never committed)
-        t_lv = time.perf_counter()
-        adj, sep, st = run_level_sharded(c, adj, sep, ell, threshold(m, ell, alpha),
-                                         mesh, cell_budget=cell_budget,
-                                         bucket=bucket, shard_c=shard_c,
-                                         shard_sep=shard_sep,
-                                         pipeline_depth=pipeline_depth,
-                                         col_cache=col_cache,
-                                         engine=engine, spec=spec)
-        spec = None
-        jax.block_until_ready(adj)
-        jax.block_until_ready(sep)
-        timings[f"level{ell}"] = time.perf_counter() - t_lv
-        stats.append({"level": ell, **st})
-        prev_npr_b = st.get("npr_bucket") if not st.get("skipped") else None
-        if checkpoint_cb is not None:
-            checkpoint_cb(ell, adj, sep[:n] if shard_sep else sep)
-        ell += 1
+        if speculate and not grid:
+            raise ValueError("speculate=True requires engine='S-grid'")
 
-    if shard_sep:
-        sep = sep[:n]  # drop shard padding before orientation/export
-    cpdag = cpdag_from_skeleton(adj, sep)
-    timings["total"] = time.perf_counter() - t_start
-    return PCRun(
-        adj=np.asarray(jax.device_get(adj)),
-        cpdag=np.asarray(jax.device_get(cpdag)),
-        sepsets=np.asarray(jax.device_get(sep)),
-        levels_run=ell - 1,
-        level_stats=stats,
-        timings_s=timings,
-    )
+        stats = []
+        ell = first_level
+        spec = None
+        prev_npr_b = None
+        while ell <= lmax:
+            if speculate and prev_npr_b is not None:
+                # overlap the level barrier: level ℓ's first grid chunk goes
+                # out under level ℓ-1's compaction bound before max_deg
+                # resolves
+                spec = _speculative_dispatch(
+                    c, adj, ell, threshold(m, ell, alpha), mesh, prev_npr_b,
+                    n, shard_c, col_cache, cell_budget, bucket,
+                )
+            max_deg = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
+            if max_deg - 1 < ell:
+                break  # a pending spec chunk is dropped (never committed)
+            with tracer.span(f"level{ell}", level=ell) as sp:
+                adj, sep, st = run_level_sharded(
+                    c, adj, sep, ell, threshold(m, ell, alpha),
+                    mesh, cell_budget=cell_budget,
+                    bucket=bucket, shard_c=shard_c,
+                    shard_sep=shard_sep,
+                    pipeline_depth=pipeline_depth,
+                    col_cache=col_cache,
+                    engine=engine, spec=spec)
+                spec = None
+                sp.sync(adj, sep).set(**{k: st[k] for k in
+                                         ("engine", "chunks", "dispatches",
+                                          "total_sets", "npr_bucket",
+                                          "col_gathers", "speculative")
+                                         if k in st})
+            stats.append({"level": ell, **st})
+            prev_npr_b = st.get("npr_bucket") if not st.get("skipped") else None
+            if checkpoint_cb is not None:
+                checkpoint_cb(ell, adj, sep[:n] if shard_sep else sep)
+            ell += 1
+
+        if shard_sep:
+            sep = sep[:n]  # drop shard padding before orientation/export
+        cpdag = cpdag_from_skeleton(adj, sep)
+        run = PCRun(
+            adj=np.asarray(jax.device_get(adj)),
+            cpdag=np.asarray(jax.device_get(cpdag)),
+            sepsets=np.asarray(jax.device_get(sep)),
+            levels_run=ell - 1,
+            level_stats=stats,
+        )
+    run.timings_s = tracer.timings()
+    tracer.finish(driver="pc_distributed", engine=str(engine), n=n,
+                  n_dev=S.mesh_size(mesh), levels_run=run.levels_run)
+    return run

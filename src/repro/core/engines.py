@@ -52,6 +52,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import levels as L
 from .levels import DEFAULT_CELL_BUDGET  # noqa: F401  (re-export; derivation there)
 
@@ -117,8 +119,8 @@ def run_level(
     """
     name = resolve(engine, ell)
     if name == "L1-dense":
-        return _run_level_dense_l1(c, adj, sep, tau)
-    if name == "S-kernel":
+        adj, sep, st = _run_level_dense_l1(c, adj, sep, tau)
+    elif name == "S-kernel":
         from repro.kernels.ops import chunk_s_kernel
 
         adj, sep, st = L.run_level(
@@ -126,8 +128,7 @@ def run_level(
             chunk_fn_s=chunk_fn_s or chunk_s_kernel, bucket=bucket,
         )
         st["engine"] = "S-kernel"
-        return adj, sep, st
-    if name == "S-grid":
+    elif name == "S-grid":
         from repro.kernels.ops import chunk_s_grid
 
         # the grid engine streams the rank axis through the kernel grid, so
@@ -141,12 +142,17 @@ def run_level(
             chunk_fn_s=chunk_fn_s or chunk_s_grid, bucket=bucket,
         )
         st["engine"] = "S-grid"
-        return adj, sep, st
-    return L.run_level(
-        c, adj, sep, ell, tau, engine=name, cell_budget=cell_budget,
-        chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e, bucket=bucket,
-        pipeline_depth=pipeline_depth,
-    )
+    else:
+        adj, sep, st = L.run_level(
+            c, adj, sep, ell, tau, engine=name, cell_budget=cell_budget,
+            chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e, bucket=bucket,
+            pipeline_depth=pipeline_depth,
+        )
+    # the ONE single-device seam where per-level counters enter the metrics
+    # registry (the sharded twin lives in distributed.run_level_sharded);
+    # levels.run_level stays registry-free so nothing double-counts
+    obs.record_level_stats(st, level=ell, layout="single")
+    return adj, sep, st
 
 
 def batch_run(cs, m, *, mesh=None, level_sync: bool = False, **kw):

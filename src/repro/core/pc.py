@@ -18,12 +18,13 @@ static level cap, and the formulation that batches over many graphs
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from . import engines as E
 from . import levels as L
@@ -91,27 +92,48 @@ def pc_from_corr(
     edge). m < n warns but runs: the paper's gene-expression datasets live
     in that regime.
     """
-    t_start = time.perf_counter()
-    if validate:
-        V.validate_corr(c, m, max_level=max_level)
-    c = jnp.asarray(c, jnp.float32)
-    n = c.shape[0]
-    lmax = min(max_level if max_level is not None else MAX_LEVEL, sepset_depth)
+    tracer = obs.run_tracer("pc_from_corr")
+    with tracer.span("total", engine=str(engine)):
+        if validate:
+            V.validate_corr(c, m, max_level=max_level)
+        c = jnp.asarray(c, jnp.float32)
+        n = c.shape[0]
+        lmax = min(max_level if max_level is not None else MAX_LEVEL,
+                   sepset_depth)
 
-    if E.is_whole_run(engine):
-        return _pc_run_scan(
-            c, m, alpha=alpha, max_level=max_level, sepset_depth=sepset_depth,
-            cell_budget=cell_budget, orient=orient, t_start=t_start,
-        )
+        if E.is_whole_run(engine):
+            run = _pc_run_scan(
+                c, m, alpha=alpha, max_level=max_level,
+                sepset_depth=sepset_depth, cell_budget=cell_budget,
+                orient=orient, tracer=tracer,
+            )
+        else:
+            run = _pc_run_host_loop(
+                c, m, n, alpha=alpha, engine=engine, lmax=lmax,
+                sepset_depth=sepset_depth, cell_budget=cell_budget,
+                orient=orient, bucket=bucket, chunk_fn_s=chunk_fn_s,
+                chunk_fn_e=chunk_fn_e, pipeline_depth=pipeline_depth,
+                tracer=tracer,
+            )
+    run.timings_s = tracer.timings()
+    tracer.finish(driver="pc_from_corr", engine=str(engine),
+                  n=int(run.adj.shape[0]), levels_run=run.levels_run)
+    return run
 
-    timings: dict[str, float] = {}
-    t0 = time.perf_counter()
-    adj = L.level0(c, threshold(m, 0, alpha))
-    # sepset sentinel: -2 in slot 0 means "removed with empty sepset (level 0)"
-    sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
-    sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
-    adj.block_until_ready()
-    timings["level0"] = time.perf_counter() - t0
+
+def _pc_run_host_loop(c, m, n, *, alpha, engine, lmax, sepset_depth,
+                      cell_budget, orient, bucket, chunk_fn_s, chunk_fn_e,
+                      pipeline_depth, tracer):
+    """The per-level host loop of Algorithm 2, instrumented span-per-level.
+    Each span syncs the level's adjacency at exit, so span durations cover
+    device time — exactly what the old block_until_ready + perf_counter
+    pairs measured."""
+    with tracer.span("level0", level=0) as sp:
+        adj = L.level0(c, threshold(m, 0, alpha))
+        # sepset sentinel: -2 in slot 0 = "removed with empty sepset (level 0)"
+        sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
+        sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
+        sp.sync(adj)
 
     stats = []
     ell = 1
@@ -119,23 +141,23 @@ def pc_from_corr(
         max_deg = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
         if max_deg - 1 < ell:
             break
-        t0 = time.perf_counter()
-        adj, sep, st = E.run_level(
-            c, adj, sep, ell, threshold(m, ell, alpha), engine=engine,
-            cell_budget=cell_budget, bucket=bucket,
-            chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e,
-            pipeline_depth=pipeline_depth,
-        )
-        jax.block_until_ready(adj)
-        timings[f"level{ell}"] = time.perf_counter() - t0
+        with tracer.span(f"level{ell}", level=ell) as sp:
+            adj, sep, st = E.run_level(
+                c, adj, sep, ell, threshold(m, ell, alpha), engine=engine,
+                cell_budget=cell_budget, bucket=bucket,
+                chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e,
+                pipeline_depth=pipeline_depth,
+            )
+            sp.sync(adj).set(**{k: st[k] for k in
+                                ("engine", "chunks", "dispatches",
+                                 "total_sets", "npr_bucket")
+                                if k in st})
         stats.append({"level": ell, **st})
         ell += 1
 
-    t0 = time.perf_counter()
-    cpdag = cpdag_from_skeleton(adj, sep) if orient else adj
-    jax.block_until_ready(cpdag)
-    timings["orient"] = time.perf_counter() - t0
-    timings["total"] = time.perf_counter() - t_start
+    with tracer.span("orient") as sp:
+        cpdag = cpdag_from_skeleton(adj, sep) if orient else adj
+        sp.sync(cpdag)
 
     return PCRun(
         adj=np.asarray(jax.device_get(adj)),
@@ -143,11 +165,11 @@ def pc_from_corr(
         sepsets=np.asarray(jax.device_get(sep)),
         levels_run=ell - 1,
         level_stats=stats,
-        timings_s=timings,
     )
 
 
-def _pc_run_scan(c, m, alpha, max_level, sepset_depth, cell_budget, orient, t_start):
+def _pc_run_scan(c, m, alpha, max_level, sepset_depth, cell_budget, orient,
+                 tracer):
     """engine="scan": the whole run as the fixed-shape traced program
     (repro/batch/scan_pc.py) packaged into the PCRun contract.
 
@@ -170,14 +192,12 @@ def _pc_run_scan(c, m, alpha, max_level, sepset_depth, cell_budget, orient, t_st
             stacklevel=4,
         )
     lmax = min(DEFAULT_MAX_LEVEL if max_level is None else max_level, sepset_depth)
-    t0 = time.perf_counter()
-    res = pc_scan(
-        c, m, alpha=alpha, max_level=lmax, sepset_depth=sepset_depth,
-        cell_budget=cell_budget, orient=orient,
-    )
-    jax.block_until_ready(res.cpdag)
-    timings = {"scan": time.perf_counter() - t0,
-               "total": time.perf_counter() - t_start}
+    with tracer.span("scan", max_level=lmax) as sp:
+        res = pc_scan(
+            c, m, alpha=alpha, max_level=lmax, sepset_depth=sepset_depth,
+            cell_budget=cell_budget, orient=orient,
+        )
+        sp.sync(res.cpdag)
     # the host driver stops at the first level with max_deg - 1 < ell
     degs = np.asarray(jax.device_get(res.max_degs))
     levels_run = 0
@@ -194,7 +214,6 @@ def _pc_run_scan(c, m, alpha, max_level, sepset_depth, cell_budget, orient, t_st
                       "skipped": ell > levels_run,
                       "npr": int(degs[ell - 1]), "max_level_static": lmax}
                      for ell in range(1, lmax + 1)],
-        timings_s=timings,
     )
 
 

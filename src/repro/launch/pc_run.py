@@ -210,7 +210,15 @@ def main():
                          "stability-selected skeleton")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="enable obs and write the run's trace spans to "
+                         "PATH (JSONL; docs/observability.md)")
     args = ap.parse_args()
+
+    if args.journal:
+        from repro import obs
+
+        obs.configure(enabled=True, journal_path=args.journal)
 
     from repro.configs.cupc_datasets import CUPC_DATASETS
     from repro.data.synthetic_dag import sample_gaussian_dag

@@ -11,6 +11,13 @@ retries, dead letters). ``--faults`` runs the same stream under an
 injected fault plan — a forced validation failure, a certificate miss
 that must escalate, an in-flight NaN, and a slot overrun — and shows
 every request still ends as a typed outcome. See docs/serving.md.
+
+Observability (docs/observability.md): ``--journal PATH`` enables obs and
+streams every service event as a JSONL ``serve`` record; ``--metrics-port
+N`` serves the service registry in Prometheus text format at
+``http://localhost:N/metrics`` for the run's duration; ``--dump-metrics``
+prints the same exposition on exit. Delivered requests print the
+queue-wait / dispatch / assembly latency breakdown.
 """
 from __future__ import annotations
 
@@ -59,9 +66,19 @@ def main():
                     help="shard slots over all visible devices")
     ap.add_argument("--faults", action="store_true",
                     help="inject the demo fault plan (ManualClock)")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="enable obs and journal service events to PATH (JSONL)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="serve Prometheus metrics at localhost:N/metrics")
+    ap.add_argument("--dump-metrics", action="store_true",
+                    help="print the Prometheus exposition on exit")
     args = ap.parse_args()
 
+    from repro import obs
     from repro.serve import FaultPlan, ManualClock, PCService, ServeConfig
+
+    if args.journal:
+        obs.configure(enabled=True, journal_path=args.journal)
 
     mesh = None
     if args.shard:
@@ -88,6 +105,11 @@ def main():
     if faults is not None:
         kw["faults"] = faults
     svc = PCService(ServeConfig(slot_size=args.slot_size, mesh=mesh), **kw)
+
+    httpd = None
+    if args.metrics_port:
+        httpd = _serve_metrics(svc, args.metrics_port)
+        print(f"[pc_serve] metrics at http://localhost:{args.metrics_port}/metrics")
 
     reqs = _stream(args)
     if args.faults:  # only the overrun victim runs a tight deadline
@@ -136,6 +158,48 @@ def main():
     if retries:
         print(f"  retries={len(retries)} "
               f"{[(e['rid'], e['reason'], e['attempt']) for e in retries]}")
+
+    brk = [(g.queue_wait_s, g.dispatch_s, g.assembly_s)
+           for by in rep.delivered.values() for g in by.values()]
+    if brk:
+        q, d, a = (float(np.mean(col)) for col in zip(*brk))
+        print(f"  breakdown (mean): queue_wait={q * 1e3:.1f}ms "
+              f"dispatch={d * 1e3:.1f}ms assembly={a * 1e3:.1f}ms")
+    misses = svc.metrics.total("pc_serve_deadline_miss_total")
+    if misses:
+        print(f"  deadline_misses={int(misses)}")
+    if args.journal:
+        print(f"  journal: {args.journal}")
+    if args.dump_metrics:
+        print(svc.metrics_text(), end="")
+    if httpd is not None:
+        httpd.shutdown()
+
+
+def _serve_metrics(svc, port: int):
+    """Prometheus text endpoint on a stdlib daemon-thread HTTP server."""
+    import threading
+    from http.server import BaseHTTPRequestHandler, HTTPServer
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):  # noqa: N802 (stdlib handler API)
+            if self.path.rstrip("/") not in ("", "/metrics"):
+                self.send_error(404)
+                return
+            body = svc.metrics_text().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):  # keep the driver's stdout clean
+            pass
+
+    httpd = HTTPServer(("127.0.0.1", port), Handler)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    return httpd
 
 
 if __name__ == "__main__":

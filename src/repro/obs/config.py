@@ -1,0 +1,82 @@
+"""Process-wide observability configuration.
+
+One mutable singleton (:func:`get_config`) gates everything that is NOT
+free: journal files, the global metrics registry, and jax-profiler span
+annotation. Timing itself (driver-local tracers feeding ``timings_s``)
+is always on — it replaces the `perf_counter` calls the drivers already
+paid for — so enabling obs changes *visibility*, never results.
+
+Enable via code::
+
+    from repro import obs
+    obs.configure(enabled=True, journal_path="runs/pc.jsonl")
+
+or environment (read once at import)::
+
+    REPRO_OBS=1 REPRO_OBS_JOURNAL=runs/pc.jsonl python -m repro.launch.pc_run
+
+``obs.scoped(...)`` applies a config change inside a ``with`` block and
+restores the previous state on exit — the tests' (and benchmarks') way
+of flipping obs on without leaking state across cases.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from dataclasses import dataclass, replace
+
+
+@dataclass
+class ObsConfig:
+    enabled: bool = False          # master switch for journal/registry/profiler
+    journal_path: str | None = None  # JSONL sink for run journals (optional)
+    jax_profiler: bool = False     # bracket spans in jax.profiler.TraceAnnotation
+    clock: object | None = None    # injectable clock (ManualClock in tests)
+
+
+def _from_env() -> ObsConfig:
+    on = os.environ.get("REPRO_OBS", "").lower() in ("1", "true", "on", "yes")
+    path = os.environ.get("REPRO_OBS_JOURNAL") or None
+    prof = os.environ.get("REPRO_OBS_PROFILER", "").lower() in ("1", "true")
+    return ObsConfig(enabled=on or path is not None, journal_path=path,
+                     jax_profiler=prof)
+
+
+_CONFIG = _from_env()
+
+
+def get_config() -> ObsConfig:
+    return _CONFIG
+
+
+def configure(**kw) -> ObsConfig:
+    """Update fields of the global config; returns the new config."""
+    global _CONFIG
+    _CONFIG = replace(_CONFIG, **kw)
+    return _CONFIG
+
+
+def enable(journal_path: str | None = None, **kw) -> ObsConfig:
+    return configure(enabled=True, journal_path=journal_path, **kw)
+
+
+def disable() -> ObsConfig:
+    return configure(enabled=False, journal_path=None, jax_profiler=False)
+
+
+def enabled() -> bool:
+    return _CONFIG.enabled
+
+
+@contextmanager
+def scoped(**kw):
+    """Temporarily override config fields; restores the prior config on
+    exit. Pair with ``metrics.scoped_registry()`` in tests that flip
+    ``enabled`` to avoid counter bleed across cases."""
+    global _CONFIG
+    prev = _CONFIG
+    _CONFIG = replace(_CONFIG, **kw)
+    try:
+        yield _CONFIG
+    finally:
+        _CONFIG = prev

@@ -1,0 +1,189 @@
+"""Trace spans: nestable, exception-safe, device-time-aware timing.
+
+The repo grew its timing organically — ``time.perf_counter`` pairs in
+``core/pc.py`` / ``core/distributed.py`` / ``batch/ensemble.py``, each with
+its own dict-and-key convention. A :class:`Tracer` replaces all of them
+with ONE seam:
+
+* ``with tracer.span("level2", level=2) as sp`` opens a nested span; spans
+  record name, slash-joined path, depth, start/end time and free-form
+  attributes, and close correctly on exceptions (the error type is stamped
+  into the span's attrs so a journal shows WHERE a run died).
+* time flows only through an injectable clock — :class:`MonotonicClock`
+  in production, :class:`ManualClock` (the serve/faults.py pattern; the
+  classes now live here and serve re-exports them) in tests, which makes
+  span timelines and JSONL journals byte-deterministic.
+* ``sp.sync(arr, ...)`` registers device arrays the span should
+  ``jax.block_until_ready`` at exit — device-time-aware wall timing that
+  costs NOTHING when the tracer is disabled (the no-op span ignores the
+  registration and no block is issued).
+* ``profiler=True`` additionally brackets every span in a
+  ``jax.profiler.TraceAnnotation``, so host spans line up with compiled-
+  backend traces in TensorBoard/perfetto when a ``jax.profiler.trace`` is
+  active around the run.
+
+``Tracer.timings()`` is the back-compat bridge: it renders the span list
+as the ``{name: seconds}`` dict the ``PCRun.timings_s`` field has always
+carried, so existing callers and benchmarks keep working unchanged.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+
+class MonotonicClock:
+    """Real time — the production clock."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class ManualClock:
+    """Virtual time the caller advances by hand. ``advance`` is also how
+    injected slot delays take effect in the serving layer (serve/faults.py
+    re-exports this class for back-compat)."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = float(t0)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance time backwards (dt={dt})")
+        self._t += float(dt)
+        return self._t
+
+
+@dataclass
+class Span:
+    """One finished (or open, while ``t1 is None``) trace span."""
+
+    name: str
+    path: str  # slash-joined ancestry, e.g. "total/level2"
+    depth: int
+    t0: float
+    t1: float | None = None
+    attrs: dict = field(default_factory=dict)
+    _sync: tuple = ()
+
+    @property
+    def dur_s(self) -> float | None:
+        return None if self.t1 is None else self.t1 - self.t0
+
+    def set(self, **attrs) -> "Span":
+        """Attach attributes discovered mid-span (e.g. the level's stats)."""
+        self.attrs.update(attrs)
+        return self
+
+    def sync(self, *arrays) -> "Span":
+        """Register device arrays to ``block_until_ready`` at span exit, so
+        the recorded duration covers device time, not just dispatch time."""
+        self._sync = self._sync + tuple(arrays)
+        return self
+
+
+class _NullSpan:
+    """The disabled-tracing span: every method is attribute lookup + pass.
+    ``sync`` intentionally does NOT block — a disabled tracer must not
+    change the run's async dispatch behaviour."""
+
+    __slots__ = ()
+
+    def set(self, **attrs):
+        return self
+
+    def sync(self, *arrays):
+        return self
+
+
+NULL_SPAN = _NullSpan()
+
+
+class _NullCtx:
+    """Zero-allocation context manager yielding the shared no-op span."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return NULL_SPAN
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL_CTX = _NullCtx()
+
+
+class Tracer:
+    """Collects a run's spans (completion order) and optionally streams
+    each finished span to a :class:`repro.obs.journal.Journal`."""
+
+    def __init__(self, name: str = "run", *, clock=None, enabled: bool = True,
+                 journal=None, profiler: bool = False):
+        self.name = name
+        self.clock = clock or MonotonicClock()
+        self.enabled = bool(enabled)
+        self.journal = journal
+        self.profiler = bool(profiler)
+        self.spans: list[Span] = []
+        self._stack: list[Span] = []
+
+    @contextmanager
+    def span(self, name: str, **attrs):
+        if not self.enabled:
+            yield NULL_SPAN
+            return
+        parent = self._stack[-1] if self._stack else None
+        path = f"{parent.path}/{name}" if parent is not None else name
+        sp = Span(name=name, path=path, depth=len(self._stack),
+                  t0=self.clock.now(), attrs=dict(attrs))
+        self._stack.append(sp)
+        ann = None
+        if self.profiler:
+            import jax.profiler
+
+            ann = jax.profiler.TraceAnnotation(path)
+            ann.__enter__()
+        try:
+            yield sp
+        except BaseException as e:
+            sp.attrs.setdefault("error", type(e).__name__)
+            raise
+        finally:
+            if ann is not None:
+                ann.__exit__(None, None, None)
+            if sp._sync:
+                import jax
+
+                for a in sp._sync:
+                    jax.block_until_ready(a)
+            sp.t1 = self.clock.now()
+            self._stack.pop()
+            self.spans.append(sp)
+            if self.journal is not None:
+                self.journal.span(sp)
+
+    # -- derived views -------------------------------------------------------
+    def timings(self) -> dict:
+        """The classic ``timings_s`` dict: span durations keyed by NAME
+        (repeated names sum — e.g. multi-launch phases), insertion-ordered
+        by first completion. This is what ``PCRun.timings_s`` now is."""
+        out: dict[str, float] = {}
+        for sp in self.spans:
+            if sp.t1 is None:
+                continue
+            out[sp.name] = out.get(sp.name, 0.0) + sp.dur_s
+        return out
+
+    def finish(self, **attrs):
+        """Write the closing ``run`` record (timings + caller attrs) and
+        release the journal. No-op without a journal."""
+        if self.journal is not None:
+            self.journal.record("run", name=self.name,
+                                ts=self.clock.now(),
+                                timings_s=self.timings(), attrs=attrs)
+            self.journal.close()

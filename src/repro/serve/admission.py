@@ -95,7 +95,7 @@ class AdmissionQueue:
             Lane(
                 rid=req.rid, lane=k, key=key, c=c, m=m, alpha=a,
                 taus=taus_for(m, a, lmax), submitted_at=now,
-                deadline=now + float(req.timeout_s),
+                deadline=now + float(req.timeout_s), enqueued_at=now,
             )
             for k, a in enumerate(alphas)
         ]
@@ -135,6 +135,7 @@ class AdmissionQueue:
     # -- draining -----------------------------------------------------------
     def requeue(self, lane: Lane):
         """Return a retry lane to its bucket (service escalation path)."""
+        lane.enqueued_at = self.clock.now()  # queue-wait restarts per attempt
         self.buckets.setdefault(lane.key, []).append(lane)
 
     def pending(self) -> int:

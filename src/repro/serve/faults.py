@@ -8,7 +8,10 @@ Two pieces make that possible:
 * :class:`ManualClock` — the service reads time only through its injected
   clock, so tests advance time explicitly (``clock.advance(5.0)``) and a
   "slot that ran past the deadline" is a deterministic assertion, not a
-  sleep. Production uses :class:`MonotonicClock`.
+  sleep. Production uses :class:`MonotonicClock`. The clock classes now
+  live in ``repro.obs.trace`` (the observability layer shares them so
+  trace spans and journals are deterministic under the same virtual
+  time); this module re-exports them unchanged.
 
 * :class:`FaultPlan` — a declarative schedule of faults keyed by request
   id and attempt number. The service consults it at each decision point;
@@ -26,35 +29,11 @@ catches it, and the retry re-assembles from the lane's pristine copy);
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
-
-class MonotonicClock:
-    """Real time — the production clock."""
-
-    def now(self) -> float:
-        return time.monotonic()
-
-
-class ManualClock:
-    """Virtual time the test advances by hand. ``advance`` is also how
-    injected slot delays take effect (the service calls it when a
-    FaultPlan prescribes a delay and the clock supports it)."""
-
-    def __init__(self, t0: float = 0.0):
-        self._t = float(t0)
-
-    def now(self) -> float:
-        return self._t
-
-    def advance(self, dt: float) -> float:
-        if dt < 0:
-            raise ValueError(f"cannot advance time backwards (dt={dt})")
-        self._t += float(dt)
-        return self._t
+from repro.obs.trace import ManualClock, MonotonicClock  # noqa: F401
 
 
 @dataclass

@@ -37,6 +37,16 @@ are re-queued from their pristine source rather than dispatched.
 All timing flows through an injectable clock; with a ManualClock the
 whole loop is deterministic (tests/test_serve.py runs every path above
 without a single sleep).
+
+Telemetry: every service owns a :class:`repro.obs.MetricsRegistry` —
+queue-depth and in-flight gauges, request/delivery/retry/deadline-miss/
+dead-letter counters, a latency histogram — and every delivered
+:class:`GraphResult` carries the per-request latency breakdown
+(queue-wait / slot-dispatch / host-assembly, summed across attempts).
+``metrics_text()`` renders the registry in the Prometheus text format
+(the ``launch/pc_serve.py --metrics-port`` endpoint); when obs is
+enabled with a journal path, every service event is additionally
+journaled as a ``serve`` record.
 """
 from __future__ import annotations
 
@@ -45,6 +55,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro import obs
 from repro.batch.scan_pc import pc_scan, pc_scan_batch, plan_schedule
 from repro.core import levels as L
 from repro.core.stable_ref import pc_stable_skeleton
@@ -87,13 +98,24 @@ class PCService:
 
     def __init__(self, config: ServeConfig | None = None,
                  policy: AdmissionPolicy | None = None, *,
-                 clock=None, faults=NO_FAULTS):
+                 clock=None, faults=NO_FAULTS, journal=None):
         self.config = config or ServeConfig()
         self.clock = clock or MonotonicClock()
         self.faults = faults
         self.queue = AdmissionQueue(policy, clock=self.clock, faults=faults)
         self.report = ServiceReport()
         self._schedules: dict = {}  # BucketKey -> planned base width tuple
+        # per-service registry: dict bumps only, no I/O — always on. The
+        # journal (file I/O) engages only when obs is configured on or one
+        # is passed explicitly.
+        self.metrics = obs.MetricsRegistry()
+        self.journal = journal if journal is not None else obs.journal_for()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the service registry (scraped by
+        the ``--metrics-port`` endpoint in launch/pc_serve.py)."""
+        self.metrics.set_gauge("pc_serve_queue_depth", self.queue.pending())
+        return self.metrics.expose()
 
     # ladder geometry -------------------------------------------------------
     @property
@@ -109,9 +131,13 @@ class PCService:
         out = self.queue.submit(req)
         if isinstance(out, Rejection):
             self.report.rejections[req.rid] = out
+            self.metrics.inc("pc_serve_requests_total", outcome="rejected",
+                             code=out.code)
             self._log("reject", rid=req.rid, code=out.code)
         else:
+            self.metrics.inc("pc_serve_requests_total", outcome="admitted")
             self._log("admit", rid=req.rid, lanes=len(out), key=out[0].key)
+        self.metrics.set_gauge("pc_serve_queue_depth", self.queue.pending())
         return out
 
     # -- the loop -----------------------------------------------------------
@@ -124,19 +150,25 @@ class PCService:
             return False
         key, attempt, lanes = slot
         self.report.steps += 1
+        for ln in lanes:  # the slot seat ends this attempt's queue wait
+            ln.queue_wait_s += max(0.0, now - ln.enqueued_at)
+        self.metrics.set_gauge("pc_serve_queue_depth", self.queue.pending())
 
         lanes = self._reap_expired(lanes, now, stage="queued")
         lanes = self._screen_corruption(lanes, attempt, now)
         if not lanes:
             return True
 
-        if attempt >= self._stable_rung:
-            self._run_stable(lanes)
-            return True
-        if attempt >= self._solo_rung:
-            self._run_solo(lanes)
-            return True
-        self._run_slot(key, attempt, lanes)
+        self.metrics.set_gauge("pc_serve_inflight", len(lanes))
+        try:
+            if attempt >= self._stable_rung:
+                self._run_stable(lanes)
+            elif attempt >= self._solo_rung:
+                self._run_solo(lanes)
+            else:
+                self._run_slot(key, attempt, lanes)
+        finally:
+            self.metrics.set_gauge("pc_serve_inflight", 0)
         return True
 
     def drain(self, max_steps: int = 10_000) -> ServiceReport:
@@ -211,6 +243,7 @@ class PCService:
         self._log("slot_dispatch", key=key, attempt=attempt, size=len(lanes),
                   schedule=widened, jitter=jitter,
                   rids=[ln.rid for ln in lanes])
+        t_disp = self.clock.now()
         res = pc_scan_batch(
             np.stack([ln._slot_c for ln in lanes]), lanes[0].m,
             max_level=key.max_level,
@@ -221,7 +254,7 @@ class PCService:
             jitter=jitter,
         )
         ok = np.asarray(res.ok).reshape(len(lanes))
-        now = self._after_dispatch(lanes)
+        now = self._after_dispatch(lanes, t_disp)
         for i, ln in enumerate(lanes):
             ok_i = bool(ok[i]) and not self.faults.force_cert_miss(ln.rid, attempt)
             if not ok_i:
@@ -241,13 +274,14 @@ class PCService:
         attempt = self._solo_rung
         for ln in lanes:
             self._log("solo_dispatch", rid=ln.rid, lane=ln.lane)
+            t_disp = self.clock.now()
             res = pc_scan(
                 ln._slot_c, ln.m, max_level=ln.key.max_level,
                 sepset_depth=self.queue.policy.sepset_depth, n_prime=None,
                 cell_budget=self.config.cell_budget, orient=self.config.orient,
                 taus=np.asarray(ln.taus, np.float32),
             )
-            now = self._after_dispatch([ln])
+            now = self._after_dispatch([ln], t_disp)
             ok = bool(np.asarray(res.ok)) and not self.faults.force_cert_miss(
                 ln.rid, attempt)
             if not ok:
@@ -271,23 +305,29 @@ class PCService:
                            stage="exhausted")
                 continue
             self._log("stable_dispatch", rid=ln.rid, lane=ln.lane)
+            t_disp = self.clock.now()
             ref = pc_stable_skeleton(np.asarray(ln._slot_c, np.float64), ln.m,
                                      alpha=ln.alpha, max_level=ln.key.max_level)
             adj = np.asarray(ref.adj, bool)
             sep = _sepsets_to_tensor(ref.sepsets, adj, depth)
             cpdag = _orient_host(adj, sep) if self.config.orient else adj
-            now = self._after_dispatch([ln])
+            now = self._after_dispatch([ln], t_disp)
             self._log("degraded", rid=ln.rid, lane=ln.lane)
             self._deliver(ln, now, attempt, tier=TIER_STABLE,
                           adj=adj, cpdag=cpdag, sepsets=sep, exact=False)
 
     # -- outcomes -----------------------------------------------------------
-    def _after_dispatch(self, lanes) -> float:
-        """Advance virtual time by any injected slot delay; return now."""
+    def _after_dispatch(self, lanes, t_disp: float | None = None) -> float:
+        """Advance virtual time by any injected slot delay; charge the
+        dispatch window to each lane's breakdown; return now."""
         delay = self.faults.delay_for([ln.rid for ln in lanes])
         if delay > 0 and hasattr(self.clock, "advance"):
             self.clock.advance(delay)
-        return self.clock.now()
+        now = self.clock.now()
+        if t_disp is not None:
+            for ln in lanes:
+                ln.dispatch_s += max(0.0, now - t_disp)
+        return now
 
     def _retry(self, ln: Lane, now: float, reason: str):
         nxt = ln.attempt + 1
@@ -298,33 +338,49 @@ class PCService:
             return
         ln.attempt = nxt
         ln.not_before = now + self.config.backoff_s * (2 ** (nxt - 1))
+        self.metrics.inc("pc_serve_retries_total", reason=reason)
         self._log("retry", rid=ln.rid, lane=ln.lane, attempt=nxt,
                   not_before=ln.not_before, reason=reason)
         self.queue.requeue(ln)
+        self.metrics.set_gauge("pc_serve_queue_depth", self.queue.pending())
 
     def _deliver(self, ln: Lane, now: float, attempt: int, *, tier, adj,
                  cpdag, sepsets, exact):
         expired = self._reap_expired([ln], now, stage="completed")
         if not expired:  # deadline tripped at delivery; result discarded
             return
-        self.report.delivered.setdefault(ln.rid, {})[ln.lane] = GraphResult(
+        assembly_s = max(0.0, self.clock.now() - now)
+        res = GraphResult(
             rid=ln.rid, lane=ln.lane, alpha=ln.alpha, adj=adj, cpdag=cpdag,
             sepsets=sepsets, exact=exact, tier=tier, attempts=attempt + 1,
-            latency_s=now - ln.submitted_at,
+            latency_s=now - ln.submitted_at, queue_wait_s=ln.queue_wait_s,
+            dispatch_s=ln.dispatch_s, assembly_s=assembly_s,
         )
+        self.report.delivered.setdefault(ln.rid, {})[ln.lane] = res
+        self.metrics.inc("pc_serve_deliveries_total", tier=tier)
+        self.metrics.observe("pc_serve_latency_seconds", res.latency_s)
         self._log("delivered", rid=ln.rid, lane=ln.lane, tier=tier,
-                  attempts=attempt + 1)
+                  attempts=attempt + 1, latency_s=res.latency_s,
+                  queue_wait_s=res.queue_wait_s, dispatch_s=res.dispatch_s,
+                  assembly_s=res.assembly_s)
 
     def _dead(self, ln: Lane, code: str, message: str, stage: str):
         self.report.dead_letters.append(DeadLetter(
             rid=ln.rid, lane=ln.lane, code=code, message=message,
             stage=stage, attempts=ln.attempt,
         ))
+        self.metrics.inc("pc_serve_dead_letters_total", code=code)
+        if code == "deadline":
+            self.metrics.inc("pc_serve_deadline_miss_total", stage=stage)
         self._log("dead_letter", rid=ln.rid, lane=ln.lane, code=code,
                   stage=stage)
 
     def _log(self, event: str, **info):
         self.report.events.append({"event": event, **info})
+        if self.journal is not None:
+            self.journal.record("serve", event=event, ts=self.clock.now(),
+                                **{k: v for k, v in info.items()
+                                   if not isinstance(v, np.ndarray)})
 
 
 def _sepsets_to_tensor(sepsets: dict, adj: np.ndarray, depth: int) -> np.ndarray:

@@ -87,6 +87,11 @@ class Lane:
     deadline: float
     attempt: int = 0
     not_before: float = 0.0  # backoff gate for retries
+    # telemetry: when the lane (re-)entered its bucket, and the latency
+    # breakdown accumulated across attempts (service clock seconds)
+    enqueued_at: float = 0.0
+    queue_wait_s: float = 0.0
+    dispatch_s: float = 0.0
 
 
 @dataclass
@@ -134,6 +139,11 @@ class GraphResult:
     tier: str
     attempts: int
     latency_s: float
+    # latency breakdown (sums across attempts, service clock): time queued
+    # behind the bucket, time inside slot dispatches, and host assembly
+    queue_wait_s: float = 0.0
+    dispatch_s: float = 0.0
+    assembly_s: float = 0.0
 
 
 @dataclass

@@ -123,6 +123,31 @@ def test_grid_engine_bit_parity(n, density, alpha, seed):
     assert s_disp >= len(ran)
 
 
+def test_registry_counts_agree_with_level_stats_across_engines():
+    """Counter-drift guard (ISSUE-7): dispatches/chunks used to be bumped
+    in three unrelated places; obs.record_level_stats at the
+    engines.run_level seam is now the single definition, so the metrics
+    registry totals must equal the summed per-level stats dicts — for
+    every engine, including the paths that overwrite st["engine"]."""
+    from repro import obs
+
+    m = 2000
+    x, _ = sample_gaussian_dag(n=16, m=m, density=0.2, seed=4)
+    c = correlation_from_samples(jnp.asarray(x))
+    for engine in ("S", "E", "S-grid", "auto"):
+        with obs.scoped(enabled=True), obs.scoped_registry() as reg:
+            run = pc_from_corr(c, m, alpha=0.01, engine=engine)
+            want_disp = sum(st["dispatches"] for st in run.level_stats)
+            want_chunks = sum(st.get("chunks", 0) for st in run.level_stats)
+            assert reg.total(obs.DISPATCHES) == want_disp, engine
+            assert reg.total(obs.CHUNKS) == want_chunks, engine
+            assert reg.total(obs.LEVELS) == len(run.level_stats), engine
+            # labels carry the CONCRETE engine names (auto resolves per level)
+            for st in run.level_stats:
+                assert reg.value(obs.LEVELS, engine=st["engine"],
+                                 level=st["level"], layout="single") >= 1
+
+
 def test_grid_engine_multi_launch_parity():
     """A launch budget too small for one level forces several grid launches;
     ranks ascend across launches and each launch fuses its own commit, so

@@ -1,0 +1,341 @@
+"""Observability layer (repro/obs/): trace spans, metrics registry, JSONL
+journals, serving telemetry, and the zero-overhead contract.
+
+The two contracts that matter most:
+
+* Disabled obs is invisible: no journal file is created, and pc outputs
+  are BIT-IDENTICAL with obs on vs off (spans only add block_until_ready
+  calls, never change what is computed).
+* On a ManualClock the whole trace — span timeline, journal bytes — is
+  deterministic, so journals can be asserted on, not just eyeballed.
+
+Also here: the counter-drift guard. dispatches/col_gathers used to be
+incremented in three unrelated places; record_level_stats is now the one
+definition, and these tests assert the per-level stats dicts and the
+registry totals agree (see also test_engines.py / test_sharding.py).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+
+pytestmark = pytest.mark.obs
+
+M = 400
+
+
+def _x(n=12, seed=0, m=M):
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    x, _ = sample_gaussian_dag(n=n, m=m, density=0.15, seed=seed)
+    return np.asarray(x, np.float32)
+
+
+# ---------------------------------------------------------------- spans
+def test_span_nesting_paths_and_durations():
+    clk = obs.ManualClock()
+    tr = obs.Tracer("t", clock=clk)
+    with tr.span("total"):
+        clk.advance(1.0)
+        with tr.span("level1", level=1):
+            clk.advance(2.0)
+        with tr.span("level2"):
+            clk.advance(3.0)
+    done = {s.name: s for s in tr.spans}
+    assert done["level1"].path == "total/level1"
+    assert done["level1"].depth == 1
+    assert done["level1"].attrs["level"] == 1
+    assert done["level1"].dur_s == 2.0
+    assert done["level2"].dur_s == 3.0
+    assert done["total"].dur_s == 6.0
+    assert tr.timings() == {"level1": 2.0, "level2": 3.0, "total": 6.0}
+
+
+def test_span_repeated_names_sum_in_timings():
+    clk = obs.ManualClock()
+    tr = obs.Tracer(clock=clk)
+    for _ in range(3):
+        with tr.span("chunk"):
+            clk.advance(0.5)
+    assert tr.timings() == {"chunk": 1.5}
+
+
+def test_span_exception_safety():
+    clk = obs.ManualClock()
+    tr = obs.Tracer(clock=clk)
+    with pytest.raises(ValueError):
+        with tr.span("outer"):
+            with tr.span("inner"):
+                clk.advance(1.0)
+                raise ValueError("boom")
+    # both spans closed, error recorded, stack unwound
+    assert [s.name for s in tr.spans] == ["inner", "outer"]
+    assert all(s.t1 is not None for s in tr.spans)
+    assert tr.spans[0].attrs["error"] == "ValueError"
+    assert tr._stack == []
+    with tr.span("after"):  # tracer still usable
+        pass
+    assert tr.spans[-1].path == "after"
+
+
+def test_disabled_tracer_yields_noop_span():
+    tr = obs.Tracer(enabled=False)
+    with tr.span("x") as sp:
+        assert sp is obs.NULL_SPAN
+        sp.set(a=1).sync(np.zeros(3))  # all no-ops
+    assert tr.spans == []
+    assert tr.timings() == {}
+
+
+# -------------------------------------------------------------- metrics
+def test_metrics_labeled_aggregation():
+    reg = obs.MetricsRegistry()
+    reg.inc(obs.DISPATCHES, 3, engine="S", level=1)
+    reg.inc(obs.DISPATCHES, 5, engine="S", level=2)
+    reg.inc(obs.DISPATCHES, 7, engine="S-grid", level=1)
+    assert reg.value(obs.DISPATCHES, engine="S", level=1) == 3
+    assert reg.total(obs.DISPATCHES, engine="S") == 8
+    assert reg.total(obs.DISPATCHES) == 15
+    reg.set_gauge("depth", 4)
+    reg.set_gauge("depth", 2)
+    assert reg.value("depth") == 2
+    reg.observe("lat", 0.003)
+    reg.observe("lat", 2.0)
+    fam = reg.collect()["lat"]["series"][0]
+    assert fam["count"] == 2 and fam["sum"] == 2.003
+
+
+def test_metrics_kind_conflict_raises():
+    reg = obs.MetricsRegistry()
+    reg.inc("x")
+    with pytest.raises(TypeError):
+        reg.set_gauge("x", 1.0)
+
+
+def test_metrics_prometheus_exposition():
+    reg = obs.MetricsRegistry()
+    reg.inc("pc_dispatches_total", 4, engine="S", level=1)
+    reg.set_gauge("pc_serve_queue_depth", 3)
+    reg.observe("pc_serve_latency_seconds", 0.02)
+    text = reg.expose()
+    assert "# TYPE pc_dispatches_total counter" in text
+    assert 'pc_dispatches_total{engine="S",level="1"} 4.0' in text
+    assert "pc_serve_queue_depth 3.0" in text
+    assert 'pc_serve_latency_seconds_bucket{le="+Inf"} 1' in text
+    assert "pc_serve_latency_seconds_count 1" in text
+
+
+def test_record_level_stats_single_definition():
+    reg = obs.MetricsRegistry()
+    st = {"engine": "S", "dispatches": 6, "chunks": 3, "total_sets": 100,
+          "col_gathers": 3, "col_gather_bytes": 1200}
+    obs.record_level_stats(st, level=2, layout="sharded", registry=reg)
+    assert reg.total(obs.DISPATCHES) == 6
+    assert reg.total(obs.COL_GATHERS) == 3
+    assert reg.total(obs.COL_GATHER_BYTES) == 1200
+    assert reg.value(obs.LEVELS, engine="S", level=2, layout="sharded") == 1
+    # no col_gathers key → the gather series are untouched, not zero-bumped
+    reg2 = obs.MetricsRegistry()
+    obs.record_level_stats({"engine": "E", "dispatches": 2}, level=1,
+                           registry=reg2)
+    assert obs.COL_GATHERS not in reg2.collect()
+
+
+# -------------------------------------------------------------- journal
+def test_journal_schema_round_trip(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    clk = obs.ManualClock()
+    jr = obs.Journal(path)
+    tr = obs.Tracer("run", clock=clk, journal=jr)
+    with tr.span("total"):
+        clk.advance(1.0)
+        with tr.span("level1", chunks=2):
+            clk.advance(0.5)
+    tr.finish(driver="test")
+    recs = obs.read_journal(path)
+    assert [r["kind"] for r in recs] == ["span", "span", "run"]
+    assert all(r["schema"] == obs.SCHEMA_VERSION for r in recs)
+    lv = next(r for r in recs if r.get("name") == "level1")
+    assert lv["path"] == "total/level1"
+    assert lv["dur_s"] == 0.5
+    assert lv["attrs"] == {"chunks": 2}
+    run = recs[-1]
+    assert run["timings_s"] == {"level1": 0.5, "total": 1.5}
+    assert obs.phase_summary(recs, depth=1) == {"level1": 0.5}
+
+
+def test_journal_deterministic_under_manual_clock(tmp_path):
+    def one(path):
+        clk = obs.ManualClock()
+        tr = obs.Tracer("run", clock=clk, journal=obs.Journal(path))
+        with tr.span("total", cfg="x"):
+            clk.advance(2.0)
+            with tr.span("phase"):
+                clk.advance(1.0)
+        tr.finish(seed=0)
+        with open(path, encoding="utf-8") as fh:
+            return fh.read()
+
+    a = one(str(tmp_path / "a.jsonl"))
+    b = one(str(tmp_path / "b.jsonl"))
+    assert a == b  # byte-identical journals on virtual time
+
+
+def test_journal_lazy_open_leaves_no_file(tmp_path):
+    path = str(tmp_path / "never.jsonl")
+    jr = obs.Journal(path)
+    jr.close()
+    assert not os.path.exists(path)
+
+
+# -------------------------------------------- driver integration + gating
+def test_pc_journal_spans_reconcile_with_total(tmp_path):
+    from repro.core.pc import pc
+
+    path = str(tmp_path / "pc.jsonl")
+    x = _x()
+    with obs.scoped(enabled=True, journal_path=path):
+        run = pc(x, alpha=0.01)
+    recs = obs.read_journal(path)
+    phases = obs.phase_summary(recs, depth=1)
+    # every timings_s phase appears in the journal with the same duration
+    for k, v in run.timings_s.items():
+        if k == "total":
+            continue
+        assert phases[k] == pytest.approx(v)
+    assert sum(phases.values()) <= run.timings_s["total"] + 1e-6
+    assert sum(phases.values()) >= 0.5 * run.timings_s["total"]
+    run_rec = [r for r in recs if r["kind"] == "run"]
+    assert len(run_rec) == 1 and run_rec[0]["timings_s"] == run.timings_s
+
+
+def test_zero_overhead_contract_disabled_obs(tmp_path):
+    """Disabled obs: no journal file, bit-identical pc outputs on/off."""
+    from repro.core.pc import pc
+
+    x = _x(seed=3)
+    assert not obs.enabled()
+    base = pc(x, alpha=0.01)
+    path = str(tmp_path / "on.jsonl")
+    with obs.scoped(enabled=True, journal_path=path), obs.scoped_registry():
+        on = pc(x, alpha=0.01)
+    off = pc(x, alpha=0.01)
+    for a, b in ((base, on), (base, off)):
+        np.testing.assert_array_equal(a.adj, b.adj)
+        np.testing.assert_array_equal(a.cpdag, b.cpdag)
+        np.testing.assert_array_equal(a.sepsets, b.sepsets)
+    assert os.path.exists(path)  # enabled run journaled...
+    # ...and the disabled runs wrote nothing anywhere
+    assert list(tmp_path.iterdir()) == [tmp_path / "on.jsonl"]
+
+
+def test_timings_populated_without_obs():
+    """timings_s is a derived view of the always-on driver tracer — it
+    must stay populated with the classic keys even with obs disabled."""
+    from repro.core.pc import pc
+
+    run = pc(_x(), alpha=0.01)
+    assert "level0" in run.timings_s and "orient" in run.timings_s
+    assert "total" in run.timings_s
+    assert run.timings_s["total"] >= run.timings_s["level0"]
+
+
+def test_registry_counts_match_level_stats():
+    """The drift guard at the single-device seam: registry totals ==
+    summed per-level stats dicts, engine-labeled."""
+    from repro.core.pc import pc_from_corr
+    from repro.core.cit import correlation_from_samples
+
+    c = np.asarray(correlation_from_samples(_x(seed=5)))
+    with obs.scoped(enabled=True), obs.scoped_registry() as reg:
+        run = pc_from_corr(c, M, alpha=0.01, engine="S")
+        want = sum(st["dispatches"] for st in run.level_stats)
+        assert reg.total(obs.DISPATCHES, layout="single") == want
+        assert reg.total(obs.CHUNKS, layout="single") == \
+            sum(st.get("chunks", 0) for st in run.level_stats)
+        assert reg.total(obs.LEVELS) == len(run.level_stats)
+
+
+# ---------------------------------------------------------------- serving
+def _serve_x(n=12, seed=1):
+    return _x(n=n, seed=seed)
+
+
+def test_service_latency_breakdown_and_counters():
+    from repro.serve import ManualClock, PCService, Request, ServeConfig
+
+    clk = ManualClock()
+    svc = PCService(ServeConfig(slot_size=4), clock=clk)
+    svc.submit(Request(rid="r1", x=_serve_x(), alpha=0.01, max_level=2))
+    clk.advance(0.25)  # queue wait before the dispatch loop runs
+    rep = svc.drain()
+    g = rep.result("r1")
+    assert g.queue_wait_s == pytest.approx(0.25)
+    assert g.dispatch_s >= 0.0 and g.assembly_s >= 0.0
+    assert svc.metrics.value("pc_serve_requests_total",
+                             outcome="admitted") == 1
+    assert svc.metrics.total("pc_serve_deliveries_total") == 1
+    assert svc.metrics.value("pc_serve_queue_depth") == 0
+    text = svc.metrics_text()
+    assert 'pc_serve_deliveries_total{tier="slot"} 1.0' in text
+
+
+def test_service_deadline_miss_and_retry_counters():
+    from repro.serve import FaultPlan, ManualClock, PCService, Request, \
+        ServeConfig
+
+    clk = ManualClock()
+    faults = FaultPlan(cert_miss={"r-miss": 1}, slot_delay={"r-late": 9.0})
+    svc = PCService(ServeConfig(slot_size=2, backoff_s=0.01), clock=clk,
+                    faults=faults)
+    svc.submit(Request(rid="r-late", x=_serve_x(seed=2), max_level=2,
+                       timeout_s=2.0))
+    svc.submit(Request(rid="r-miss", x=_serve_x(seed=3), max_level=2))
+    rep = svc.drain()
+    assert any(d.rid == "r-late" and d.code == "deadline"
+               for d in rep.dead_letters)
+    assert svc.metrics.total("pc_serve_deadline_miss_total") >= 1
+    assert svc.metrics.value("pc_serve_retries_total",
+                             reason="cert_miss") >= 1
+    assert svc.metrics.value("pc_serve_dead_letters_total",
+                             code="deadline") >= 1
+    assert rep.result("r-miss").exact  # the retry ladder still delivered
+
+
+def test_service_journal_serve_records(tmp_path):
+    from repro.serve import ManualClock, PCService, Request, ServeConfig
+
+    path = str(tmp_path / "serve.jsonl")
+    with obs.scoped(enabled=True, journal_path=path):
+        svc = PCService(ServeConfig(slot_size=4), clock=ManualClock())
+        svc.submit(Request(rid="r1", x=_serve_x(seed=4), max_level=2))
+        svc.drain()
+    recs = obs.read_journal(path)
+    kinds = {r["event"] for r in recs if r["kind"] == "serve"}
+    assert {"admit", "slot_dispatch", "delivered"} <= kinds
+    dl = next(r for r in recs if r.get("event") == "delivered")
+    for field in ("queue_wait_s", "dispatch_s", "assembly_s", "latency_s"):
+        assert field in dl
+    assert all(json.dumps(r) for r in recs)  # every record JSON-clean
+
+
+def test_service_outputs_identical_with_obs_on_off(tmp_path):
+    from repro.serve import ManualClock, PCService, Request, ServeConfig
+
+    x = _serve_x(seed=6)
+
+    def run(**scope):
+        with obs.scoped(**scope):
+            svc = PCService(ServeConfig(slot_size=4), clock=ManualClock())
+            svc.submit(Request(rid="r", x=x, max_level=2))
+            return svc.drain().result("r")
+
+    g_off = run(enabled=False)
+    g_on = run(enabled=True, journal_path=str(tmp_path / "s.jsonl"))
+    np.testing.assert_array_equal(g_off.adj, g_on.adj)
+    np.testing.assert_array_equal(g_off.cpdag, g_on.cpdag)
+    np.testing.assert_array_equal(g_off.sepsets, g_on.sepsets)
+    assert g_off.latency_s == g_on.latency_s  # virtual clocks agree too

@@ -275,6 +275,38 @@ def test_hot_column_cache_parity_and_gather_counts():
     """)
 
 
+def test_registry_counts_agree_with_sharded_level_stats():
+    """Counter-drift guard (ISSUE-7), distributed seam: the metrics
+    registry fed by obs.record_level_stats in run_level_sharded must agree
+    with the per-level stats dicts — dispatches, chunks, col_gathers AND
+    col_gather_bytes, for both the cached and uncached column paths."""
+    _run_script("""
+        import jax, numpy as np
+        assert len(jax.devices()) == 8
+        from repro import obs
+        from repro.data.synthetic_dag import sample_gaussian_dag
+        from repro.core.distributed import pc_distributed
+
+        x, _ = sample_gaussian_dag(n=33, m=2500, density=0.2, seed=7)
+        for kw in (dict(shard_c=True, cell_budget=2**9),
+                   dict(shard_c=True, cache_cols=False, cell_budget=2**9),
+                   dict(engine='S-grid')):
+            with obs.scoped(enabled=True), obs.scoped_registry() as reg:
+                run = pc_distributed(x=x, **kw)
+                st = run.level_stats
+                assert reg.total(obs.DISPATCHES, layout="sharded") == \\
+                    sum(s["dispatches"] for s in st), kw
+                assert reg.total(obs.CHUNKS, layout="sharded") == \\
+                    sum(s.get("chunks", 0) for s in st), kw
+                if kw.get("shard_c"):
+                    assert reg.total(obs.COL_GATHERS) == \\
+                        sum(s.get("col_gathers", 0) for s in st), kw
+                    assert reg.total(obs.COL_GATHER_BYTES) == \\
+                        sum(s.get("col_gather_bytes", 0) for s in st), kw
+        print("OK")
+    """)
+
+
 # --------------------------------------------- grid-resident engine (S-grid)
 @pytest.mark.parametrize("ndev,n,dens,seed,combos", [
     # 30 % 8 != 0 → row-pad path; layouts + speculation + pipelined args
