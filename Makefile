@@ -2,8 +2,9 @@
 PY ?= python
 
 .PHONY: test verify-kernels verify-batch verify-distributed verify-serve \
-        verify-obs lint docs-check bench-pc bench-pc-batch \
-        bench-pc-distributed bench-pc-grid bench-pc-serve bench-check ci
+        verify-obs verify-cit lint docs-check bench-pc bench-pc-batch \
+        bench-pc-distributed bench-pc-grid bench-pc-cit bench-pc-serve \
+        bench-check ci
 
 test:  ## tier-1 suite
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -26,6 +27,10 @@ verify-obs:  ## observability layer: spans/metrics/journals + zero-overhead cont
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	  PYTHONPATH=src $(PY) -m pytest -q -m obs tests/test_obs.py
 
+verify-cit:  ## CI-test seam: Gaussian bit-identity, discrete G² vs oracle, kernel parity
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	  PYTHONPATH=src $(PY) -m pytest -q -m cit tests/test_cit.py
+
 lint:  ## ruff over the python tree (same invocation as CI)
 	ruff check src tests benchmarks scripts
 
@@ -43,6 +48,9 @@ bench-pc-distributed:  ## pipelined-vs-sync dispatch + column-gather traffic -> 
 
 bench-pc-grid:  ## grid-resident engine: dispatch collapse + wall time -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_grid
+
+bench-pc-cit:  ## Gaussian vs discrete G² wall time + cit parity flag -> BENCH_pc.json
+	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_cit
 
 bench-pc-serve:  ## serving throughput/latency under open-loop arrivals -> BENCH_pc.json
 	PYTHONPATH=src $(PY) -m benchmarks.run --only pc_serve

@@ -48,6 +48,7 @@ _SECTION_BASE = {
     "pc_batch": lambda base: base.get("pc_batch"),
     "pc_distributed": lambda base: base.get("pc_distributed"),
     "pc_grid": lambda base: base.get("pc_grid"),
+    "pc_cit": lambda base: base.get("pc_cit"),
     "pc_serve": lambda base: base.get("pc_serve"),
     "pc_engines": lambda base: {
         k: base[k] for k in ("backend", "engines", "configs") if k in base
@@ -202,9 +203,10 @@ def main(argv=None) -> int:
                          "(benchmarks.run --only <section>)")
     ap.add_argument("--sections", nargs="*",
                     default=["pc_batch", "pc_distributed", "pc_grid",
-                             "pc_serve"],
+                             "pc_cit", "pc_serve"],
                     help="BENCH sections to gate "
-                         "(default: pc_batch pc_distributed pc_grid pc_serve; any "
+                         "(default: pc_batch pc_distributed pc_grid pc_cit "
+                         "pc_serve; any "
                          "other baseline section carrying parity flags is "
                          "added automatically — parity self-checks cannot "
                          "be skipped by narrowing the section list)")

@@ -1,0 +1,132 @@
+"""CI-test seam benchmark (ISSUE 9): Gaussian vs discrete G² wall time.
+
+Times PC-stable end-to-end under the two CITest objects on size-matched
+synthetic workloads — the Fisher-z partial-correlation path (unchanged by
+the seam; its timing doubles as a refactor-regression probe) and the new
+discrete G²/χ² contingency-table path, both through the jnp worklist and
+the Pallas engines ("auto" → G2-kernel for discrete). The tracked quality
+signal is ``cit_parity_ok``, the conjunction of
+
+  * gaussian_bit_identical — pc() routed through an explicit GaussianCITest
+    reproduces the default path bit-for-bit (skeleton, sepsets, CPDAG);
+  * g2_kernel_parity — the Pallas G² engine matches the jnp G² engine
+    bit-for-bit (skeleton + sepsets);
+  * oracle_match — the batched discrete engine reproduces the serial
+    per-triple contingency-table oracle's skeleton exactly.
+
+benchmarks/check_regression.py gates on the flag: a faster-but-wrong CI
+test is not a result. NOTE on CPU numbers: off-TPU the G2-kernel variant
+runs the Pallas interpreter, so the jnp "G2" row is the wall-time signal
+there; on TPU the same harness times the compiled Mosaic launch.
+Writes benchmarks/results/pc_cit.json and merges a "pc_cit" section into
+the repo-root BENCH_pc.json trajectory.
+"""
+from __future__ import annotations
+
+from .common import md_table, merge_bench_trajectory, save, timed
+
+CONFIG = dict(n_gauss=40, m_gauss=3000, n_disc=16, m_disc=2000,
+              arity=3, density=0.2, max_level=2)
+QUICK = dict(n_gauss=24, m_gauss=1500, n_disc=10, m_disc=800,
+             arity=3, density=0.2, max_level=2)
+
+
+def _discrete_x(n, m, arity, density, seed):
+    import numpy as np
+
+    from repro.data.synthetic_dag import sample_discrete_dag
+
+    x, _ = sample_discrete_dag(n=n, m=m, density=density, arity=arity,
+                               seed=seed)
+    for k in range(n):  # validation rejects the generator's rare constant col
+        if len(np.unique(x[:, k])) < 2:
+            x[0, k] = (x[1, k] + 1) % arity
+    return x
+
+
+def _one(x, *, test, engine, max_level, alpha):
+    from repro.core.pc import pc
+
+    run, total = timed(
+        lambda: pc(x, alpha=alpha, engine=engine, test=test,
+                   max_level=max_level, orient=True),
+        repeat=1,
+    )
+    return run, {
+        "total_s": total,
+        "levels_run": run.levels_run,
+        "edges": int(run.adj.sum()) // 2,
+        "per_level_s": {k: v for k, v in run.timings_s.items()
+                        if k.startswith("level")},
+    }
+
+
+def run(full: bool = False, quick: bool = False) -> str:
+    import jax
+    import numpy as np
+
+    from repro.core.cit import GaussianCITest
+    from repro.core.stable_ref import pc_stable_skeleton_discrete
+    from repro.data.synthetic_dag import sample_gaussian_dag
+
+    cfg = QUICK if quick else CONFIG
+    scale = 2 if full else 1
+    lmax = cfg["max_level"]
+
+    xg, _ = sample_gaussian_dag(n=cfg["n_gauss"] * scale, m=cfg["m_gauss"],
+                                density=0.15, seed=17)
+    xd = _discrete_x(cfg["n_disc"] * scale, cfg["m_disc"], cfg["arity"],
+                     cfg["density"], seed=17)
+
+    runs, records = {}, {}
+    variants = {
+        "gaussian-S": (xg, dict(test=None, engine="S", alpha=0.01)),
+        "gaussian-auto": (xg, dict(test=None, engine="auto", alpha=0.01)),
+        "discrete-G2": (xd, dict(test="discrete", engine="G2", alpha=0.05)),
+        "discrete-G2-kernel": (xd, dict(test="discrete", engine="G2-kernel",
+                                        alpha=0.05)),
+    }
+    for label, (x, kw) in variants.items():
+        runs[label], records[label] = _one(x, max_level=lmax, **kw)
+
+    # parity gates — a fast wrong answer is not a result
+    base = runs["gaussian-S"]
+    via = _one(xg, test=GaussianCITest(m=int(xg.shape[0]), alpha=0.01),
+               engine="S", max_level=lmax, alpha=0.01)[0]
+    gaussian_bit_identical = bool(
+        np.array_equal(base.adj, via.adj)
+        and np.array_equal(base.sepsets, via.sepsets)
+        and np.array_equal(base.cpdag, via.cpdag)
+    )
+    a, b = runs["discrete-G2"], runs["discrete-G2-kernel"]
+    g2_kernel_parity = bool(
+        np.array_equal(a.adj, b.adj) and np.array_equal(a.sepsets, b.sepsets)
+    )
+    oracle = pc_stable_skeleton_discrete(np.asarray(xd), alpha=0.05,
+                                         max_level=lmax)
+    oracle_match = bool(np.array_equal(a.adj, oracle.adj))
+
+    payload = {
+        "backend": jax.default_backend(),
+        "config": {**cfg, "scale": scale},
+        **records,
+        "gaussian_bit_identical": gaussian_bit_identical,
+        "g2_kernel_parity": g2_kernel_parity,
+        "oracle_match": oracle_match,
+        "cit_parity_ok": bool(gaussian_bit_identical and g2_kernel_parity
+                              and oracle_match),
+        "oracle_ci_tests": oracle.ci_tests,
+    }
+    save("pc_cit", payload)
+    merge_bench_trajectory({"pc_cit": payload})
+
+    rows = [
+        [label, f"{r['total_s']:.2f}s", r["edges"], r["levels_run"]]
+        for label, r in records.items()
+    ]
+    return ("### CI-test seam (Gaussian vs discrete G², wall time)\n\n"
+            + md_table(["variant", "total", "edges", "levels"], rows)
+            + f"\n\nparity: cit={payload['cit_parity_ok']} "
+              f"(gaussian-bits={gaussian_bit_identical} "
+              f"kernel={g2_kernel_parity} oracle={oracle_match}); "
+              f"serial oracle ran {oracle.ci_tests} G² tests.")

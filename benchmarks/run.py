@@ -11,9 +11,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig5, fig6, fig7_8, fig9, fig10, pc_batch, pc_distributed,
-               pc_engines, pc_grid, pc_hillclimb, pc_serve, roofline_table,
-               table2)
+from . import (fig5, fig6, fig7_8, fig9, fig10, pc_batch, pc_cit,
+               pc_distributed, pc_engines, pc_grid, pc_hillclimb, pc_serve,
+               roofline_table, table2)
 from .common import RESULTS
 
 MODULES = [
@@ -27,6 +27,7 @@ MODULES = [
     ("pc_batch", pc_batch),
     ("pc_distributed", pc_distributed),
     ("pc_grid", pc_grid),
+    ("pc_cit", pc_cit),
     ("pc_serve", pc_serve),
     ("pc_hillclimb", pc_hillclimb),
     ("roofline", roofline_table),

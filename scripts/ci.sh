@@ -31,11 +31,15 @@ echo "[ci] observability layer: spans/metrics/journals + zero-overhead contract"
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
   PYTHONPATH=src python -m pytest -q -m obs tests/test_obs.py
 
+echo "[ci] CI-test seam: Gaussian bit-identity + discrete G² vs oracle + kernel parity"
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+  PYTHONPATH=src python -m pytest -q -m cit tests/test_cit.py
+
 echo "[ci] docs-check (execute fenced snippets in README.md + docs/)"
 python scripts/check_docs.py
 
 echo "[ci] tier-1 remainder (kernels/batch/distributed already ran above)"
-PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed and not serve and not obs"
+PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed and not serve and not obs and not cit"
 
 # non-blocking: perf numbers on shared machines are advisory; structural
 # regressions (missing BENCH keys, parity-flag flips, parity flags a bench
@@ -45,7 +49,7 @@ PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not dist
 # workflow's dedicated bench-check job owns it there, uploading the fresh
 # JSON as an artifact).
 if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
-  echo "[ci] bench-check (non-blocking: pc_batch pc_distributed pc_grid pc_serve)"
+  echo "[ci] bench-check (non-blocking: pc_batch pc_distributed pc_grid pc_cit pc_serve)"
   PYTHONPATH=src python -m benchmarks.check_regression --run \
     || echo "[ci] bench-check reported regressions (non-blocking)"
 fi

@@ -153,15 +153,23 @@ def plan_n_prime(cs, m: int, alpha: float = 0.01, tau0=None) -> int:
     return max(1, min(L.bucket_npr(npr), n))
 
 
-def _plan_chunk(n: int, w: int, ell: int, cell_budget: int):
+def _plan_chunk(n: int, w: int, ell: int, cell_budget: int, m: int = 0):
     """Static (n_chunk, steps) for one level's rank sweep — same budget math
     as levels.plan_level's S-engine branch, with power-of-two chunk lengths
     so the fori_loop body shape recurs across levels. When the whole sweep
-    fits one chunk there is nothing to reuse — take the exact length."""
+    fits one chunk there is nothing to reuse — take the exact length.
+
+    ``m > 0`` switches to the discrete G² cost model: the dominant tensor is
+    the (m, n·n_chunk·w) joint-code table, so per-rank cells scale with the
+    sample count rather than the ℓ² Gaussian gather footprint (mirrors the
+    budget rescale in engines.run_level's discrete branch)."""
     total = math.comb(w, ell)
     if total == 0:
         return 0, 0
-    per_rank_cells = n * w * max(ell, 1) * max(ell, 1)
+    if m > 0:
+        per_rank_cells = n * w * m
+    else:
+        per_rank_cells = n * w * max(ell, 1) * max(ell, 1)
     budget_chunk = max(1, cell_budget // max(per_rank_cells, 1))
     if budget_chunk >= total:
         return total, 1
@@ -260,6 +268,29 @@ def _level_sweep(c, adj, sep, tau, *, ell: int, w: int, n_chunk: int, steps: int
     return jax.lax.fori_loop(0, steps, body, (adj, sep))
 
 
+def _level_sweep_g2(stats, adj, sep, alpha, *, ell: int, w: int, n_chunk: int,
+                    steps: int, r: int):
+    """Discrete twin of :func:`_level_sweep`: the same masked rank sweep at
+    static width w, with the G² worklist (``levels.chunk_g2``) as the chunk
+    body. ``alpha`` is the traced per-level scalar (the decision happens in
+    p-value space per cell); ``r`` is the static run-wide max arity."""
+    rd = L._rank_dtype()
+    compact, counts = compact_rows(adj, n_prime=w)
+    counts = jnp.minimum(counts, w)
+
+    def body(step, carry):
+        adj, sep = carry
+        t0 = jnp.asarray(step, rd) * n_chunk
+        return L.chunk_g2(
+            stats, adj, sep, compact, counts, t0, alpha,
+            ell=ell, n_chunk=n_chunk, n_max=w, r=r,
+        )
+
+    if steps == 1:
+        return body(0, (adj, sep))
+    return jax.lax.fori_loop(0, steps, body, (adj, sep))
+
+
 def _level_ok(max_deg, ell: int, w: int):
     """Exactness certificate for one level at static width w: the width
     bounded the live max degree, OR no row had enough neighbours for any
@@ -280,17 +311,27 @@ def _scan_core(
     cell_budget: int,
     orient: bool,
     jitter: float,
+    test=None,
 ) -> ScanResult:
     """One graph's full skeleton phase as a single traced computation.
 
-    ``taus`` is a TRACED (max_level+1,) fp32 vector of per-level Fisher-z
-    thresholds — data, not a compile-time constant — so one compiled
+    ``taus`` is a TRACED (max_level+1,) fp32 vector of per-level decision
+    scalars — data, not a compile-time constant — so one compiled
     program serves every (m, alpha) of a given shape, and the vmapped
     caller can carry a different threshold vector per batch lane (the
-    alpha-sweep workload).
+    alpha-sweep workload). For the Gaussian test the entries are Fisher-z
+    thresholds; for a discrete ``test`` (a STATIC DiscreteCITest riding the
+    build cache key) they are α per level, ``c`` carries DiscreteStats, and
+    each level runs the G² worklist sweep (no dense-ℓ1 shortcut — that cube
+    is partial-correlation arithmetic).
     """
-    n = c.shape[0]
-    adj = L.level0(c, taus[0])
+    discrete = test is not None and test.kind == "discrete"
+    if discrete:
+        n = c.codes.shape[1]
+        adj = L.level0_g2(c, taus[0], r=test.r)
+    else:
+        n = c.shape[0]
+        adj = L.level0(c, taus[0])
     sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
     sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
 
@@ -298,15 +339,22 @@ def _scan_core(
     for ell, w in enumerate(schedule, start=1):
         max_deg = jnp.max(jnp.sum(adj, axis=1)).astype(jnp.int32)
         max_degs.append(max_deg)
-        if ell == 1 and _use_dense_l1(n, w, cell_budget):
+        if not discrete and ell == 1 and _use_dense_l1(n, w, cell_budget):
             # exact at any degree — no width truncation, no ok contribution
             ok_levels.append(jnp.asarray(True))
             adj, sep = _level1_dense(c, adj, sep, taus[1])
             continue
         ok_levels.append(_level_ok(max_deg, ell, w))
-        n_chunk, steps = _plan_chunk(n, w, ell, cell_budget)
+        n_chunk, steps = _plan_chunk(n, w, ell, cell_budget,
+                                     m=int(test.m) if discrete else 0)
         if steps == 0:
             continue  # C(w, ell) == 0: statically no work (ok still checked)
+        if discrete:
+            adj, sep = _level_sweep_g2(
+                c, adj, sep, taus[ell], ell=ell, w=w, n_chunk=n_chunk,
+                steps=steps, r=test.r,
+            )
+            continue
         adj, sep = _level_sweep(
             c, adj, sep, taus[ell], ell=ell, w=w, n_chunk=n_chunk, steps=steps,
             jitter=jitter,
@@ -322,7 +370,8 @@ def _scan_core(
 
 
 @functools.lru_cache(maxsize=None)
-def _build(schedule, sepset_depth, cell_budget, orient, jitter, batched):
+def _build(schedule, sepset_depth, cell_budget, orient, jitter, batched,
+           test=None):
     core = functools.partial(
         _scan_core,
         schedule=schedule,
@@ -330,6 +379,7 @@ def _build(schedule, sepset_depth, cell_budget, orient, jitter, batched):
         cell_budget=cell_budget,
         orient=orient,
         jitter=jitter,
+        test=test,
     )
     return jax.jit(jax.vmap(core) if batched else core)
 
@@ -368,9 +418,13 @@ def taus_for(m: int, alpha: float, max_level: int) -> tuple:
     return tuple(threshold(m, ell, alpha) for ell in range(max_level + 1))
 
 
-def _prep(c, m, alpha, max_level, sepset_depth, n_prime, taus=None):
-    c = jnp.asarray(c, jnp.float32)
-    n = int(c.shape[-1])
+def _prep(c, m, alpha, max_level, sepset_depth, n_prime, taus=None, test=None):
+    discrete = test is not None and getattr(test, "kind", "gaussian") == "discrete"
+    if discrete:
+        n = int(c.codes.shape[-1])
+    else:
+        c = jnp.asarray(c, jnp.float32)
+        n = int(c.shape[-1])
     if max_level is None:
         max_level = DEFAULT_MAX_LEVEL
     if max_level > sepset_depth:
@@ -379,7 +433,8 @@ def _prep(c, m, alpha, max_level, sepset_depth, n_prime, taus=None):
             "sepsets of the deepest level would not fit"
         )
     if taus is None:
-        taus = taus_for(m, alpha, max_level)
+        taus = (test.taus(max_level) if discrete
+                else taus_for(m, alpha, max_level))
     taus = jnp.asarray(taus, jnp.float32)
     if taus.shape[-1] != max_level + 1:
         raise ValueError(
@@ -387,7 +442,13 @@ def _prep(c, m, alpha, max_level, sepset_depth, n_prime, taus=None):
             f"thresholds; got shape {taus.shape}"
         )
     if n_prime is None:
-        n_prime = plan_n_prime(c, m, alpha, tau0=taus[..., 0])
+        if discrete:
+            test.check_level(max_level)
+            adj0 = L.level0_g2(c, float(taus[0]), r=test.r)
+            npr = int(jax.device_get(jnp.max(jnp.sum(adj0, axis=1))))
+            n_prime = max(1, min(L.bucket_npr(npr), n))
+        else:
+            n_prime = plan_n_prime(c, m, alpha, tau0=taus[..., 0])
     schedule = _as_schedule(n_prime, max_level, n)
     return c, taus, max_level, schedule
 
@@ -403,6 +464,7 @@ def pc_scan(
     orient: bool = True,
     taus=None,
     jitter: float = L.DEFAULT_JITTER,
+    test=None,
 ) -> ScanResult:
     """Traced PC-stable on one correlation matrix c (n, n).
 
@@ -419,12 +481,19 @@ def pc_scan(
     regularisation of the ℓ≥2 SPD inverses (the serving layer's
     degradation ladder; the default is every engine's baseline and keeps
     results bit-identical to engine="S").
+
+    ``test``: a discrete :class:`~repro.core.cit.DiscreteCITest` switches
+    the program to the G² sweep — ``c`` must then be the test's
+    DiscreteStats pytree (``DiscreteCITest.from_samples``); taus carry α
+    per level. None/Gaussian keeps the bit-identical Fisher-z path.
     """
+    if test is not None and getattr(test, "kind", "gaussian") != "discrete":
+        test = None  # Gaussian rides the default path — one build cache line
     c, taus, max_level, schedule = _prep(
-        c, m, alpha, max_level, sepset_depth, n_prime, taus
+        c, m, alpha, max_level, sepset_depth, n_prime, taus, test=test
     )
     fn = _build(schedule, sepset_depth, int(cell_budget), bool(orient),
-                float(jitter), False)
+                float(jitter), False, test)
     return fn(c, taus)
 
 
@@ -440,6 +509,7 @@ def pc_scan_batch(
     mesh=None,
     taus=None,
     jitter: float = L.DEFAULT_JITTER,
+    test=None,
 ) -> ScanResult:
     """Vmapped ``pc_scan`` over a leading batch axis: cs (B, n, n).
 
@@ -463,6 +533,12 @@ def pc_scan_batch(
     are bit-identical to mesh=None (chunking never affects the committed
     winners — see core/levels.py).
     """
+    if test is not None and getattr(test, "kind", "gaussian") == "discrete":
+        raise NotImplementedError(
+            "pc_scan_batch is Gaussian-only for now: batching the discrete "
+            "G² sweep needs a per-lane DiscreteStats layout — run graphs "
+            "through pc_scan(test=...) individually"
+        )
     cs = jnp.asarray(cs, jnp.float32)
     if cs.ndim != 3:
         raise ValueError(f"pc_scan_batch expects (B, n, n); got shape {cs.shape}")

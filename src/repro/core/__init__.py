@@ -1,6 +1,9 @@
 """cuPC core: PC-stable skeleton + orientation engines (paper's contribution)."""
 from .pc import PCRun, pc, pc_from_corr  # noqa: F401
-from .cit import correlation_from_samples, fisher_z, threshold  # noqa: F401
-from .engines import DEFAULT_CELL_BUDGET, ENGINE_NAMES, batch_run, resolve  # noqa: F401
+from .cit import (CITest, DiscreteCITest, DiscreteStats,  # noqa: F401
+                  GaussianCITest, correlation_from_samples, encode_discrete,
+                  fisher_z, resolve_citest, threshold)
+from .engines import (DEFAULT_CELL_BUDGET, DISCRETE_ENGINES,  # noqa: F401
+                      ENGINE_NAMES, batch_run, resolve)
 from .orient import cpdag_from_skeleton  # noqa: F401
 from .sharding import AXIS, batch_spec, make_mesh, row_spec  # noqa: F401

@@ -27,6 +27,15 @@ Names (case-insensitive; ``pc()`` / ``pc_from_corr()`` accept a name or a
               Off-TPU the kernels execute in Pallas interpret mode
               (bit-identical decisions, Python speed) — pick "S" for CPU
               throughput, "auto" for hardware runs.
+  "G2"        discrete G²/χ² contingency-table test as the jnp worklist
+              engine (core/levels.chunk_g2 over the gsq.py XLA reference)
+              — requires a discrete CITest (core/cit.DiscreteCITest);
+              "S"/"E"/"auto" requested under a discrete test remap here
+              (or to "G2-kernel") so callers keep one engine vocabulary.
+  "G2-kernel" the same worklist with the per-(edge, sepset) histogram +
+              log-term reduction fused in the Pallas kernel
+              (kernels/gsq.py; interpret mode off-TPU) — bitwise-identical
+              statistics to "G2" (tests/test_kernels.py).
   "scan"      the fixed-shape fully-traced path (repro/batch/scan_pc.py):
               the whole skeleton phase is ONE compiled program up to a
               static level cap — no host loop, vmap-able over a batch of
@@ -49,6 +58,8 @@ across engines (asserted by tests/test_engines.py).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -57,10 +68,14 @@ from repro import obs
 from . import levels as L
 from .levels import DEFAULT_CELL_BUDGET  # noqa: F401  (re-export; derivation there)
 
-ENGINE_NAMES = ("S", "E", "S-kernel", "S-grid", "L1-dense", "auto", "scan")
+ENGINE_NAMES = ("S", "E", "S-kernel", "S-grid", "L1-dense", "auto", "scan",
+                "G2", "G2-kernel")
 #: Engines that take over the ENTIRE run (level loop included) instead of a
 #: single level; pc_from_corr dispatches them before its level loop.
 WHOLE_RUN_ENGINES = ("scan",)
+#: Engines of the discrete G² test object (levels.chunk_g2 over contingency
+#: tables; "G2-kernel" runs the histogram+reduction in kernels/gsq.py).
+DISCRETE_ENGINES = ("G2", "G2-kernel")
 _CANON = {name.lower(): name for name in ENGINE_NAMES}
 
 
@@ -72,8 +87,15 @@ def is_whole_run(engine) -> bool:
     )
 
 
-def resolve(engine, ell: int) -> str:
-    """Concrete engine for level ℓ. Accepts a name or callable(ell)->name."""
+def resolve(engine, ell: int, test=None) -> str:
+    """Concrete engine for level ℓ. Accepts a name or callable(ell)->name.
+
+    ``test`` (a core/cit.CITest, default Gaussian) gates the (engine ×
+    test) matrix: a discrete test remaps the generic names onto its own
+    worklist engines ("S"/"E" → "G2", the kernel/auto paths →
+    "G2-kernel") and rejects layouts that only exist for correlation
+    inputs; requesting "G2*" under a Gaussian test is equally an error.
+    """
     if callable(engine):
         engine = engine(ell)
     try:
@@ -85,6 +107,24 @@ def resolve(engine, ell: int) -> str:
             f"{name!r} is a whole-run engine (repro/batch/scan_pc.py); it is "
             "dispatched by pc_from_corr before the level loop and cannot be "
             "selected per level"
+        )
+    discrete = test is not None and getattr(test, "kind", "gaussian") == "discrete"
+    if discrete:
+        remap = {"S": "G2", "E": "G2", "auto": "G2-kernel",
+                 "S-kernel": "G2-kernel", "G2": "G2", "G2-kernel": "G2-kernel"}
+        if name not in remap:
+            raise ValueError(
+                f"engine {name!r} has no discrete-test path: the dense ℓ=1 "
+                "cube and the grid-resident sweep are partial-correlation "
+                "layouts. Use S/auto (remapped onto the G2 engines) or name "
+                "G2/G2-kernel directly."
+            )
+        return remap[name]
+    if name in DISCRETE_ENGINES:
+        raise ValueError(
+            f"engine {name!r} runs the discrete G² test and needs a discrete "
+            "CITest (pass test='discrete' with categorical samples); the "
+            "Gaussian path uses S/E/S-kernel/S-grid/L1-dense/auto."
         )
     if name == "auto":
         return "L1-dense" if ell == 1 else "S-kernel"
@@ -105,11 +145,17 @@ def run_level(
     chunk_fn_s=None,
     chunk_fn_e=None,
     pipeline_depth: int = 1,
+    test=None,
 ):
     """Dispatch one PC-stable level to the resolved engine.
 
     Same contract as levels.run_level: returns (adj, sep, stats) with
-    stats["engine"] naming the concrete path taken.
+    stats["engine"] naming the concrete path taken. ``test`` (core/cit
+    CITest; None = Gaussian) routes the level: Gaussian tests read a
+    correlation matrix from ``c`` and a Fisher-z τ from ``tau``; a
+    discrete test carries its DiscreteStats pytree in the c slot and α in
+    the tau slot, dispatching levels.chunk_g2 through the same planner,
+    worklist and commit layer.
 
     pipeline_depth ≥ 2 enables split tests/commit dispatch-ahead on the jnp
     "S" worklist (levels.chunk_s_tests/chunk_s_commit) — bit-identical
@@ -117,8 +163,22 @@ def run_level(
     dense ℓ=1 cube) run depth-1 regardless; the distributed driver
     (core/distributed.run_level_sharded) pipelines every layout.
     """
-    name = resolve(engine, ell)
-    if name == "L1-dense":
+    name = resolve(engine, ell, test)
+    if name in DISCRETE_ENGINES:
+        test.check_level(ell)
+        # the worklist's dominant array is the (m, n, T, n′) joint-code
+        # gather — rescale the budget so plan_level's ℓ²-cell model yields
+        # the chunk length the m-cell reality affords
+        budget = max(1, int(cell_budget) * max(ell, 1) ** 2 // max(int(test.m), 1))
+        fn = functools.partial(L.chunk_g2, r=int(test.r),
+                               use_kernel=name == "G2-kernel")
+        adj, sep, st = L.run_level(
+            c, adj, sep, ell, tau, engine="S", cell_budget=budget,
+            chunk_fn_s=fn, bucket=bucket,
+        )
+        st["engine"] = name
+        st["test"] = "discrete"
+    elif name == "L1-dense":
         adj, sep, st = _run_level_dense_l1(c, adj, sep, tau)
     elif name == "S-kernel":
         from repro.kernels.ops import chunk_s_kernel

@@ -86,6 +86,31 @@ def level0(c: jax.Array, tau: float) -> jax.Array:
 
 
 # --------------------------------------------------------------------------
+# level 0, discrete G² (pairwise contingency tables; q = 1)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("r",))
+def level0_g2(stats, alpha, *, r: int) -> jax.Array:
+    """Unconditional discrete pass: adjacency after pairwise G² tests.
+
+    stats: core/cit.DiscreteStats; r: static run-wide max arity (the code
+    stride — dof uses the true per-variable arities). Keeps edge (i, j)
+    when chi2.sf(G², dof) < α, mirroring level0's "dependent ⇒ keep".
+    """
+    from repro.kernels import gsq
+
+    codes, arities = stats.codes, stats.arities
+    m, n = codes.shape
+    jc = codes[:, :, None] * r + codes[:, None, :]  # (m, n, n) joint codes
+    g2 = gsq.gsq_ref(jc.reshape(m, n * n), r=r, q=1).reshape(n, n)
+    dof = jnp.maximum(
+        (arities[:, None] - 1) * (arities[None, :] - 1), 1
+    ).astype(jnp.float32)
+    pval = jax.scipy.special.gammaincc(dof / 2.0, jnp.maximum(g2, 0.0) / 2.0)
+    keep = pval < alpha
+    return keep & ~jnp.eye(n, dtype=bool)
+
+
+# --------------------------------------------------------------------------
 # dynamic-n combination unranking (vectorised Alg. 6 over worklists)
 # --------------------------------------------------------------------------
 def _unrank_dyn(t, n_dyn, n_max: int, ell: int, table):
@@ -347,6 +372,68 @@ def chunk_s(c, adj, sep, compact, counts, t0, tau, *, ell: int, n_chunk: int, n_
     ranks = t0 + jnp.arange(n_chunk, dtype=_rank_dtype())  # (T,)
     sep_found, s_ids = _tests_s(c, adj, compact, counts, rows, ranks, tau, ell=ell, n_max=n_max)
     return _commit(c, adj, sep, compact, counts, sep_found, ranks, s_ids, None, ell)
+
+
+# --------------------------------------------------------------------------
+# discrete G² chunk: set-major worklist over contingency tables
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("ell", "n_chunk", "n_max", "r", "use_kernel")
+)
+def chunk_g2(stats, adj, sep, compact, counts, t0, alpha, *, ell: int,
+             n_chunk: int, n_max: int, r: int, use_kernel: bool = False):
+    """Process combo-ranks [t0, t0+n_chunk) of every row with the discrete
+    G² test — the cuPC-S worklist shape with contingency tables in place
+    of partial correlations.
+
+    Same contract as :func:`chunk_s` with the sufficient-statistics pytree
+    (core/cit.DiscreteStats) riding the C slot and α riding the tau slot:
+    the set-unranking prologue (:func:`plan_sets`) and validity mask
+    (:func:`_set_mask`) are shared VERBATIM with the Gaussian engines, so
+    which (row, rank, slot) cell denotes which test can never diverge
+    across test objects. Per cell: fold the conditioning configuration and
+    the (i, j) codes into one joint code, histogram it over the samples
+    (kernels/gsq.py — Pallas when ``use_kernel``, its bitwise-identical
+    jnp reference otherwise), reduce to G², and decide independence in
+    p-value space with the cell's own dof. The winner commit is the same
+    deterministic (rank, endpoint-order) rule as every other engine.
+    """
+    from repro.kernels import gsq
+
+    codes, arities = stats.codes, stats.arities
+    n = adj.shape[0]
+    mm = codes.shape[0]
+    _, npr = compact.shape
+    rows = jnp.arange(n, dtype=jnp.int32)
+    ranks = t0 + jnp.arange(n_chunk, dtype=_rank_dtype())
+    s_ids, valid_set = plan_sets(compact, counts, ranks, ell=ell,
+                                 n_max=n_max, n=n)
+    mask = _set_mask(adj, compact, rows, s_ids, valid_set, n)
+    j_ids = jnp.clip(compact, 0, n - 1)
+
+    q = r ** ell
+    codes_s = codes[:, s_ids]  # (m, n, T, ell)
+    cfg = jnp.zeros((mm, n, n_chunk), jnp.int32)
+    for k in range(ell):
+        cfg = cfg * r + codes_s[..., k]
+    # jc = cfg·r² + x_i·r + x_j — the layout _g2_from_counts unpacks
+    jc = (cfg[..., None] * r + codes[:, :, None, None]) * r \
+        + codes[:, j_ids][:, :, None, :]  # (m, n, T, npr)
+
+    fn = gsq.gsq_cells if use_kernel else gsq.gsq_ref
+    g2 = fn(jc.reshape(mm, -1), r=r, q=q).reshape(n, n_chunk, npr)
+
+    ar_s = arities[s_ids].astype(jnp.float32)  # (n, T, ell)
+    dof_cfg = jnp.prod(ar_s, axis=-1) if ell else jnp.ones((n, n_chunk))
+    dof = ((arities[rows] - 1).astype(jnp.float32)[:, None, None]
+           * (arities[j_ids] - 1).astype(jnp.float32)[:, None, :]
+           * dof_cfg[:, :, None])
+    dof = jnp.maximum(dof, 1.0)
+    pval = jax.scipy.special.gammaincc(dof / 2.0, jnp.maximum(g2, 0.0) / 2.0)
+    indep = pval >= alpha  # boundary counts as independent (Z ≤ τ parity)
+    sep_found = indep & mask
+    return _commit(stats, adj, sep, compact, counts, sep_found, ranks,
+                   s_ids, None, ell)
 
 
 # --------------------------------------------------------------------------
@@ -781,7 +868,9 @@ def run_level(
 
     from .compact import compact_rows
 
-    n = c.shape[0]
+    # adj (not c) owns the variable count: the c slot may carry a non-array
+    # sufficient-statistics pytree (e.g. cit.DiscreteStats for chunk_g2)
+    n = adj.shape[0]
     counts_host = np.asarray(jax.device_get(jnp.sum(adj, axis=1)))
     npr = int(counts_host.max(initial=0))
     if npr - 1 < ell:

@@ -18,6 +18,7 @@ static level cap, and the formulation that batches over many graphs
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -27,9 +28,10 @@ import numpy as np
 from repro import obs
 
 from . import engines as E
-from . import levels as L
+from . import levels as L  # noqa: F401  (re-export seam for tests/monkeypatch)
 from . import validate as V
-from .cit import correlation_from_samples, threshold
+from .cit import (DiscreteCITest, GaussianCITest,  # noqa: F401
+                  correlation_from_samples, encode_discrete, resolve_citest)
 from .combinadics import MAX_LEVEL
 from .orient import cpdag_from_skeleton
 
@@ -76,6 +78,7 @@ def pc_from_corr(
     bucket: bool = True,
     pipeline_depth: int = 1,
     validate: bool = True,
+    test=None,
 ) -> PCRun:
     """Run PC-stable given a correlation matrix c (n,n) and sample count m.
 
@@ -91,13 +94,23 @@ def pc_from_corr(
     otherwise propagates silently (NaN comparisons keep every affected
     edge). m < n warns but runs: the paper's gene-expression datasets live
     in that regime.
+
+    test: None/"gaussian"/GaussianCITest only — a correlation matrix IS
+    the Gaussian sufficient statistic; the discrete G² test needs raw
+    level codes and routes through ``pc(x, test="discrete")``.
     """
+    test = resolve_citest(test, m, alpha)
+    if test.kind != "gaussian":
+        raise ValueError(
+            f"pc_from_corr runs the Gaussian partial-correlation test; a "
+            f"{test.kind!r} CITest needs raw samples — call "
+            "pc(x, test=...) instead"
+        )
     tracer = obs.run_tracer("pc_from_corr")
     with tracer.span("total", engine=str(engine)):
         if validate:
             V.validate_corr(c, m, max_level=max_level)
         c = jnp.asarray(c, jnp.float32)
-        n = c.shape[0]
         lmax = min(max_level if max_level is not None else MAX_LEVEL,
                    sepset_depth)
 
@@ -109,7 +122,7 @@ def pc_from_corr(
             )
         else:
             run = _pc_run_host_loop(
-                c, m, n, alpha=alpha, engine=engine, lmax=lmax,
+                c, test, engine=engine, lmax=lmax,
                 sepset_depth=sepset_depth, cell_budget=cell_budget,
                 orient=orient, bucket=bucket, chunk_fn_s=chunk_fn_s,
                 chunk_fn_e=chunk_fn_e, pipeline_depth=pipeline_depth,
@@ -121,21 +134,32 @@ def pc_from_corr(
     return run
 
 
-def _pc_run_host_loop(c, m, n, *, alpha, engine, lmax, sepset_depth,
-                      cell_budget, orient, bucket, chunk_fn_s, chunk_fn_e,
-                      pipeline_depth, tracer):
-    """The per-level host loop of Algorithm 2, instrumented span-per-level.
+def _pc_run_host_loop(stats, test, *, engine, lmax, sepset_depth,
+                      cell_budget, orient, bucket=True, chunk_fn_s=None,
+                      chunk_fn_e=None, pipeline_depth=1, tracer):
+    """The per-level host loop of Algorithm 2, instrumented span-per-level,
+    generalised over the CITest seam: ``stats`` is whatever the test's
+    sufficient statistic is (C for Gaussian — the pre-refactor calls are
+    reproduced verbatim, so decisions are bit-identical — or DiscreteStats
+    for G²), and the per-level scalar fed to the engines comes from
+    ``test.tau(ell)`` (warn-level on insufficient samples: a validated
+    entry point only lands here past the validated depth, where a loud
+    skip-grade τ beats aborting a mostly-finished run).
+
     Each span syncs the level's adjacency at exit, so span durations cover
     device time — exactly what the old block_until_ready + perf_counter
     pairs measured."""
+    # C is (n, n); DiscreteStats carries (m, n) codes
+    n = int(stats.codes.shape[1] if hasattr(stats, "codes")
+            else stats.shape[0])
     with tracer.span("level0", level=0) as sp:
-        adj = L.level0(c, threshold(m, 0, alpha))
+        adj = test.level0(stats, test.tau(0, insufficient="warn"))
         # sepset sentinel: -2 in slot 0 = "removed with empty sepset (level 0)"
         sep = jnp.full((n, n, sepset_depth), -1, jnp.int32)
         sep = sep.at[:, :, 0].set(jnp.where(adj, -1, -2))
         sp.sync(adj)
 
-    stats = []
+    stats_out = []
     ell = 1
     while ell <= lmax:
         max_deg = int(jax.device_get(jnp.max(jnp.sum(adj, axis=1))))
@@ -143,16 +167,16 @@ def _pc_run_host_loop(c, m, n, *, alpha, engine, lmax, sepset_depth,
             break
         with tracer.span(f"level{ell}", level=ell) as sp:
             adj, sep, st = E.run_level(
-                c, adj, sep, ell, threshold(m, ell, alpha), engine=engine,
-                cell_budget=cell_budget, bucket=bucket,
+                stats, adj, sep, ell, test.tau(ell, insufficient="warn"),
+                engine=engine, cell_budget=cell_budget, bucket=bucket,
                 chunk_fn_s=chunk_fn_s, chunk_fn_e=chunk_fn_e,
-                pipeline_depth=pipeline_depth,
+                pipeline_depth=pipeline_depth, test=test,
             )
             sp.sync(adj).set(**{k: st[k] for k in
                                 ("engine", "chunks", "dispatches",
                                  "total_sets", "npr_bucket")
                                 if k in st})
-        stats.append({"level": ell, **st})
+        stats_out.append({"level": ell, **st})
         ell += 1
 
     with tracer.span("orient") as sp:
@@ -164,12 +188,12 @@ def _pc_run_host_loop(c, m, n, *, alpha, engine, lmax, sepset_depth,
         cpdag=np.asarray(jax.device_get(cpdag)),
         sepsets=np.asarray(jax.device_get(sep)),
         levels_run=ell - 1,
-        level_stats=stats,
+        level_stats=stats_out,
     )
 
 
 def _pc_run_scan(c, m, alpha, max_level, sepset_depth, cell_budget, orient,
-                 tracer):
+                 tracer, test=None):
     """engine="scan": the whole run as the fixed-shape traced program
     (repro/batch/scan_pc.py) packaged into the PCRun contract.
 
@@ -195,7 +219,7 @@ def _pc_run_scan(c, m, alpha, max_level, sepset_depth, cell_budget, orient,
     with tracer.span("scan", max_level=lmax) as sp:
         res = pc_scan(
             c, m, alpha=alpha, max_level=lmax, sepset_depth=sepset_depth,
-            cell_budget=cell_budget, orient=orient,
+            cell_budget=cell_budget, orient=orient, test=test,
         )
         sp.sync(res.cpdag)
     # the host driver stops at the first level with max_deg - 1 < ell
@@ -217,6 +241,66 @@ def _pc_run_scan(c, m, alpha, max_level, sepset_depth, cell_budget, orient,
     )
 
 
+def _pc_discrete(
+    x,
+    test,
+    *,
+    engine="auto",
+    max_level=None,
+    sepset_depth: int = 8,
+    cell_budget: int = E.DEFAULT_CELL_BUDGET,
+    orient: bool = True,
+    bucket: bool = True,
+    chunk_fn_s=None,
+    chunk_fn_e=None,
+    pipeline_depth: int = 1,
+    validate: bool = True,
+) -> PCRun:
+    """The discrete G² route of ``pc()``: encode level codes, rebind the
+    test's (m, r) to the data (the run-wide max arity is a static shape
+    parameter — see DiscreteCITest), then drive the SAME host loop / scan
+    program the Gaussian path uses, with DiscreteStats riding the stats
+    slot."""
+    if validate:
+        V.validate_discrete(x, max_level=max_level)
+    stats, r_max = encode_discrete(x)
+    test = dataclasses.replace(
+        test, m=int(stats.codes.shape[0]), r=max(int(test.r), r_max)
+    )
+    tracer = obs.run_tracer("pc_discrete")
+    with tracer.span("total", engine=str(engine)):
+        if max_level is None:
+            # cap where the contingency table still fits; an EXPLICIT deeper
+            # max_level is a user claim we reject loudly via check_level
+            lmax = min(MAX_LEVEL, sepset_depth, test.max_supported_level())
+        else:
+            lmax = min(max_level, sepset_depth)
+        test.check_level(lmax)
+        if E.is_whole_run(engine):
+            if max_level is None:
+                # scan's static default cap, still bounded by the table cap
+                from repro.batch.scan_pc import DEFAULT_MAX_LEVEL
+
+                lmax = min(lmax, DEFAULT_MAX_LEVEL)
+            run = _pc_run_scan(
+                stats, test.m, alpha=test.alpha, max_level=lmax,
+                sepset_depth=sepset_depth, cell_budget=cell_budget,
+                orient=orient, tracer=tracer, test=test,
+            )
+        else:
+            run = _pc_run_host_loop(
+                stats, test, engine=engine, lmax=lmax,
+                sepset_depth=sepset_depth, cell_budget=cell_budget,
+                orient=orient, bucket=bucket, chunk_fn_s=chunk_fn_s,
+                chunk_fn_e=chunk_fn_e, pipeline_depth=pipeline_depth,
+                tracer=tracer,
+            )
+    run.timings_s = tracer.timings()
+    tracer.finish(driver="pc_discrete", engine=str(engine),
+                  n=int(run.adj.shape[0]), levels_run=run.levels_run)
+    return run
+
+
 def pc(
     x,
     alpha: float = 0.01,
@@ -224,6 +308,7 @@ def pc(
     max_level: int | None = None,
     corr: str = "auto",
     validate: bool = True,
+    test=None,
     **kw,
 ) -> PCRun:
     """Run PC-stable from raw samples x: (m, n).
@@ -232,13 +317,30 @@ def pc(
     "jnp" uses the XLA reference; "auto" picks the kernel on TPU and jnp
     elsewhere (the interpreted kernel is exact but CPU-slow for large m·n²).
 
+    test: None/"gaussian" (default, Fisher-z on the correlation matrix),
+    "discrete" (contingency-table G²/χ² over integer level codes — x must
+    be categorical; engines route to the G² worklist/kernel automatically),
+    or a CITest instance. The Gaussian path through the test object is
+    bit-identical to the pre-seam behaviour.
+
     validate=True (default) rejects NaN/Inf samples and constant columns
     with typed errors (core/validate.py) — both previously flowed through
     correlation_from_samples silently (a constant column becomes a row of
     fabricated zero correlations, i.e. universal independence). m < n warns
     but runs. validate=False restores the old trust-the-caller behaviour.
+    The discrete route additionally demands non-negative integer codes
+    (validate_discrete).
     """
     x = jnp.asarray(x)
+    t = resolve_citest(test, int(x.shape[0]), alpha)
+    if t.kind == "discrete":
+        if corr != "auto":
+            raise ValueError(
+                "corr= selects a correlation backend; the discrete G² test "
+                "does not compute correlations"
+            )
+        return _pc_discrete(x, t, engine=engine, max_level=max_level,
+                            validate=validate, **kw)
     if validate:
         V.validate_samples(x, max_level=max_level)
     if corr not in ("auto", "kernel", "jnp"):
@@ -252,4 +354,4 @@ def pc(
         c = correlation_from_samples(x)
     # samples already validated and C built in-house — skip the re-check
     return pc_from_corr(c, int(x.shape[0]), alpha=alpha, engine=engine,
-                        max_level=max_level, validate=False, **kw)
+                        max_level=max_level, validate=False, test=t, **kw)

@@ -2,7 +2,10 @@
 
 Pure numpy, written to mirror the pseudo-code line by line. Used as:
   * the exact-match oracle for the cuPC-E / cuPC-S engines,
-  * the "Stable" serial baseline in the Table-2 benchmark.
+  * the "Stable" serial baseline in the Table-2 benchmark,
+  * (discrete) the per-triple G²/χ² oracle the batched contingency-table
+    engines are property-tested against (:func:`g2_test`,
+    :func:`pc_stable_skeleton_discrete`).
 """
 from __future__ import annotations
 
@@ -86,6 +89,96 @@ def pc_stable_skeleton(
                         break
                 if done:
                     continue
+        ell += 1
+        max_deg = int(adj.sum(axis=1).max()) if adj.any() else 0
+        if max_deg - 1 < ell or ell > hard_cap:
+            break
+    return PCResult(adj=adj, sepsets=sepsets, max_level=ell - 1, ci_tests=tests)
+
+
+# ---------------------------------------------------------------------------
+# discrete G²/χ² oracle — one triple at a time, f64, scipy tail probability
+# ---------------------------------------------------------------------------
+def g2_test(
+    codes: np.ndarray,
+    arities: np.ndarray,
+    i: int,
+    j: int,
+    s: tuple[int, ...],
+) -> tuple[float, int, float]:
+    """One conditional G² test on integer level codes: → (G², dof, p).
+
+        G² = 2 Σ_abc N_abc · log(N_abc · N_++c / (N_a+c · N_+bc))
+        dof = (r_i − 1)(r_j − 1) · Π_{k∈S} r_k          (true arities)
+        p   = chi2.sf(G², dof)
+
+    The contingency table is built by np.bincount over a per-variable-arity
+    strided joint code — the serial, f64, per-triple ground truth for the
+    batched fp32 engines (levels.chunk_g2 / kernels.gsq), which stride by
+    the run-wide max arity instead but sum the same occupied cells.
+    """
+    from scipy.stats import chi2
+
+    ri, rj = int(arities[i]), int(arities[j])
+    q = 1
+    code = np.zeros(codes.shape[0], dtype=np.int64)
+    for k in s:  # MSB-first fold, matching the engines' cfg ordering
+        code = code * int(arities[k]) + codes[:, k].astype(np.int64)
+        q *= int(arities[k])
+    code = (code * ri + codes[:, i].astype(np.int64)) * rj + codes[:, j].astype(np.int64)
+    cnt = np.bincount(code, minlength=q * ri * rj).astype(np.float64)
+    tab = cnt.reshape(q, ri, rj)
+
+    n_c = tab.sum(axis=(1, 2), keepdims=True)
+    n_ac = tab.sum(axis=2, keepdims=True)
+    n_bc = tab.sum(axis=1, keepdims=True)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        term = tab * (np.log(tab) + np.log(n_c) - np.log(n_ac) - np.log(n_bc))
+    g2 = 2.0 * float(np.where(tab > 0, term, 0.0).sum())
+    dof = max((ri - 1) * (rj - 1) * q, 1)
+    return g2, dof, float(chi2.sf(g2, dof))
+
+
+def pc_stable_skeleton_discrete(
+    codes: np.ndarray,
+    alpha: float = 0.05,
+    max_level: int | None = None,
+) -> PCResult:
+    """PC-stable skeleton on categorical data — Algorithm 1 with the G² test.
+
+    Identical loop structure (and thus identical edge/sepset ORDER semantics)
+    to :func:`pc_stable_skeleton`; only the decision rule changes: the edge
+    is removed when ``p ≥ alpha`` (independence; the boundary counts as
+    independent, mirroring the Gaussian ``Z ≤ τ`` rule). Arities are the
+    per-column observed ``max + 1``, the same convention as
+    ``cit.encode_discrete``.
+    """
+    codes = np.asarray(codes, dtype=np.int64)
+    n = codes.shape[1]
+    arities = codes.max(axis=0) + 1
+    adj = ~np.eye(n, dtype=bool)
+    sepsets: dict[tuple[int, int], tuple[int, ...]] = {}
+    tests = 0
+
+    ell = 0
+    hard_cap = n - 2 if max_level is None else max_level
+    while True:
+        adj_prev = adj.copy()
+        for i in range(n):
+            nbrs_i_prev = [int(v) for v in np.flatnonzero(adj_prev[i])]
+            for j in nbrs_i_prev:
+                if not adj[i, j]:
+                    continue
+                cand = [v for v in nbrs_i_prev if v != j]
+                if len(cand) < ell:
+                    continue
+                for s in itertools.combinations(cand, ell):
+                    tests += 1
+                    _, _, p = g2_test(codes, arities, i, j, s)
+                    if p >= alpha:
+                        adj[i, j] = adj[j, i] = False
+                        sepsets[(min(i, j), max(i, j))] = tuple(s)
+                        break
         ell += 1
         max_deg = int(adj.sum(axis=1).max()) if adj.any() else 0
         if max_deg - 1 < ell or ell > hard_cap:

@@ -60,6 +60,21 @@ class BadCorrelationError(ValidationError):
     code = "bad_correlation"
 
 
+class InsufficientSamplesError(ValidationError):
+    """Fisher-z threshold asked for at a level the sample count cannot
+    support (m − ℓ − 3 ≤ 0). Previously ``cit.threshold`` silently floored
+    the denominator to 1, producing a huge τ that keeps every edge at that
+    level without any signal — now the caller chooses: raise (library
+    default), warn + clamp (``pc()``'s level loop), or silent clamp
+    (explicit legacy opt-in)."""
+
+    code = "insufficient_samples"
+
+
+class BadDiscreteDataError(ValidationError):
+    code = "bad_discrete_data"
+
+
 def _as_host(x) -> np.ndarray:
     """Materialise on host without importing jax at module import time."""
     return np.asarray(x)
@@ -182,3 +197,85 @@ def validate_corr(c, m: int, max_level: int | None = None,
         )
     _check_m(int(m), n, max_level, strict_rank)
     return n
+
+
+def validate_discrete(x, max_level: int | None = None,
+                      max_arity: int = 16) -> tuple[int, int]:
+    """Validate a categorical sample matrix x: (m, n) of integer level codes.
+    Returns (m, n).
+
+    The discrete G² engine (core/cit.DiscreteCITest → kernels/gsq.py) builds
+    contingency tables indexed by the raw codes, so admission is stricter
+    than the Gaussian front door: codes must be finite non-negative
+    integers, every column needs at least two OBSERVED levels (a constant
+    column has zero degrees of freedom — G² ≡ 0 and the test fabricates
+    independence for every edge it touches), and the maximum arity is
+    capped (a single high-cardinality column multiplies every conditional
+    table's size by its arity; re-bin such columns first). Sample-count
+    adequacy is heuristic for contingency tables — the classical rule of
+    thumb (≥ ~10 samples per unconditional cell) only WARNS, since sparse
+    tables bias G² toward independence rather than poisoning the run.
+    """
+    x = _as_host(x)
+    if x.ndim != 2:
+        raise ValidationError(
+            f"expected a (m, n) categorical sample matrix; got shape {x.shape}"
+        )
+    m, n = int(x.shape[0]), int(x.shape[1])
+    finite = np.isfinite(x)
+    if not finite.all():
+        bad = np.argwhere(~finite)
+        r, c = int(bad[0][0]), int(bad[0][1])
+        raise NonFiniteDataError(
+            f"categorical samples contain {len(bad)} non-finite value(s) "
+            f"(first at row {r}, column {c}: {x[r, c]!r}). Impute or drop "
+            "before calling pc(test='discrete')."
+        )
+    if not np.issubdtype(x.dtype, np.integer) and not np.array_equal(
+            x, np.floor(x)):
+        bad = np.argwhere(x != np.floor(x))
+        r, c = int(bad[0][0]), int(bad[0][1])
+        raise BadDiscreteDataError(
+            f"categorical samples must be integer level codes; found "
+            f"non-integer value {x[r, c]!r} at row {r}, column {c}. "
+            "Discretise continuous variables (e.g. quantile binning) or use "
+            "the Gaussian test."
+        )
+    if x.min(initial=0) < 0:
+        bad = np.argwhere(x < 0)
+        r, c = int(bad[0][0]), int(bad[0][1])
+        raise BadDiscreteDataError(
+            f"categorical level codes must be non-negative; found "
+            f"{x[r, c]!r} at row {r}, column {c}. Re-encode levels as "
+            "0..arity-1 (e.g. np.unique(col, return_inverse=True))."
+        )
+    n_levels = np.array([np.unique(x[:, k]).size for k in range(n)])
+    const = np.flatnonzero(n_levels < 2)
+    if const.size:
+        cols = ", ".join(str(int(k)) for k in const[:8])
+        more = "" if const.size <= 8 else f" (+{const.size - 8} more)"
+        raise ConstantColumnError(
+            f"column(s) [{cols}]{more} take a single observed level: a "
+            "one-level variable has zero degrees of freedom, so every G² "
+            "test involving it is vacuous (fabricated independence). Drop "
+            "the constant columns before calling pc(test='discrete')."
+        )
+    arity = int(x.max()) + 1
+    if arity > max_arity:
+        k = int(np.argmax(x.max(axis=0)))
+        raise BadDiscreteDataError(
+            f"maximum arity {arity} (column {k}) exceeds the cap "
+            f"{max_arity}: every conditioning variable multiplies the "
+            "contingency-table width by its arity, so high-cardinality "
+            "columns blow up the G² worklist. Re-bin the column or raise "
+            "max_arity explicitly if the table budget allows."
+        )
+    if m < 10 * arity * arity:
+        warnings.warn(
+            f"m={m} samples for arity-{arity} variables gives fewer than "
+            f"~10 samples per unconditional contingency cell "
+            f"({arity * arity} cells); sparse tables bias G² toward "
+            "independence. Prefer more samples or coarser bins.",
+            stacklevel=3,
+        )
+    return m, n

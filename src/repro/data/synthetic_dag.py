@@ -51,6 +51,38 @@ def sample_gaussian_dag(
     return x, dag
 
 
+def sample_discrete_dag(
+    n: int,
+    m: int,
+    density: float = 0.2,
+    arity: int = 3,
+    seed: int = 0,
+    concentration: float = 0.5,
+):
+    """Categorical samples from a random DAG with Dirichlet CPTs.
+
+    Reuses :func:`random_dag` for the structure; each variable gets one
+    conditional probability table per joint parent configuration, rows drawn
+    Dirichlet(concentration) — a small concentration (< 1) makes rows peaky,
+    i.e. strong detectable dependences for the G² test. Ancestral sampling
+    in variable order (the generator's topological order). Returns
+    (x: (m, n) int64 codes in [0, arity), dag).
+    """
+    rng = np.random.default_rng(seed)
+    dag = random_dag(n, density, rng)
+    x = np.zeros((m, n), dtype=np.int64)
+    for i in range(n):
+        ps = dag.parents(i)
+        q = arity ** len(ps)
+        cpt = rng.dirichlet([concentration] * arity, size=q)  # (q, arity)
+        cfg = np.zeros(m, dtype=np.int64)
+        for p in ps:  # MSB-first fold, same convention as the engines
+            cfg = cfg * arity + x[:, p]
+        u = rng.random(m)
+        x[:, i] = (cpt[cfg].cumsum(axis=1) < u[:, None]).sum(axis=1)
+    return x, dag
+
+
 # ---------------------------------------------------------------------------
 # d-separation oracle (exact CI) — used to validate the full PC pipeline:
 # PC with a perfect CI oracle must recover the true CPDAG exactly.

@@ -1,0 +1,162 @@
+"""Discrete G² contingency-table kernel — per-(edge, sepset) histogram
+accumulation + log-term reduction.
+
+The discrete CI engine (core/levels.chunk_g2) flattens its worklist to B
+independent cells, each carrying one joint code per sample:
+
+    jc[m, cell] = (cfg·r + x_i)·r + x_j   ∈ [0, K),  K = q·r²,  q = r^ℓ
+
+(-1 marks padding). This kernel histograms the K-cell contingency table of
+every cell and reduces it to the G² statistic
+
+    G² = 2 Σ_abc N_abc · log(N_abc · N_++c / (N_a+c · N_+bc))
+
+in one launch, mirroring the chunked worklist layout of cisweep.py: cells
+ride the lanes ((8, 128) fp32 tiles), the sample axis is a SEQUENTIAL grid
+dimension whose partial histograms accumulate in the revisited K-row output
+block (the sgrid.py accumulation pattern: init at the first sample step,
+reduce to G² at the last). The χ² tail probability stays OUTSIDE the kernel
+— ``gammaincc`` is a jnp epilogue over the (B,) statistics, where XLA's
+special-function lowering is already tight.
+
+Bitwise-parity contract: histogram counts are exact small integers, exactly
+representable in fp32 regardless of accumulation order, and both the kernel
+and the jnp reference (:func:`gsq_ref`) reduce counts to G² through the
+SAME unrolled helper :func:`_g2_from_counts` (identical elementwise op
+sequence) — so ``gsq_cells`` must match ``gsq_ref`` bit-for-bit
+(tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .backend import resolve_interpret
+
+
+def _fold(xs):
+    """Deterministic left-fold sum — fixes the reduction ORDER so the kernel
+    and the jnp reference execute identical op sequences."""
+    acc = xs[0]
+    for x in xs[1:]:
+        acc = acc + x
+    return acc
+
+
+def _g2_from_counts(cnt, *, r: int, q: int):
+    """G² from a length-K list of identically-shaped fp32 count arrays
+    (exact non-negative integers), K = q·r², index = (c·r + a)·r + b.
+
+    Unrolled over the table (K is a static, capped constant — see
+    core/cit.MAX_G2_TABLE); margins and the statistic accumulate through
+    :func:`_fold` / sequential adds so every caller — Pallas kernel body
+    and XLA reference alike — runs the same elementwise op order, making
+    the fp32 result bitwise reproducible across the two.
+
+    Zero cells contribute 0 by convention (lim x·log x = 0); the margin
+    logs are guarded with max(·, 1) — a zero margin implies a zero cell,
+    so the guard never changes a contributing term.
+    """
+
+    def at(c, a, b):
+        return cnt[(c * r + a) * r + b]
+
+    g2 = jnp.zeros_like(cnt[0])
+    for ci in range(q):
+        n_ac = [_fold([at(ci, a, b) for b in range(r)]) for a in range(r)]
+        n_bc = [_fold([at(ci, a, b) for a in range(r)]) for b in range(r)]
+        n_c = _fold(n_ac)
+        log_nc = jnp.log(jnp.maximum(n_c, 1.0))
+        log_na = [jnp.log(jnp.maximum(v, 1.0)) for v in n_ac]
+        log_nb = [jnp.log(jnp.maximum(v, 1.0)) for v in n_bc]
+        for a in range(r):
+            for b in range(r):
+                nab = at(ci, a, b)
+                term = nab * (jnp.log(jnp.maximum(nab, 1.0)) + log_nc
+                              - log_na[a] - log_nb[b])
+                g2 = g2 + jnp.where(nab > 0.0, term, 0.0)
+    return 2.0 * g2
+
+
+@functools.partial(jax.jit, static_argnames=("r", "q"))
+def gsq_ref(jc: jax.Array, *, r: int, q: int) -> jax.Array:
+    """jnp/XLA reference: jc (M, B) int32 joint codes (-1 = padding) →
+    G² (B,) fp32. Histograms via an exact integer scatter-add, then the
+    shared unrolled reduction — the values :func:`gsq_cells` must match
+    bitwise."""
+    k_total = q * r * r
+    m, b = jc.shape
+    cols = jnp.broadcast_to(jnp.arange(b, dtype=jnp.int32)[None, :], jc.shape)
+    valid = (jc >= 0) & (jc < k_total)
+    cnt = (
+        jnp.zeros((k_total, b), jnp.int32)
+        .at[jnp.where(valid, jc, 0), cols]
+        .add(valid.astype(jnp.int32))
+        .astype(jnp.float32)
+    )
+    return _g2_from_counts([cnt[k] for k in range(k_total)], r=r, q=q)
+
+
+def _gsq_kernel(jc_ref, cnt_ref, g2_ref, *, k_total: int, r: int, q: int,
+                nm: int):
+    """One (cell-tile, sample-block) grid step: accumulate the tile's
+    partial histograms into the revisited count block; at the last sample
+    step, collapse counts to G². Padded samples carry jc = -1 and match no
+    table slot."""
+    mstep = pl.program_id(1)
+
+    @pl.when(mstep == 0)
+    def _init():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    jc = jc_ref[...]  # (BM, 128) int32
+    for k in range(k_total):
+        cnt_ref[k, :] = cnt_ref[k, :] + jnp.sum(
+            (jc == k).astype(jnp.float32), axis=0
+        )
+
+    @pl.when(mstep == nm - 1)
+    def _reduce():
+        cnt = [cnt_ref[k, :] for k in range(k_total)]
+        g2 = _g2_from_counts(cnt, r=r, q=q)
+        g2_ref[...] = jnp.broadcast_to(g2[None, :], g2_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "q", "bm", "interpret"))
+def gsq_cells(jc: jax.Array, *, r: int, q: int, bm: int = 256,
+              interpret: bool | None = None) -> jax.Array:
+    """Pallas G² over flattened worklist cells: jc (M, B) int32 → (B,) fp32.
+
+    Grid (B/128 cell-tiles × M/bm sample-blocks); the sample axis is the
+    innermost (sequential) dimension, so each cell-tile's K-row count block
+    is revisited across sample steps and accumulates in place. ``bm`` is
+    the per-step sample-block height (sublane-aligned). interpret=None
+    auto-detects the backend (interpret mode off-TPU).
+    """
+    interpret = resolve_interpret(interpret)
+    k_total = q * r * r
+    m, b = jc.shape
+    lane = 128
+    m_pad = -(-max(m, bm) // bm) * bm
+    b_pad = -(-max(b, lane) // lane) * lane
+    jc = jnp.pad(jc, ((0, m_pad - m), (0, b_pad - b)), constant_values=-1)
+    k_pad = -(-k_total // 8) * 8
+    nm = m_pad // bm
+    _, g2 = pl.pallas_call(
+        functools.partial(_gsq_kernel, k_total=k_total, r=r, q=q, nm=nm),
+        grid=(b_pad // lane, nm),
+        in_specs=[pl.BlockSpec((bm, lane), lambda bt, ms: (ms, bt))],
+        out_specs=[
+            pl.BlockSpec((k_pad, lane), lambda bt, ms: (0, bt)),
+            pl.BlockSpec((8, lane), lambda bt, ms: (0, bt)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k_pad, b_pad), jnp.float32),
+            jax.ShapeDtypeStruct((8, b_pad), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jc)
+    return g2[0, :b]

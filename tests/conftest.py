@@ -7,6 +7,14 @@ are reproducible and the property tests keep executing. The shim covers
 exactly the API surface this suite uses (integers/floats strategies,
 `st.data()`, `@settings(max_examples=..., deadline=...)`); installing the
 real hypothesis transparently takes precedence.
+
+Also drops jax's in-process jit/executable caches between test modules:
+every module's caching behaviour (plan_level jit-key reuse probes, the
+scan build cache) is within-module, while the full tier-1 suite compiles
+enough distinct programs that the unbounded process-wide accumulation can
+segfault the XLA CPU compiler late in the run (observed inside
+``backend_compile`` during ``tests/test_serve.py`` once the suite grew
+past ~300 tests; any subset of the suite passes).
 """
 from __future__ import annotations
 
@@ -16,6 +24,15 @@ import types
 import zlib
 
 import numpy as np
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jax_cache_growth():
+    yield
+    import jax
+
+    jax.clear_caches()
 
 
 def _install_hypothesis_shim():

@@ -1,0 +1,259 @@
+"""The pluggable CITest seam (core/cit.py): Gaussian routing bit-identity,
+the discrete G²/χ² engine against the serial contingency-table oracle
+(fixed corpus + hypothesis property sweep), G2 vs G2-kernel bit-parity,
+threshold insufficient-sample modes, and categorical input validation."""
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engines, validate as V
+from repro.core.cit import (
+    MAX_G2_TABLE,
+    DiscreteCITest,
+    DiscreteStats,
+    GaussianCITest,
+    encode_discrete,
+    resolve_citest,
+    threshold,
+)
+from repro.core.pc import pc, pc_from_corr
+from repro.core.stable_ref import g2_test, pc_stable_skeleton_discrete
+from repro.data.synthetic_dag import sample_discrete_dag, sample_gaussian_dag
+
+pytestmark = pytest.mark.cit
+
+
+def _discrete_x(n, m, seed, arity=3, density=0.35):
+    x, _ = sample_discrete_dag(n=n, m=m, density=density, arity=arity, seed=seed)
+    # guard the generator's rare constant column (validate rejects those)
+    for k in range(n):
+        if len(np.unique(x[:, k])) < 2:
+            x[0, k] = (x[1, k] + 1) % arity
+    return x
+
+
+# ------------------------------------------------------------- resolve/protocol
+def test_resolve_citest_forms():
+    g = resolve_citest(None, 500, 0.01)
+    assert isinstance(g, GaussianCITest) and g.m == 500 and g.alpha == 0.01
+    assert resolve_citest("gaussian", 500, 0.01) == g
+    d = resolve_citest("discrete", 400, 0.05)
+    assert isinstance(d, DiscreteCITest) and d.alpha == 0.05
+    inst = DiscreteCITest(m=100, alpha=0.1, r=4)
+    assert resolve_citest(inst, 999, 0.01) is inst  # instances win as-is
+    with pytest.raises(ValueError):
+        resolve_citest("kci", 100, 0.01)
+
+
+def test_citest_scalars():
+    g = GaussianCITest(m=1000, alpha=0.01)
+    assert g.tau(2) == threshold(1000, 2, 0.01)
+    assert g.taus(3) == tuple(threshold(1000, e, 0.01) for e in range(4))
+    d = DiscreteCITest(m=400, alpha=0.05, r=3)
+    assert d.tau(0) == d.tau(5) == 0.05  # alpha itself, dof lives per cell
+    assert d.table_width(1) == 27
+    assert d.table_width(d.max_supported_level()) <= MAX_G2_TABLE
+    with pytest.raises(ValueError, match="MAX_G2_TABLE"):
+        d.check_level(d.max_supported_level() + 1)
+
+
+def test_encode_discrete_arities():
+    x = np.array([[0, 2], [1, 0], [0, 1]])
+    stats, r_max = encode_discrete(x)
+    assert isinstance(stats, DiscreteStats)
+    assert stats.codes.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(stats.arities), [2, 3])
+    assert r_max == 3
+
+
+# --------------------------------------------------- threshold: clamp is loud now
+def test_threshold_insufficient_raises_by_default():
+    with pytest.raises(V.InsufficientSamplesError):
+        threshold(5, 2, 0.01)  # m - ell - 3 = 0
+    with pytest.raises(V.InsufficientSamplesError):
+        threshold(3, 3, 0.01)
+
+
+def test_threshold_insufficient_warn_and_clamp():
+    from scipy.stats import norm
+
+    with pytest.warns(UserWarning, match="cannot support"):
+        tw = threshold(5, 2, 0.01, insufficient="warn")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        tc = threshold(5, 2, 0.01, insufficient="clamp")  # silent opt-in
+    # clamped denominator is 1 → τ = Φ⁻¹(1 − α/2) exactly
+    assert tw == tc == pytest.approx(norm.ppf(1 - 0.01 / 2), rel=1e-6)
+    with pytest.raises(ValueError, match="insufficient"):
+        threshold(5, 2, 0.01, insufficient="explode")
+
+
+def test_threshold_sufficient_unchanged():
+    # the guarded path must not perturb the healthy regime
+    assert threshold(1000, 3, 0.01) == threshold(1000, 3, 0.01, insufficient="clamp")
+
+
+# ------------------------------------------ Gaussian path through the seam: bits
+def test_gaussian_citest_path_bit_identical():
+    """pc()/pc_from_corr routed through an explicit GaussianCITest must match
+    the default path bit-for-bit — skeleton, sepsets AND cpdag."""
+    m = 2000
+    x, _ = sample_gaussian_dag(n=18, m=m, density=0.2, seed=4)
+    base = pc(x, alpha=0.01, engine="S")
+    via_obj = pc(x, alpha=0.01, engine="S", test=GaussianCITest(m=m, alpha=0.01))
+    via_str = pc(x, alpha=0.01, engine="S", test="gaussian")
+    for other in (via_obj, via_str):
+        np.testing.assert_array_equal(base.adj, other.adj)
+        np.testing.assert_array_equal(base.sepsets, other.sepsets)
+        np.testing.assert_array_equal(base.cpdag, other.cpdag)
+
+
+def test_pc_from_corr_rejects_discrete_test():
+    c = np.eye(4, dtype=np.float32)
+    with pytest.raises(ValueError, match="raw samples"):
+        pc_from_corr(c, 100, test="discrete")
+
+
+def test_discrete_rejects_gaussian_engines_and_corr_choice():
+    x = _discrete_x(6, 200, seed=0)
+    with pytest.raises(ValueError, match="corr"):
+        pc(x, test="discrete", corr="kernel")
+    d = DiscreteCITest(m=200, r=3)
+    with pytest.raises(ValueError):
+        engines.resolve("S-grid", 1, d)  # no G² grid engine
+    with pytest.raises(ValueError):
+        engines.resolve("G2", 1)  # G² names demand a discrete test
+    # Gaussian names remap onto the G² worklist under a discrete test
+    assert engines.resolve("auto", 2, d) == "G2-kernel"
+    assert engines.resolve("S", 2, d) == "G2"
+
+
+# --------------------------------------------------- discrete engine vs oracle
+@pytest.mark.parametrize("n,m,arity,seed", [
+    (8, 300, 3, 0), (10, 200, 2, 1), (7, 400, 3, 2), (9, 250, 2, 5),
+])
+def test_discrete_engine_matches_oracle(n, m, arity, seed):
+    x = _discrete_x(n, m, seed, arity=arity)
+    run = pc(x, alpha=0.05, test="discrete", max_level=2, orient=False)
+    ref = pc_stable_skeleton_discrete(x, alpha=0.05, max_level=2)
+    np.testing.assert_array_equal(run.adj, ref.adj)
+
+
+@given(st.integers(0, 10_000), st.integers(5, 12), st.integers(0, 1))
+@settings(max_examples=12, deadline=None)
+def test_discrete_engine_matches_oracle_property(seed, n, ar):
+    """Random small categorical graphs (n ≤ 12, levels 0–2): the batched G²
+    engine and the serial per-triple oracle must agree on every edge."""
+    arity = 2 + ar
+    x = _discrete_x(n, 160 + 40 * (seed % 3), seed, arity=arity, density=0.3)
+    run = pc(x, alpha=0.05, test="discrete", max_level=2, orient=False)
+    ref = pc_stable_skeleton_discrete(x, alpha=0.05, max_level=2)
+    np.testing.assert_array_equal(run.adj, ref.adj)
+
+
+def test_g2_vs_g2_kernel_bit_parity():
+    """The Pallas G² engine must reproduce the jnp G² engine exactly —
+    skeleton and committed sepsets."""
+    x = _discrete_x(10, 300, seed=3)
+    a = pc(x, alpha=0.05, test="discrete", engine="G2", max_level=2)
+    b = pc(x, alpha=0.05, test="discrete", engine="G2-kernel", max_level=2)
+    np.testing.assert_array_equal(a.adj, b.adj)
+    np.testing.assert_array_equal(a.sepsets, b.sepsets)
+    np.testing.assert_array_equal(a.cpdag, b.cpdag)
+    ran = {st_["level"]: st_["engine"] for st_ in b.level_stats
+           if not st_.get("skipped")}
+    assert all(e == "G2-kernel" for e in ran.values())
+
+
+def test_scan_discrete_matches_host_loop():
+    """engine="scan" with a discrete test runs the same G² decisions as the
+    host loop — bit-identical skeleton/sepsets at the same level cap."""
+    x = _discrete_x(9, 260, seed=7)
+    host = pc(x, alpha=0.05, test="discrete", engine="G2", max_level=2)
+    scan = pc(x, alpha=0.05, test="discrete", engine="scan", max_level=2)
+    np.testing.assert_array_equal(host.adj, scan.adj)
+    np.testing.assert_array_equal(host.sepsets, scan.sepsets)
+
+
+def test_pc_scan_batch_rejects_discrete():
+    from repro.batch.scan_pc import pc_scan_batch
+
+    with pytest.raises(NotImplementedError):
+        pc_scan_batch(np.zeros((2, 4, 4), np.float32), 100,
+                      test=DiscreteCITest(m=100))
+
+
+# --------------------------------------------------------------- oracle itself
+def test_g2_oracle_against_scipy_contingency():
+    """ℓ=0 G² must equal scipy's log-likelihood-ratio contingency test."""
+    from scipy.stats import chi2_contingency
+
+    rng = np.random.default_rng(11)
+    x = rng.integers(0, 3, size=(500, 2))
+    x[:200, 1] = x[:200, 0]
+    tab = np.zeros((3, 3))
+    for a, b in x:
+        tab[a, b] += 1
+    expect = chi2_contingency(tab, correction=False, lambda_="log-likelihood")
+    g2, dof, p = g2_test(x, np.array([3, 3]), 0, 1, ())
+    assert g2 == pytest.approx(expect.statistic, rel=1e-12)
+    assert dof == expect.dof
+    assert p == pytest.approx(expect.pvalue, rel=1e-9)
+
+
+def test_g2_oracle_conditional_independence():
+    """A → C → B chain: A⟂B | C accepted, A⟂B alone rejected (m large)."""
+    rng = np.random.default_rng(5)
+    m = 4000
+    a = rng.integers(0, 2, size=m)
+    c = (a + (rng.random(m) < 0.1)) % 2
+    b = (c + (rng.random(m) < 0.1)) % 2
+    x = np.stack([a, b, c], axis=1)
+    ar = np.array([2, 2, 2])
+    _, _, p_marg = g2_test(x, ar, 0, 1, ())
+    _, _, p_cond = g2_test(x, ar, 0, 1, (2,))
+    assert p_marg < 0.01 < p_cond
+
+
+# ----------------------------------------------------------------- validation
+def test_validate_discrete_accepts_codes():
+    m, n = V.validate_discrete(np.array([[0, 1], [1, 0], [2, 1]]))
+    assert (m, n) == (3, 2)
+
+
+@pytest.mark.parametrize("bad,err", [
+    (np.array([[0.5, 1.0], [1.0, 0.0]]), V.BadDiscreteDataError),   # non-integer
+    (np.array([[-1, 1], [1, 0]]), V.BadDiscreteDataError),          # negative
+    (np.array([[np.nan, 1.0], [1.0, 0.0]]), V.NonFiniteDataError),  # NaN
+    (np.array([[0, 1], [0, 0]]), V.ConstantColumnError),            # constant col
+    (np.array([0, 1, 1]), V.ValidationError),                       # 1-D
+])
+def test_validate_discrete_rejects(bad, err):
+    with pytest.raises(err):
+        V.validate_discrete(bad)
+
+
+def test_validate_discrete_arity_cap():
+    x = np.stack([np.arange(40), np.arange(40) % 2], axis=1)
+    with pytest.raises(V.BadDiscreteDataError, match="arity"):
+        V.validate_discrete(x, max_arity=16)
+
+
+def test_pc_discrete_validates():
+    x = _discrete_x(6, 200, seed=1).astype(np.float64)
+    x[0, 0] = np.nan
+    with pytest.raises(V.NonFiniteDataError):
+        pc(x, test="discrete")
+
+
+def test_discrete_default_level_cap_fits_table():
+    """max_level=None must self-cap instead of tripping MAX_G2_TABLE."""
+    x = _discrete_x(6, 200, seed=2, arity=4)
+    run = pc(x, alpha=0.05, test="discrete")  # no explicit cap: must not raise
+    t = DiscreteCITest(m=200, alpha=0.05, r=4)
+    assert run.levels_run <= t.max_supported_level()
+    with pytest.raises(ValueError, match="MAX_G2_TABLE"):
+        pc(x, alpha=0.05, test="discrete", max_level=t.max_supported_level() + 1)

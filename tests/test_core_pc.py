@@ -362,3 +362,30 @@ def test_validate_false_restores_trusting_entry():
     x[:, 0] = 1.0  # constant column: allowed through when opted out
     run = pc(x, engine="S", validate=False)
     assert run.adj.shape == (10, 10)
+
+
+# ------------------------------------- threshold: the silent clamp is gone
+def test_threshold_insufficient_raises_regression():
+    """m − ℓ − 3 ≤ 0 used to floor the denominator to 1 SILENTLY, turning
+    every test at that level into a guaranteed edge-keep; the library
+    default now raises a typed error, pc()'s level loop opts into a loud
+    warn-and-clamp, and the old behaviour survives only as an explicit
+    opt-in."""
+    from repro.core.validate import InsufficientSamplesError, ValidationError
+
+    with pytest.raises(InsufficientSamplesError):
+        threshold(6, 3, 0.01)  # denom = 0
+    with pytest.raises(InsufficientSamplesError):
+        threshold(2, 0, 0.01)  # denom < 0
+    assert issubclass(InsufficientSamplesError, ValidationError)
+
+    with pytest.warns(UserWarning, match="cannot support"):
+        t_warn = threshold(6, 3, 0.01, insufficient="warn")
+    t_clamp = threshold(6, 3, 0.01, insufficient="clamp")
+    assert t_warn == t_clamp  # same clamped value, different loudness
+
+    # the healthy regime is untouched by the guard
+    assert threshold(100, 0, 0.01) == pytest.approx(
+        2.5758293 / np.sqrt(97), abs=1e-6
+    )
+    assert threshold(100, 0, 0.01) == threshold(100, 0, 0.01, insufficient="clamp")

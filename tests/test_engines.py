@@ -266,3 +266,46 @@ def test_bucketing_reduces_chunk_compilations():
             f"2nd bucketed run compiled {new_compiles[True]} chunk_s variants, "
             f"2nd exact run compiled {new_compiles[False]}"
         )
+
+
+# ----------------------------------------- (engine × test-object) parity matrix
+def test_engine_matrix_gaussian_citest_bit_identity():
+    """Every Gaussian engine must be bit-identical whether the CI math is
+    reached implicitly (the pre-seam default) or through an explicit
+    GaussianCITest — skeleton AND sepsets (the ISSUE's refactor guarantee)."""
+    from repro.core.cit import GaussianCITest
+
+    m = 2500
+    x, _ = sample_gaussian_dag(n=20, m=m, density=0.25, seed=9)
+    c = correlation_from_samples(jnp.asarray(x))
+    t = GaussianCITest(m=m, alpha=0.01)
+    for eng in ("S", "E", "S-kernel", "auto"):
+        base = pc_from_corr(c, m, alpha=0.01, engine=eng)
+        via = pc_from_corr(c, m, alpha=0.01, engine=eng, test=t)
+        np.testing.assert_array_equal(base.adj, via.adj, err_msg=eng)
+        np.testing.assert_array_equal(base.sepsets, via.sepsets, err_msg=eng)
+        np.testing.assert_array_equal(base.cpdag, via.cpdag, err_msg=eng)
+
+
+def test_engine_matrix_discrete_all_names_agree():
+    """Discrete test × every admissible engine name: the generic names remap
+    onto the G² engines (jnp and Pallas) and ALL agree bit-for-bit."""
+    from repro.data.synthetic_dag import sample_discrete_dag
+
+    x, _ = sample_discrete_dag(n=9, m=260, density=0.35, arity=3, seed=2)
+    for k in range(x.shape[1]):  # validate rejects constant columns
+        if len(np.unique(x[:, k])) < 2:
+            x[0, k] = (x[1, k] + 1) % 3
+    runs = {
+        eng: pc(x, alpha=0.05, test="discrete", engine=eng, max_level=2)
+        for eng in ("S", "E", "auto", "S-kernel", "G2", "G2-kernel")
+    }
+    ref = runs["G2"]
+    for eng, r in runs.items():
+        np.testing.assert_array_equal(ref.adj, r.adj, err_msg=eng)
+        np.testing.assert_array_equal(ref.sepsets, r.sepsets, err_msg=eng)
+    # dispatch proof: stats record the remapped engine names
+    for eng, want in (("S", "G2"), ("auto", "G2-kernel")):
+        ran = {s["level"]: s["engine"] for s in runs[eng].level_stats
+               if not s.get("skipped")}
+        assert all(e == want for e in ran.values()), (eng, ran)
