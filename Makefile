@@ -2,7 +2,8 @@
 PY ?= python
 
 .PHONY: test verify-kernels verify-batch verify-distributed verify-serve \
-        verify-obs verify-cit lint docs-check bench-pc bench-pc-batch \
+        verify-obs verify-cit verify-analysis analysis lint docs-check \
+        bench-pc bench-pc-batch \
         bench-pc-distributed bench-pc-grid bench-pc-cit bench-pc-serve \
         bench-check ci
 
@@ -30,6 +31,13 @@ verify-obs:  ## observability layer: spans/metrics/journals + zero-overhead cont
 verify-cit:  ## CI-test seam: Gaussian bit-identity, discrete G² vs oracle, kernel parity
 	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 	  PYTHONPATH=src $(PY) -m pytest -q -m cit tests/test_cit.py
+
+verify-analysis:  ## static-analysis suite: sweep vs baseline + rule tests (docs/analysis.md)
+	PYTHONPATH=src $(PY) -m repro.analysis
+	PYTHONPATH=src $(PY) -m pytest -q -m analysis tests/test_analysis.py
+
+analysis:  ## run the static-analysis sweep only (text output, baseline-gated)
+	PYTHONPATH=src $(PY) -m repro.analysis
 
 lint:  ## ruff over the python tree (same invocation as CI)
 	ruff check src tests benchmarks scripts

@@ -20,6 +20,12 @@ itself) and FAILS on structural regressions:
     is a FAILURE, not a skip — and any baseline section that carries
     parity flags is gated even when it isn't in ``--sections``.
 
+It also runs the static-analysis suite's dispatch-contract analyzer
+(repro.analysis.jaxpr.check_dispatch_contract) as a BLOCKING structural
+check: per-level stats that break the planner arithmetic (chunk counts,
+pipeline dispatch multipliers) fail the gate even though raw timings do
+not.
+
 Raw timings are NOT gated (shared CI runners make them advisory); the
 fresh JSON is uploaded as a CI artifact instead. Wired as a non-blocking
 step in .github/workflows/ci.yml and as ``make bench-check``.
@@ -171,6 +177,23 @@ def phase_report(name: str, baseline: dict) -> None:
               + f" — largest: {worst}")
 
 
+def dispatch_contract_problems() -> list[str]:
+    """Blocking structural gate from the static-analysis suite: run each
+    engine on a small workload and verify the published per-level stats
+    against the planner arithmetic (chunks == ceil(total/n_chunk),
+    dispatches == chunks × pipeline multiplier). Unlike raw timings this
+    is exact on any runner, so it gates. Skipped only when the repro
+    package is not importable (no PYTHONPATH=src)."""
+    try:
+        from repro.analysis.jaxpr import check_dispatch_contract
+    except ImportError:
+        print("[bench-check] dispatch-contract analysis skipped "
+              "(repro not importable — run with PYTHONPATH=src)")
+        return []
+    return [f"dispatch contract: {f.message}"
+            for f in check_dispatch_contract()]
+
+
 def check_section(name: str, baseline: dict) -> list[str]:
     problems = []
     base = _SECTION_BASE.get(name, lambda b: b.get(name))(baseline)
@@ -237,6 +260,7 @@ def main(argv=None) -> int:
     for name in args.sections:
         problems += check_section(name, baseline)
         phase_report(name, baseline)
+    problems += dispatch_contract_problems()
 
     if problems:
         for p in problems:

@@ -2,7 +2,8 @@
 # CI entry point — the stages the GitHub workflow (.github/workflows/ci.yml)
 # runs on a forced 8-device CPU mesh, and `make ci` runs locally:
 #   lint (skipped when ruff is absent) → kernel/engine smoke → batch
-#   subsystem → distributed/sharding suite → docs snippets → full tier-1.
+#   subsystem → distributed/sharding suite → docs snippets → static
+#   analysis (blocking) → full tier-1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -38,8 +39,12 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 echo "[ci] docs-check (execute fenced snippets in README.md + docs/)"
 python scripts/check_docs.py
 
+echo "[ci] analysis (static contracts: sweep vs baseline + rule suite) — blocking"
+PYTHONPATH=src python -m repro.analysis --format github
+PYTHONPATH=src python -m pytest -q -m analysis tests/test_analysis.py
+
 echo "[ci] tier-1 remainder (kernels/batch/distributed already ran above)"
-PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed and not serve and not obs and not cit"
+PYTHONPATH=src python -m pytest -x -q -m "not kernels and not batch and not distributed and not serve and not obs and not cit and not analysis"
 
 # non-blocking: perf numbers on shared machines are advisory; structural
 # regressions (missing BENCH keys, parity-flag flips, parity flags a bench

@@ -1,0 +1,55 @@
+"""Static-analysis suite enforcing the repo's bit-parity and no-host-sync
+contracts (docs/analysis.md).
+
+Three layers, one CLI (``python -m repro.analysis``), one committed
+baseline (``analysis_baseline.json``):
+
+  * Layer 1 (:mod:`repro.analysis.rules`) — stdlib-``ast`` source rules
+    ``RPR0xx``: host-sync primitives inside traced bodies, library sync
+    seams outside the allowlist, raw wall-clock timing outside ``obs``,
+    ``interpret`` plumbing, static-argname hygiene.
+  * Layer 2 (:mod:`repro.analysis.jaxpr`) — ``jax.make_jaxpr`` contract
+    checks ``RPR1xx`` over the public entry points: no f64 promotion, no
+    callback primitives, pallas_call/dispatch counts, combinadics rank
+    capacity.
+  * Layer 3 (:mod:`repro.analysis.pallas`) — BlockSpec/grid static
+    analysis ``RPR2xx``: output-block coverage, revisit/clobber hazards,
+    VMEM budgets.
+
+Plus an advisory import-graph orphan report
+(:mod:`repro.analysis.imports`).
+"""
+from __future__ import annotations
+
+from .baseline import BASELINE_NAME, BaselineEntry, compare
+from .baseline import load as load_baseline
+from .baseline import write as write_baseline
+from .findings import RULE_CATALOG, Finding, Report, register_rule
+from .rules import ALLOWLIST, check_tree
+
+__all__ = [
+    "Finding", "Report", "RULE_CATALOG", "register_rule",
+    "BaselineEntry", "BASELINE_NAME", "load_baseline", "write_baseline",
+    "compare", "check_tree", "ALLOWLIST", "run_all",
+]
+
+
+def run_all(repo_root: str = ".", *, layers: tuple[int, ...] = (1, 2, 3),
+            deep: bool = True) -> Report:
+    """Run the requested layers and the advisory orphan report. Layer 1 is
+    pure source analysis (fast); layers 2/3 import jax and trace."""
+    rep = Report()
+    if 1 in layers:
+        rep.extend(check_tree(repo_root))
+    if 2 in layers:
+        from . import jaxpr
+
+        rep.extend(jaxpr.all_findings(deep=deep))
+    if 3 in layers:
+        from . import pallas
+
+        rep.extend(pallas.all_findings())
+    from . import imports
+
+    rep.advisories.extend(imports.report(repo_root))
+    return rep

@@ -1,0 +1,64 @@
+"""Finding records shared by every analysis layer.
+
+A finding is one violation of a machine-checked contract, identified by a
+ruff-style code (``RPR0xx`` AST rules, ``RPR1xx`` jaxpr analyzers,
+``RPR2xx`` Pallas checks). Its *key* — ``CODE path::context::detail`` —
+deliberately omits the line number so baseline entries survive unrelated
+edits to the same file; the line is carried separately for display and
+``--format github`` annotations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Finding:
+    code: str  # e.g. "RPR001"
+    path: str  # repo-relative posix path ("src/repro/core/levels.py")
+    line: int  # 1-based; 0 when the finding is not tied to a source line
+    message: str  # human sentence, shown next to the location
+    context: str = "<module>"  # enclosing symbol (function / kernel name)
+    detail: str = ""  # the specific primitive/argument that fired
+
+    @property
+    def key(self) -> str:
+        """Line-independent identity used by the baseline and allowlist."""
+        return f"{self.code} {self.path}::{self.context}::{self.detail}"
+
+    def format(self, fmt: str = "text") -> str:
+        if fmt == "github":
+            return (
+                f"::error file={self.path},line={max(self.line, 1)},"
+                f"title={self.code}::{self.message}"
+            )
+        return f"{self.path}:{self.line}: {self.code} [{self.context}] {self.message}"
+
+
+# Rule catalog: code -> one-line description. docs/analysis.md and the
+# README badge count are generated from this mapping, so adding a rule
+# anywhere updates the catalog automatically (test_analysis pins the sync).
+RULE_CATALOG: dict[str, str] = {}
+
+
+def register_rule(code: str, description: str) -> str:
+    """Register a rule code in the catalog (idempotent; returns the code)."""
+    existing = RULE_CATALOG.get(code)
+    if existing is not None and existing != description:
+        raise ValueError(f"rule {code} registered twice with different text")
+    RULE_CATALOG[code] = description
+    return code
+
+
+@dataclass
+class Report:
+    """One analysis run: gating findings + advisory notes."""
+
+    findings: list[Finding] = field(default_factory=list)
+    advisories: list[str] = field(default_factory=list)
+
+    def extend(self, fs) -> None:
+        self.findings.extend(fs)
+
+    def sorted(self) -> list[Finding]:
+        return sorted(self.findings, key=lambda f: (f.path, f.line, f.code))

@@ -1,0 +1,150 @@
+"""Advisory import-graph orphan report.
+
+Builds the static import graph of ``src/repro`` (stdlib ``ast``, no code
+executed) and reports modules unreachable from the entry-point roots:
+
+  * ``repro.core`` / ``repro.batch`` / ``repro.serve`` packages (the PC
+    pipeline's public API),
+  * every driver directly under ``repro.launch``,
+  * every benchmark under ``benchmarks/`` (they import ``repro.*``),
+  * the analysis suite itself and the test support surface.
+
+Orphans are ADVISORY, not findings: the seed tree deliberately carries
+subsystems the PC pipeline does not touch (models/, optim/, data tokens —
+exercised by launch/train.py and friends), so an orphan here is a prompt
+to either wire the module up or delete it, not a CI failure.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+ROOT_PACKAGES = ("repro.core", "repro.batch", "repro.serve", "repro.analysis")
+
+
+def _module_name(py: Path, src: Path) -> str:
+    rel = py.relative_to(src).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _resolve_relative(mod: str, node: ast.ImportFrom) -> str | None:
+    if not node.level:
+        return node.module
+    base = mod.split(".")
+    # an __init__ module's package is itself; plain modules drop the leaf
+    base = base[: len(base) - node.level]
+    if node.module:
+        base = base + node.module.split(".")
+    return ".".join(base) if base else None
+
+
+def _edges(py: Path, mod: str, is_pkg: bool) -> set[str]:
+    try:
+        tree = ast.parse(py.read_text())
+    except (OSError, SyntaxError):
+        return set()
+    src_mod = mod if not is_pkg else mod + ".__init__"
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            out.update(a.name for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            base = _resolve_relative(mod if not is_pkg else mod + "._",
+                                     node) if node.level else node.module
+            if base:
+                out.add(base)
+                # `from pkg import sub` may bind a submodule
+                out.update(f"{base}.{a.name}" for a in node.names)
+    del src_mod
+    return out
+
+
+def build_graph(repo_root: str | Path) -> tuple[dict[str, set[str]], set[str]]:
+    """(adjacency over repro.* module names, root module set)."""
+    repo_root = Path(repo_root)
+    src = repo_root / "src"
+    modules: dict[str, Path] = {}
+    for py in sorted((src / "repro").rglob("*.py")):
+        if "__pycache__" in py.parts:
+            continue
+        modules[_module_name(py, src)] = py
+
+    graph: dict[str, set[str]] = {}
+    for mod, py in modules.items():
+        is_pkg = py.name == "__init__.py"
+        deps = set()
+        for d in _edges(py, mod, is_pkg):
+            # keep only repro-internal edges, resolved to known modules
+            # (an edge to a package also reaches its __init__ imports)
+            cand = d
+            while cand and cand not in modules:
+                cand = cand.rpartition(".")[0]
+            if cand and cand.startswith("repro"):
+                deps.add(cand)
+        graph[mod] = deps - {mod}
+
+    roots = {r for r in ROOT_PACKAGES if r in graph}
+    roots.update(m for m in graph
+                 if m.startswith("repro.launch.") and m.count(".") == 2)
+    # benchmarks/ and tests/ sit outside src but import repro.* — their
+    # imports are roots too
+    for extra_dir in ("benchmarks", "tests", "scripts"):
+        d = repo_root / extra_dir
+        if not d.is_dir():
+            continue
+        for py in sorted(d.glob("*.py")):
+            for dep in _edges(py, py.stem, False):
+                cand = dep
+                while cand and cand not in graph:
+                    cand = cand.rpartition(".")[0]
+                if cand and cand.startswith("repro"):
+                    roots.add(cand)
+    return graph, roots
+
+
+def reachable(graph: dict[str, set[str]], roots: set[str]) -> set[str]:
+    seen: set[str] = set()
+    stack = [r for r in roots if r in graph]
+    while stack:
+        mod = stack.pop()
+        if mod in seen:
+            continue
+        seen.add(mod)
+        # reaching a module implies importing its package chain
+        parent = mod.rpartition(".")[0]
+        if parent and parent in graph and parent not in seen:
+            stack.append(parent)
+        stack.extend(d for d in graph.get(mod, ()) if d not in seen)
+    return seen
+
+
+def orphans(repo_root: str | Path) -> list[str]:
+    graph, roots = build_graph(repo_root)
+    live = reachable(graph, roots)
+    out = []
+    for mod in sorted(graph):
+        if mod in live or mod.endswith(".__main__"):  # `python -m` entry
+            continue
+        # a package whose members are all orphaned reports once
+        if any(o != mod and mod.startswith(o + ".") for o in out):
+            continue
+        out.append(mod)
+    return out
+
+
+def report(repo_root: str | Path) -> list[str]:
+    """Human-readable advisory lines (empty when the tree is fully live)."""
+    orphan_list = orphans(repo_root)
+    if not orphan_list:
+        return []
+    lines = [f"advisory: {len(orphan_list)} module(s) unreachable from the "
+             "entry-point roots (core/batch/serve/analysis, launch drivers, "
+             "benchmarks, tests):"]
+    lines += [f"  - {m}" for m in orphan_list]
+    return lines
+
+
+__all__ = ["build_graph", "reachable", "orphans", "report", "ROOT_PACKAGES"]

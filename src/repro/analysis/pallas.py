@@ -1,0 +1,425 @@
+"""Layer 3 — Pallas BlockSpec/grid static analysis (``RPR2xx``).
+
+Captures every ``pl.pallas_call`` a kernel wrapper stages (by patching the
+``pallas_call`` attribute the kernel modules resolve at trace time and
+running the *unjitted* wrapper under ``jax.eval_shape`` — no compilation,
+no device work) and statically evaluates the captured BlockSpec index maps
+over the whole grid:
+
+  RPR201  output coverage: walking the grid must produce every block of
+          every output exactly (no hole a stale-HBM block would leak
+          through, no out-of-range block index).
+  RPR202  revisit hazards on output blocks. A block revisited across
+          sequential grid steps is the canonical Pallas reduction pattern
+          (sgrid's t_win/s_win, gsq's count rows, corr/level1 via
+          scratch) — but it is only sound when (a) the revisits are
+          CONTIGUOUS in the grid's sequential order (an output buffer does
+          not round-trip to HBM between visits of *other* blocks), and
+          (b) the kernel body read-modify-writes the block (or only
+          writes it under a ``pl.when`` step guard) instead of blindly
+          overwriting work from earlier steps. (b) is decided by a source
+          AST scan of the kernel body: the earliest *unguarded* store to
+          that output ref must not precede every load of it.
+  RPR203  static VMEM footprint: Σ (block bytes × 2 for in/out
+          double-buffering) + scratch must fit the 16 MiB VMEM budget.
+
+The capture harness and checks are injectable so tests can aim them at a
+deliberately-broken toy kernel (see tests/test_analysis.py).
+"""
+from __future__ import annotations
+
+import ast
+import functools
+import inspect
+import itertools
+import math
+import textwrap
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .findings import Finding, register_rule
+
+RPR201 = register_rule("RPR201", "pallas output-block coverage hole / out-of-range index")
+RPR202 = register_rule("RPR202", "revisited pallas output block without RMW/guard")
+RPR203 = register_rule("RPR203", "static VMEM footprint exceeds budget")
+
+#: TPU VMEM per core; the budget every launch's working set must fit.
+VMEM_BUDGET = 16 * 2**20
+
+
+# ------------------------------------------------------------------- capture
+@dataclass
+class CapturedCall:
+    """One staged ``pl.pallas_call``: everything the static checks need."""
+
+    kernel: Callable
+    grid: tuple
+    in_specs: list
+    out_specs: list
+    out_shape: list
+    scratch_shapes: list
+    in_avals: list = field(default_factory=list)  # (shape, dtype) per operand
+
+
+def _aslist(x):
+    if x is None:
+        return []
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+def capture_calls(fn: Callable, *args, **kwargs) -> list[CapturedCall]:
+    """Run ``fn`` (kwargs bound statically) under ``jax.eval_shape`` with
+    ``pallas_call`` replaced by a recorder. The jit wrapper is bypassed via
+    ``__wrapped__`` so the patched symbol is hit even when the real kernel
+    is already in the jit cache. Abstract only — nothing compiles."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as real_pl
+
+    fn = getattr(fn, "__wrapped__", fn)
+    captured: list[CapturedCall] = []
+
+    def fake_pallas_call(kernel, *, grid=None, in_specs=None, out_specs=None,
+                         out_shape=None, scratch_shapes=None, **_ignored):
+        call = CapturedCall(
+            kernel=kernel, grid=tuple(grid or ()),
+            in_specs=_aslist(in_specs), out_specs=_aslist(out_specs),
+            out_shape=_aslist(out_shape), scratch_shapes=_aslist(scratch_shapes),
+        )
+        captured.append(call)
+        single = not isinstance(out_shape, (list, tuple))
+
+        def run(*operands):
+            call.in_avals = [(tuple(o.shape), o.dtype) for o in operands]
+            outs = [jnp.zeros(s.shape, s.dtype) for s in call.out_shape]
+            return outs[0] if single else outs
+
+        return run
+
+    real = real_pl.pallas_call
+    real_pl.pallas_call = fake_pallas_call
+    try:
+        jax.eval_shape(functools.partial(fn, **kwargs), *args)
+    finally:
+        real_pl.pallas_call = real
+    return captured
+
+
+# ---------------------------------------------------------- kernel-body AST
+def _kernel_source_tree(kernel: Callable):
+    k = kernel
+    while isinstance(k, functools.partial):
+        k = k.func
+    src = textwrap.dedent(inspect.getsource(k))
+    tree = ast.parse(src)
+    fndef = next(n for n in tree.body if isinstance(n, ast.FunctionDef))
+    return k, fndef
+
+
+def _positional_params(k: Callable) -> list[str]:
+    sig = inspect.signature(k)
+    return [p.name for p in sig.parameters.values()
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+
+
+def _is_when_guarded(node: ast.FunctionDef) -> bool:
+    for dec in node.decorator_list:
+        call = dec if isinstance(dec, ast.Call) else None
+        f = call.func if call else dec
+        if isinstance(f, ast.Attribute) and f.attr == "when":
+            return True
+        if isinstance(f, ast.Name) and f.id == "when":
+            return True
+    return False
+
+
+def _ref_events(fndef: ast.FunctionDef, ref: str):
+    """(loads, unguarded_stores) line numbers for ``ref`` in the kernel
+    body. Stores inside a ``pl.when``-decorated nested def are step-guarded
+    and not counted; an AugAssign is both a load and a store."""
+    loads, stores = [], []
+
+    def walk(node, guarded):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.FunctionDef):
+                walk(child, guarded or _is_when_guarded(child))
+                continue
+            if isinstance(child, (ast.Assign, ast.AugAssign)):
+                targets = child.targets if isinstance(child, ast.Assign) else [child.target]
+                hit = False
+                for t in targets:
+                    if (isinstance(t, ast.Subscript)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == ref):
+                        hit = True
+                if hit and not guarded:
+                    stores.append(child.lineno)
+                if hit and isinstance(child, ast.AugAssign):
+                    loads.append(child.lineno)
+                # loads on the RHS (and non-ref targets) still count
+                for sub in ast.walk(child.value if isinstance(child, ast.Assign) else child.value):
+                    if isinstance(sub, ast.Name) and sub.id == ref:
+                        loads.append(sub.lineno)
+                continue
+            for sub in ast.walk(child):
+                if isinstance(sub, ast.Name) and sub.id == ref and isinstance(
+                        getattr(sub, "ctx", None), ast.Load):
+                    loads.append(sub.lineno)
+            # don't descend twice
+        return
+
+    walk(fndef, False)
+    return sorted(loads), sorted(stores)
+
+
+def _store_is_safe(kernel: Callable, out_index: int, n_inputs: int) -> tuple[bool, str]:
+    """True when the ``out_index``-th output ref is written RMW-style or
+    only under step guards. Falls open (safe) when source is unavailable."""
+    try:
+        k, fndef = _kernel_source_tree(kernel)
+        params = _positional_params(k)
+        ref = params[n_inputs + out_index]
+    except (OSError, TypeError, StopIteration, IndexError):
+        return True, "<source unavailable>"
+    loads, stores = _ref_events(fndef, ref)
+    if not stores:
+        return True, ref  # only guarded writes
+    if not loads or min(stores) < min(loads):
+        return False, ref  # blind unguarded overwrite before any read
+    return True, ref
+
+
+# ------------------------------------------------------------------- checks
+def _block_shape(spec):
+    return getattr(spec, "block_shape", None)
+
+
+def _index_map(spec):
+    return getattr(spec, "index_map", None)
+
+
+def _grid_points(grid):
+    # itertools.product iterates the LAST axis fastest — exactly the Pallas
+    # sequential traversal order (last grid dim is innermost).
+    return itertools.product(*[range(g) for g in grid])
+
+
+def coverage_findings(call: CapturedCall, name: str, path: str) -> list[Finding]:
+    out = []
+    for oi, (spec, sds) in enumerate(zip(call.out_specs, call.out_shape)):
+        bs, imap = _block_shape(spec), _index_map(spec)
+        if bs is None or imap is None:
+            continue
+        nblocks = tuple(-(-d // b) for d, b in zip(sds.shape, bs))
+        expected = set(itertools.product(*[range(n) for n in nblocks]))
+        produced = set()
+        for g in _grid_points(call.grid):
+            idx = tuple(int(v) for v in imap(*g))
+            if any(not (0 <= v < n) for v, n in zip(idx, nblocks)):
+                out.append(Finding(
+                    code=RPR201, path=path, line=0,
+                    message=f"{name}: out[{oi}] index map sends grid point "
+                            f"{g} to block {idx}, outside the {nblocks} "
+                            "block range",
+                    context=name, detail=f"out{oi}-range",
+                ))
+                break
+            produced.add(idx)
+        missing = expected - produced
+        if missing:
+            out.append(Finding(
+                code=RPR201, path=path, line=0,
+                message=f"{name}: out[{oi}] never produces block(s) "
+                        f"{sorted(missing)[:4]}{'…' if len(missing) > 4 else ''} "
+                        f"— {len(missing)}/{len(expected)} blocks uncovered "
+                        "(stale HBM would leak through)",
+                context=name, detail=f"out{oi}-coverage",
+            ))
+    return out
+
+
+def revisit_findings(call: CapturedCall, name: str, path: str) -> list[Finding]:
+    out = []
+    n_in = len(call.in_specs)
+    for oi, spec in enumerate(call.out_specs):
+        bs, imap = _block_shape(spec), _index_map(spec)
+        if bs is None or imap is None:
+            continue
+        visits: dict[tuple, list[int]] = {}
+        for step, g in enumerate(_grid_points(call.grid)):
+            visits.setdefault(tuple(int(v) for v in imap(*g)), []).append(step)
+        revisited = {b: ss for b, ss in visits.items() if len(ss) > 1}
+        if not revisited:
+            continue
+        # (a) contiguity: a revisited output buffer must see all its grid
+        # steps back-to-back, or work done on earlier visits is lost when
+        # the buffer round-trips while other blocks are produced
+        for b, ss in revisited.items():
+            if ss[-1] - ss[0] != len(ss) - 1:
+                out.append(Finding(
+                    code=RPR202, path=path, line=0,
+                    message=f"{name}: out[{oi}] block {b} is revisited at "
+                            f"non-contiguous grid steps {ss[:6]} — the "
+                            "revisit axis must be innermost",
+                    context=name, detail=f"out{oi}-noncontiguous",
+                ))
+                break
+        # (b) the body must RMW or step-guard its writes to this output
+        safe, ref = _store_is_safe(call.kernel, oi, n_in)
+        if not safe:
+            out.append(Finding(
+                code=RPR202, path=path, line=0,
+                message=f"{name}: out[{oi}] ({ref}) is revisited across "
+                        f"{max(len(s) for s in revisited.values())} grid "
+                        "steps but the kernel's first unguarded store "
+                        "precedes any load — later steps clobber earlier "
+                        "winners (the t_win/s_win hazard class)",
+                context=name, detail=f"out{oi}-clobber",
+            ))
+    return out
+
+
+def _scratch_bytes(s) -> int:
+    shape = getattr(s, "shape", None)
+    dtype = getattr(s, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    import numpy as np
+
+    return int(math.prod(shape)) * np.dtype(dtype).itemsize
+
+
+def vmem_findings(call: CapturedCall, name: str, path: str,
+                  budget: int = VMEM_BUDGET) -> list[Finding]:
+    import numpy as np
+
+    total = 0
+    for spec, aval in zip(call.in_specs, call.in_avals or [(None, None)] * len(call.in_specs)):
+        bs = _block_shape(spec)
+        shape, dtype = aval
+        if dtype is None:
+            continue
+        if bs is None:  # SMEM scalar operand — whole (tiny) array, no lanes
+            total += int(math.prod(shape or ())) * np.dtype(dtype).itemsize
+        else:
+            total += int(math.prod(bs)) * np.dtype(dtype).itemsize * 2
+    for spec, sds in zip(call.out_specs, call.out_shape):
+        bs = _block_shape(spec)
+        shape = bs if bs is not None else sds.shape
+        total += int(math.prod(shape)) * np.dtype(sds.dtype).itemsize * 2
+    total += sum(_scratch_bytes(s) for s in call.scratch_shapes)
+    if total > budget:
+        return [Finding(
+            code=RPR203, path=path, line=0,
+            message=f"{name}: static VMEM working set {total / 2**20:.2f} MiB "
+                    f"(blocks ×2 double-buffer + scratch) exceeds the "
+                    f"{budget / 2**20:.0f} MiB budget",
+            context=name, detail="vmem",
+        )]
+    return []
+
+
+def check_call(call: CapturedCall, name: str, path: str,
+               budget: int = VMEM_BUDGET) -> list[Finding]:
+    return (coverage_findings(call, name, path)
+            + revisit_findings(call, name, path)
+            + vmem_findings(call, name, path, budget))
+
+
+def check_kernel(fn, *args, name: str = "", path: str = "src/repro/kernels",
+                 budget: int = VMEM_BUDGET, **kwargs) -> list[Finding]:
+    name = name or getattr(fn, "__name__", str(fn))
+    calls = capture_calls(fn, *args, **kwargs)
+    if not calls:
+        return [Finding(
+            code=RPR201, path=path, line=0,
+            message=f"{name}: no pallas_call captured — the wrapper no "
+                    "longer stages a kernel (or bypassed the patched symbol)",
+            context=name, detail="no-capture",
+        )]
+    out = []
+    for i, call in enumerate(calls):
+        label = name if len(calls) == 1 else f"{name}[{i}]"
+        out += check_call(call, label, path, budget)
+    return out
+
+
+# ----------------------------------------------------------------- registry
+def kernel_cases() -> list[tuple[str, str, Callable]]:
+    """(name, path, builder) per analyzed kernel entry point; builders
+    return (fn, args, kwargs) with small, tile-aligned ShapeDtypeStructs.
+    Shapes are chosen so every sequential-reduction kernel actually
+    revisits (≥2 steps on its innermost grid dim)."""
+    import jax
+    import jax.numpy as jnp
+
+    f32, i32, u8 = jnp.float32, jnp.int32, jnp.uint8
+
+    def S(shape, dtype=f32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    def sgrid():
+        from repro.kernels.sgrid import sgrid_kernel
+        ell, npr, T, Nl = 2, 4, 16, 128
+        args = (S((ell, ell, T, Nl)), S((ell, T, Nl)), S((npr, ell, T, Nl)),
+                S((npr, T, Nl)), S((npr, T, Nl), u8), S((ell, T, Nl), i32),
+                jnp.float32(0.5))
+        return sgrid_kernel, args, dict(ell=ell, npr=npr, tb=8)
+
+    def cholinv():
+        from repro.kernels.cholinv import cholinv_kernel
+        ell = 3
+        return (cholinv_kernel,
+                (S((ell, ell, 16, 128)), S((ell, 16, 128))), dict(ell=ell))
+
+    def cisweep():
+        from repro.kernels.cisweep import cisweep_kernel
+        ell, P, Bs = 2, 8, 16
+        args = (S((ell, ell, Bs, 128)), S((ell, Bs, 128)), S((Bs, 128)),
+                S((P, ell, Bs, 128)), S((P, Bs, 128)), S((P, Bs, 128), u8),
+                jnp.float32(0.5))
+        return cisweep_kernel, args, dict(ell=ell)
+
+    def level1():
+        from repro.kernels.level1 import level1_dense_kernel
+        n = 256
+        return (level1_dense_kernel,
+                (S((n, n)), S((n, n), u8), jnp.float32(0.5)), {})
+
+    def gsq():
+        from repro.kernels.gsq import gsq_cells
+        return gsq_cells, (S((512, 128), i32),), dict(r=2, q=2)
+
+    def level0():
+        from repro.kernels.level0 import level0_kernel
+        return level0_kernel, (S((512, 512)), jnp.float32(0.5)), {}
+
+    def corr():
+        from repro.kernels.corr import corr_matmul
+        return corr_matmul, (S((1024, 512)),), {}
+
+    k = "src/repro/kernels"
+    return [
+        ("sgrid_kernel", f"{k}/sgrid.py", sgrid),
+        ("cholinv_kernel", f"{k}/cholinv.py", cholinv),
+        ("cisweep_kernel", f"{k}/cisweep.py", cisweep),
+        ("level1_dense_kernel", f"{k}/level1.py", level1),
+        ("gsq_cells", f"{k}/gsq.py", gsq),
+        ("level0_kernel", f"{k}/level0.py", level0),
+        ("corr_matmul", f"{k}/corr.py", corr),
+    ]
+
+
+def all_findings() -> list[Finding]:
+    out = []
+    for name, path, build in kernel_cases():
+        fn, args, kwargs = build()
+        out += check_kernel(fn, *args, name=name, path=path, **kwargs)
+    return out
+
+
+__all__ = [
+    "CapturedCall", "capture_calls", "check_call", "check_kernel",
+    "coverage_findings", "revisit_findings", "vmem_findings",
+    "kernel_cases", "all_findings", "VMEM_BUDGET",
+]

@@ -758,12 +758,20 @@ def _check_rank_capacity(total: int, n_chunk: int, ell: int):
     :func:`_imax`. Without this guard, C(n′, ℓ) past the dtype capacity
     silently ALIASES ranks through the clipped binomial table
     (core/combinadics.py) instead of failing. Returns a (possibly reduced)
-    n_chunk; raises when the level itself is unrepresentable."""
+    n_chunk; raises when the level itself is unrepresentable.
+
+    The bound is ``imax // 2``, not ``imax``: the commit path compares keys
+    ``rank·2 + bit`` against the ``imax`` sentinel (``final_key < imax``
+    decides removal), so a level is only representable while its *doubled*
+    worst rank stays under the sentinel — a rank in (imax/2, imax) would
+    trace fine but silently never commit its winner."""
     imax = _imax()
-    if total > imax:
+    if total > imax // 2:
         raise ValueError(
             f"level with {total} conditioning sets (ell={ell}) exceeds the "
-            f"rank capacity {imax} of {_rank_dtype().dtype.name} ranks; "
+            f"rank capacity of {_rank_dtype().dtype.name}: the commit-key "
+            f"capacity is {imax // 2} (keys are rank*2+bit vs the {imax} "
+            "sentinel); "
             "enable jax_enable_x64 (the pc_run launcher does) for int64 "
             "ranks, or cap max_level"
         )

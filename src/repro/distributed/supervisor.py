@@ -17,10 +17,10 @@ pytree and a step callable.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 
 from ..checkpoint import CheckpointManager
+from ..obs import MonotonicClock
 
 
 @dataclass
@@ -39,12 +39,15 @@ class Supervisor:
         max_restarts: int = 3,
         straggler_factor: float = 3.0,
         on_straggler=None,
+        clock=None,
     ):
         self.ckpt = ckpt
         self.ckpt_every = ckpt_every
         self.max_restarts = max_restarts
         self.straggler_factor = straggler_factor
         self.on_straggler = on_straggler or (lambda step, dt, ema: None)
+        # obs clock seam: tests inject ManualClock to script straggler steps
+        self.clock = clock or MonotonicClock()
 
     def run(self, state, step_fn, batch_fn, n_steps: int, start_step: int = 0) -> TrainResult:
         """state: opaque pytree. step_fn(state, batch) -> (state, metrics).
@@ -59,9 +62,9 @@ class Supervisor:
         step = start_step
         while step < n_steps:
             try:
-                t0 = time.perf_counter()
+                t0 = self.clock.now()
                 state, metrics = step_fn(state, batch_fn(step))
-                dt = time.perf_counter() - t0
+                dt = self.clock.now() - t0
                 if ema is not None and dt > self.straggler_factor * ema:
                     stragglers += 1
                     self.on_straggler(step, dt, ema)

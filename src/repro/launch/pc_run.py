@@ -40,13 +40,16 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import numpy as np
 
 import jax
 
+from repro.obs import MonotonicClock
+
 jax.config.update("jax_enable_x64", True)  # C(n', l) ranks overflow int32
+
+_CLK = MonotonicClock()  # the obs timing seam — no raw perf_counter (RPR003)
 
 
 def _batch_mesh(args):
@@ -65,13 +68,13 @@ def _run_bootstrap(args, x, n, m, d, alpha):
     from repro.batch.ensemble import bootstrap_pc
 
     mesh = _batch_mesh(args)
-    t0 = time.perf_counter()
+    t0 = _CLK.now()
     run = bootstrap_pc(
         x, n_boot=args.bootstrap, alpha=alpha,
         stability_threshold=args.stability_threshold,
         max_level=args.max_level, seed=args.seed, corr=args.corr, mesh=mesh,
     )
-    dt = time.perf_counter() - t0
+    dt = _CLK.now() - t0
     freq = run.edge_freq[np.triu_indices(n, 1)]
     n_stable = len(run.stable_edges())
     print(f"[pc_run] bootstrap N={run.n_boot} threshold={run.stability_threshold}"
@@ -114,11 +117,11 @@ def _run_batch(args, n, m, d, alpha):
     res = batch_run(cs, m, alpha=alpha, max_level=max_level, n_prime=schedule,
                     mesh=mesh)
     jax.block_until_ready(res.adj)  # compile + first run
-    t0 = time.perf_counter()
+    t0 = _CLK.now()
     res = batch_run(cs, m, alpha=alpha, max_level=max_level, n_prime=schedule,
                     mesh=mesh)
     jax.block_until_ready(res.adj)
-    dt = time.perf_counter() - t0
+    dt = _CLK.now() - t0
     edges = np.asarray(res.adj).sum(axis=(1, 2)) // 2
     print(f"[pc_run] batch B={args.batch} max_level={max_level} widths={schedule}")
     print(f"  edges per graph: min={int(edges.min())} mean={edges.mean():.1f} "
@@ -240,7 +243,7 @@ def main():
         _run_bootstrap(args, x, n, m, d, alpha)
         return
 
-    t0 = time.perf_counter()
+    t0 = _CLK.now()
     if args.devices or args.mesh or args.shard_c or args.shard_sep:
         from repro.core.distributed import pc_distributed
         from repro.launch.mesh import make_pc_mesh
@@ -281,7 +284,7 @@ def main():
         run = pc(x, alpha=alpha, engine=args.engine, max_level=args.max_level,
                  corr=args.corr, bucket=not args.no_bucket,
                  pipeline_depth=args.pipeline_depth)
-    dt = time.perf_counter() - t0
+    dt = _CLK.now() - t0
 
     n_edges = int(run.adj.sum()) // 2
     n_directed = int((run.cpdag & ~run.cpdag.T).sum())

@@ -26,6 +26,10 @@ import time
 
 import numpy as np
 
+from repro.obs import MonotonicClock
+
+_CLK = MonotonicClock()  # the obs timing seam — no raw perf_counter (RPR003)
+
 
 def _stream(args):
     from repro.data.synthetic_dag import sample_gaussian_dag
@@ -116,10 +120,10 @@ def main():
         for _, r in reqs:
             if r.rid == "req-8":
                 r.timeout_s = 2.0
-    t0 = time.perf_counter()
+    t0 = _CLK.now()
     i = 0
     while i < len(reqs) or svc.queue.pending():
-        now = time.perf_counter() - t0
+        now = _CLK.now() - t0
         while i < len(reqs) and (reqs[i][0] <= now or args.faults):
             svc.submit(reqs[i][1])
             i += 1
@@ -134,7 +138,7 @@ def main():
                 time.sleep(1e-3)
         elif i < len(reqs):
             time.sleep(max(0.0, min(reqs[i][0] - now, 1e-3)))
-    total = time.perf_counter() - t0
+    total = _CLK.now() - t0
     rep = svc.report
 
     lats = rep.latencies()

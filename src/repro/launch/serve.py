@@ -6,13 +6,15 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS
 from repro.models import registry as R
+from repro.obs import MonotonicClock
+
+_CLK = MonotonicClock()  # the obs timing seam — no raw perf_counter (RPR003)
 
 
 def main():
@@ -45,20 +47,20 @@ def main():
     prefill = jax.jit(lambda p, b: api.prefill(p, b, t_max))
     decode = jax.jit(api.decode)
 
-    t0 = time.perf_counter()
+    t0 = _CLK.now()
     logits, cache = prefill(params, batch)
     jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    t_prefill = _CLK.now() - t0
 
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out_tokens = [tok]
-    t0 = time.perf_counter()
+    t0 = _CLK.now()
     for _ in range(args.gen - 1):
         logits, cache = decode(params, {"tokens": tok}, cache)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
         out_tokens.append(tok)
     jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
+    t_decode = _CLK.now() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
     toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)

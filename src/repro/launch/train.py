@@ -11,7 +11,6 @@ checkpoint on failure (``--inject-failure N`` demonstrates it).
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,10 @@ from repro.configs import ARCHS, TrainConfig
 from repro.data.lm_tokens import TokenPipeline
 from repro.distributed import Supervisor
 from repro.models import registry as R
+from repro.obs import MonotonicClock
 from repro.optim import adamw_init
+
+_CLK = MonotonicClock()  # the obs timing seam — no raw perf_counter (RPR003)
 
 
 def main():
@@ -67,9 +69,9 @@ def main():
         return (params, opt), metrics
 
     sup = Supervisor(CheckpointManager(args.ckpt), ckpt_every=args.ckpt_every)
-    t0 = time.perf_counter()
+    t0 = _CLK.now()
     res = sup.run((params, opt), step_fn, pipe.batch, args.steps)
-    dt = time.perf_counter() - t0
+    dt = _CLK.now() - t0
 
     losses = [float(m["loss"]) for m in res.metrics_history]
     for i in range(0, len(losses), args.log_every):
